@@ -1,0 +1,51 @@
+"""Paper Tables VIII/IX + Fig. 5 ablations.
+
+Claims checked:
+ - FedRF-TCA > plain FedAvg (no alignment) under explicit heterogeneity;
+ - dropping the Sigma*ell exchange (no-MMD ablation) loses accuracy;
+ - implicit heterogeneity (same distribution split across clients) is much
+   easier than explicit heterogeneity for both methods.
+"""
+from __future__ import annotations
+
+from benchmarks.common import da_suite, emit, timed
+from repro.baselines import fedavg_baseline
+from repro.data import make_implicit_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+
+CFG = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
+
+
+def _fedrf(sources, target, messages=True):
+    proto = ProtocolConfig(
+        n_rounds=120, t_c=25, warmup_rounds=150, lr=5e-3, seed=0,
+        exchange_messages=messages,
+    )
+    tr = FedRFTCATrainer(sources, target, CFG, proto)
+    return tr.train(eval_every=120)[-1]
+
+
+def run() -> None:
+    sources, target = da_suite()
+    acc_fedavg, t = timed(fedavg_baseline, sources, target, CFG, rounds=150, lr=5e-3)
+    emit("table8/fedavg", t, f"acc={acc_fedavg:.3f}")
+    acc_fedrf, t = timed(_fedrf, sources, target, True)
+    emit("table8/fedrf_tca", t, f"acc={acc_fedrf:.3f}")
+    acc_nomsg, t = timed(_fedrf, sources, target, False)
+    emit("fig5/no_sigma_ell", t, f"acc={acc_nomsg:.3f}")
+    emit(
+        "table8/claim_ordering", 0.0,
+        f"fedrf={acc_fedrf:.3f}>no_msg={acc_nomsg:.3f}~fedavg={acc_fedavg:.3f}",
+    )
+
+    imp = make_implicit_domains(5, 400, seed=3)
+    acc_imp, t = timed(_fedrf, imp[:4], imp[4], True)
+    emit("fig5/implicit_heterogeneity", t, f"acc={acc_imp:.3f}")
+    emit(
+        "fig5/claim_implicit_easier", 0.0,
+        f"implicit={acc_imp:.3f}>explicit={acc_fedrf:.3f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Pallas kernel micro-benchmarks: allclose vs oracle + wall time.
+
+NOTE: this container is CPU-only, so Pallas kernels execute in interpret mode
+— wall times here measure the *oracle XLA path* and interpret overhead, not
+TPU performance. TPU performance is assessed structurally in §Roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 512))
+    om = jax.random.normal(jax.random.fold_in(key, 1), (256, 64))
+    out, t_pal = timed(lambda: np.asarray(ops.rff(x, om, block=64)))
+    exp, t_ref = timed(lambda: np.asarray(ref.rff_ref(x, om)))
+    err = float(np.abs(out - exp).max())
+    emit("kernels/rff_interpret", t_pal, f"max_err={err:.2e},ref_us={t_ref:.0f}")
+
+    sig = jax.random.normal(key, (256, 512))
+    out, t_pal = timed(lambda: np.asarray(ops.centered_gram(sig, block=64)))
+    exp, t_ref = timed(lambda: np.asarray(ref.centered_gram_ref(sig)))
+    rel = float(np.abs(out - exp).max() / np.abs(exp).max())
+    emit("kernels/centered_gram_interpret", t_pal, f"rel_err={rel:.2e},ref_us={t_ref:.0f}")
+
+    q = jax.random.normal(key, (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 256, 64))
+    out, t_pal = timed(lambda: np.asarray(ops.flash_attention(q, k, v)))
+    exp, t_ref = timed(lambda: np.asarray(ref.attention_ref(q, k, v)))
+    err = float(np.abs(out - exp).max())
+    emit("kernels/flash_attention_interpret", t_pal, f"max_err={err:.2e},ref_us={t_ref:.0f}")
+
+
+if __name__ == "__main__":
+    run()

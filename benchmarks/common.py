@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: the synthetic DA suite + CSV emission.
+
+The container is offline, so the paper's Office/Digit-Five datasets are
+replaced by the seeded multi-domain generators in repro.data.domains; every
+benchmark states which paper table/figure it mirrors.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.data import make_domains
+
+
+def da_suite(n_domains=5, n=400, shift=1.2, seed=3):
+    """K-1 sources + 1 target with strong-but-identifiable shift."""
+    doms = make_domains(n_domains, n, shift=shift, seed=seed)
+    return doms[:-1], doms[-1]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV contract required by benchmarks.run: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON records
+produced by repro.launch.dryrun and repro.launch.roofline_sweep.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(pattern: str) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            rec = json.load(f)
+        rec["_opt"] = "_opt" in os.path.basename(p)
+        out.append(rec)
+    return out
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | kind | params | compile s | args/dev | temp/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        kinds = ",".join(
+            k.split("-")[1][:3] if "-" in k else k
+            for k, v in r["roofline"]["coll_by_kind"].items() if v > 0
+        ) or "-"
+        # memory_analysis is PER-DEVICE for the SPMD module
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {r['params_total']/1e9:.2f}B | {r['compile_s']} "
+            f"| {_fmt_bytes(r['memory']['argument_bytes'])} "
+            f"| {_fmt_bytes(r['memory']['temp_bytes'])} | {kinds} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/HLO | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rf = r["roofline"]
+        note = "OPTIMIZED" if r.get("_opt") else ""
+        if r["shape"] == "long_500k" and "mamba" not in r["arch"] and "zamba" not in r["arch"]:
+            note = (note + " window=4096").strip()
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.2f}ms "
+            f"| {rf['memory_s']*1e3:.2f}ms | {rf['collective_s']*1e3:.2f}ms "
+            f"| **{rf['dominant']}** | {r['useful_flops_ratio']:.2f} | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    dr = load("experiments/dryrun/*_16x16.json") + load("experiments/dryrun/*_2x16x16.json")
+    dr = [r for r in dr]
+    print("## §Dry-run (all arch x shape x mesh combos, full depth, scanned)\n")
+    print(dryrun_table(dr))
+    rl = load("experiments/roofline/*.json")
+    print("\n## §Roofline (single-pod, depth-extrapolated unrolled cost analysis)\n")
+    print(roofline_table(rl))
+
+
+if __name__ == "__main__":
+    main()

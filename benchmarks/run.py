@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measurement), plus a
+section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
+
+    PYTHONPATH=src python -m benchmarks.run            # all benches
+    PYTHONPATH=src python -m benchmarks.run --only fig3,table2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_ablation,
+    bench_accuracy,
+    bench_comm,
+    bench_gamma,
+    bench_hard_voting,
+    bench_kernels,
+    bench_laplace,
+    bench_rf_tca,
+    bench_robustness,
+    bench_theory,
+)
+
+BENCHES = {
+    "fig3": ("Fig.3 + Tables X-XIII: RF-TCA vs DA baselines", bench_rf_tca.run),
+    "theory": ("Thm.1/2 + Cor.1 validation", bench_theory.run),
+    "table2": ("Tables I/II: communication accounting", bench_comm.run),
+    "table3": ("Table III + Fig.4: drop/interval robustness", bench_robustness.run),
+    "table5": ("Tables IV-VI: federated DA leaderboard", bench_accuracy.run),
+    "table8": ("Tables VIII/IX + Fig.5: ablations", bench_ablation.run),
+    "appD": ("Appendix D: one-shot hard voting / asynchrony", bench_hard_voting.run),
+    "fig6": ("Fig.6/Remark 3: gamma sensitivity", bench_gamma.run),
+    "table14": ("App.D Tab.XIV/XV: Laplace vs Gaussian kernels", bench_laplace.run),
+    "kernels": ("Pallas kernels vs oracles", bench_kernels.run),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for key in selected:
+        title, fn = BENCHES[key]
+        print(f"# --- {key}: {title} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(key)
+            traceback.print_exc()
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(f"benches failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

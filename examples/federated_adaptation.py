@@ -1,0 +1,61 @@
+"""End-to-end FedRF-TCA driver (paper Algorithm 5) — the paper's kind of
+end-to-end run: multi-source federated domain adaptation over an unreliable
+network, with communication accounting.
+
+    PYTHONPATH=src python examples/federated_adaptation.py [--rounds 300]
+
+Four source clients + one unlabeled target client, shared-seed RFF compressor,
+FedAvg of W_RF every round and classifiers every T_C rounds, under message-drop
+setting (III) — the harshest of Table III.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+
+from repro.data import make_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.model import accuracy
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--warmup", type=int, default=150)
+    ap.add_argument("--setting", default="III", choices=["I", "II", "III"])
+    args = ap.parse_args()
+
+    doms = make_domains(5, 400, shift=1.2, seed=3)
+    sources, target = doms[:4], doms[4]
+    cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
+    proto = ProtocolConfig(
+        n_rounds=args.rounds, t_c=25, warmup_rounds=args.warmup, lr=5e-3,
+        drop_setting=args.setting, seed=0,
+    )
+    print(f"== FedRF-TCA: {len(sources)} sources -> 1 target, drop setting ({args.setting}) ==")
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    xt, yt = jnp.asarray(target.x), jnp.asarray(target.y)
+    warm = float(accuracy(tr.tgt_params, tr.omega, xt, yt))
+    print(f"after FedAvg warm-up ({args.warmup} rounds): target acc = {warm:.3f}")
+
+    for block in range(4):
+        n = args.rounds // 4
+        for t in range(1, n + 1):
+            tr.round(block * n + t)
+        acc = tr.evaluate()
+        per_round = tr.comm.total / tr.comm.rounds
+        print(
+            f"round {(block+1)*n:4d}: target acc = {acc:.3f} "
+            f"(uplink {per_round:,.0f} floats/round, "
+            f"{tr.comm.data_messages/tr.comm.rounds:,.0f} of which are Sigma-ell messages)"
+        )
+    final = tr.evaluate()
+    print(f"\nfinal target accuracy: {final:.3f} (warm-up was {warm:.3f})")
+    print("message size is 2N =", 2 * cfg.n_rff, "floats — independent of client data size.")
+    assert final > warm, "adaptation should improve on the warm-up transfer"
+
+
+if __name__ == "__main__":
+    main()

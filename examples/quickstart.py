@@ -1,0 +1,48 @@
+"""Quickstart: RF-TCA (paper Algorithm 1) on a synthetic domain-shift task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Fits the RFF-based transfer components between a source and a target domain,
+trains a classifier on aligned source features, and compares target accuracy
+against no adaptation — reproducing the paper's core single-machine claim.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.baselines import rf_tca_baseline, source_only, tca_baseline
+from repro.core.rf_tca import rf_tca
+from repro.data import make_domains, normalize_unit
+
+
+def main() -> None:
+    doms = make_domains(2, 400, shift=1.2, seed=7)
+    source, target = doms
+
+    print("== RF-TCA quickstart ==")
+    print(f"source: X{source.x.shape}, target: X{target.x.shape}\n")
+
+    # 1) low-level API: fit + transform (out-of-sample capable)
+    f_s, f_t, state = rf_tca(
+        normalize_unit(source.x), normalize_unit(target.x),
+        n_features=512, m=16, gamma=1e-3, sigma=1.0, seed=0,
+    )
+    print(f"aligned features: F_S {f_s.shape}, F_T {f_t.shape}")
+    print(f"top eigenvalues: {np.round(np.asarray(state.eigvals[:4]), 4)}")
+    print(f"client message size (2N): {2 * state.omega.shape[0]} floats\n")
+
+    # 2) end-to-end accuracy comparison
+    acc_none = source_only([source], target, seed=0)
+    acc_tca = tca_baseline([source], target, gamma=1e-3, m=16)
+    acc_rf = rf_tca_baseline([source], target, n_features=512, gamma=1e-3, m=16)
+    print(f"target accuracy, no adaptation : {acc_none:.3f}")
+    print(f"target accuracy, vanilla TCA   : {acc_tca:.3f}")
+    print(f"target accuracy, RF-TCA        : {acc_rf:.3f}")
+    assert acc_rf > acc_none, "RF-TCA should beat source-only under shift"
+    print("\nOK: RF-TCA recovers accuracy lost to domain shift.")
+
+
+if __name__ == "__main__":
+    main()

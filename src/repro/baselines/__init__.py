@@ -1,0 +1,10 @@
+from repro.baselines.classifiers import fit_logreg, fit_mlp, knn_1, score
+from repro.baselines.da_methods import (
+    coral_baseline,
+    dann_mmd_baseline,
+    fedavg_baseline,
+    jda_baseline,
+    rf_tca_baseline,
+    source_only,
+    tca_baseline,
+)

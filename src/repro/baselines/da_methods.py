@@ -1,0 +1,279 @@
+"""Every DA baseline the paper compares against that is reproducible offline:
+
+- source-only (no adaptation)
+- vanilla TCA / R-TCA / RF-TCA pipelines (transductive, kernel on raw features)
+- JDA-lite (joint marginal+conditional MMD with pseudo-label iterations)
+- CORAL (second-order statistics alignment)
+- DaNN (1-hidden-layer net with an MMD penalty on the hidden layer)
+- plain FedAvg (federated, no adaptation — the paper's Table VIII/IX ablation)
+
+All take columns-as-samples domains and return target accuracy with a shared
+classifier family, so numbers are comparable across methods.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.classifiers import fit_mlp, knn_1, score
+from repro.core.kernels_math import centering_matrix, ell_vector, gaussian_kernel
+from repro.core.rf_tca import rf_tca
+from repro.core.tca import r_tca, vanilla_tca
+from repro.data.domains import Domain
+from repro.federated.aggregation import fedavg_models
+from repro.federated.model import ClientConfig, accuracy, init_params, logits_of, make_omega, source_loss
+from repro.optim import adam, apply_updates
+
+
+def _concat(sources: list[Domain]) -> Domain:
+    return Domain(
+        "+".join(d.name for d in sources),
+        np.concatenate([d.x for d in sources], axis=1),
+        np.concatenate([d.y for d in sources]),
+    )
+
+
+def _unit(d: Domain) -> Domain:
+    """Unit-norm columns — the paper's preprocessing for all kernel methods."""
+    from repro.data.domains import normalize_unit
+
+    return Domain(d.name, normalize_unit(d.x), d.y)
+
+
+def source_only(sources: list[Domain], target: Domain, *, classifier="mlp", seed=0) -> float:
+    src = _concat(sources)
+    if classifier == "knn":
+        pred = knn_1(src.x.T, src.y)
+    else:
+        pred = fit_mlp(src.x.T, src.y, int(src.y.max()) + 1, seed=seed)
+    return score(pred, target.x.T, target.y)
+
+
+def _transductive_eval(feats_s, y_s, feats_t, y_t, classifier="mlp", seed=0) -> float:
+    n_classes = int(max(y_s.max(), y_t.max())) + 1
+    # standardise jointly: eigenvector-based features are O(1/sqrt(n)) scaled
+    mu = np.mean(np.concatenate([feats_s, feats_t]), axis=0, keepdims=True)
+    sd = np.std(np.concatenate([feats_s, feats_t]), axis=0, keepdims=True) + 1e-8
+    feats_s, feats_t = (feats_s - mu) / sd, (feats_t - mu) / sd
+    if classifier == "knn":
+        pred = knn_1(feats_s, y_s)
+    else:
+        pred = fit_mlp(feats_s, y_s, n_classes, seed=seed)
+    return score(pred, feats_t, y_t)
+
+
+def tca_baseline(
+    sources: list[Domain],
+    target: Domain,
+    *,
+    m: int = 32,
+    gamma: float = 1e-2,
+    sigma: float = 1.0,
+    variant: str = "vanilla",
+    classifier: str = "mlp",
+    seed: int = 0,
+) -> float:
+    """Vanilla TCA / R-TCA on the pooled kernel (transductive)."""
+    src = _unit(_concat(sources))
+    target = _unit(target)
+    x = jnp.asarray(np.concatenate([src.x, target.x], axis=1))
+    n_s = src.x.shape[1]
+    ell = ell_vector(n_s, target.x.shape[1])
+    k = gaussian_kernel(x, sigma)
+    solver = vanilla_tca if variant == "vanilla" else r_tca
+    feats = np.asarray(solver(k, ell, gamma, m).features)  # (m, n)
+    return _transductive_eval(
+        feats[:, :n_s].T, src.y, feats[:, n_s:].T, target.y, classifier, seed
+    )
+
+
+def rf_tca_baseline(
+    sources: list[Domain],
+    target: Domain,
+    *,
+    n_features: int = 512,
+    m: int = 32,
+    gamma: float = 1e-2,
+    sigma: float = 1.0,
+    classifier: str = "mlp",
+    seed: int = 0,
+) -> float:
+    """RF-TCA (Algorithm 1) pipeline — the paper's single-machine method."""
+    src = _unit(_concat(sources))
+    target = _unit(target)
+    f_s, f_t, _ = rf_tca(
+        jnp.asarray(src.x),
+        jnp.asarray(target.x),
+        n_features=n_features,
+        m=m,
+        gamma=gamma,
+        sigma=sigma,
+        seed=seed,
+    )
+    return _transductive_eval(np.asarray(f_s).T, src.y, np.asarray(f_t).T, target.y, classifier, seed)
+
+
+def coral_baseline(sources: list[Domain], target: Domain, *, classifier="mlp", seed=0) -> float:
+    """CORAL: recolor source features to the target second-order statistics."""
+    src = _concat(sources)
+    xs, xt = src.x.T, target.x.T  # rows-as-samples
+    cs = np.cov(xs, rowvar=False) + np.eye(xs.shape[1])
+    ct = np.cov(xt, rowvar=False) + np.eye(xt.shape[1])
+
+    def inv_sqrt(c):
+        w, v = np.linalg.eigh(c)
+        return v @ np.diag(w ** -0.5) @ v.T
+
+    def sqrt(c):
+        w, v = np.linalg.eigh(c)
+        return v @ np.diag(w ** 0.5) @ v.T
+
+    xs_al = xs @ inv_sqrt(cs) @ sqrt(ct)
+    return _transductive_eval(xs_al, src.y, xt, target.y, classifier, seed)
+
+
+def jda_baseline(
+    sources: list[Domain],
+    target: Domain,
+    *,
+    m: int = 32,
+    gamma: float = 1e-2,
+    sigma: float = 1.0,
+    iters: int = 3,
+    seed: int = 0,
+) -> float:
+    """JDA-lite: marginal + class-conditional MMD, pseudo-label refinement.
+
+    Solves  K H K w = lam (gamma I + K M K) w  with
+    M = M_0 + sum_c M_c (Long et al. 2013), via Cholesky whitening.
+    """
+    src = _unit(_concat(sources))
+    target = _unit(target)
+    n_s, n_t = src.x.shape[1], target.x.shape[1]
+    n = n_s + n_t
+    n_classes = int(src.y.max()) + 1
+    x = jnp.asarray(np.concatenate([src.x, target.x], axis=1))
+    k = np.asarray(gaussian_kernel(x, sigma))
+    h = np.asarray(centering_matrix(n))
+    khk = k @ h @ k
+    y_t_pseudo = None
+    acc = 0.0
+    for it in range(iters):
+        m0 = np.zeros((n, n))
+        ell = np.asarray(ell_vector(n_s, n_t))
+        m0 += np.outer(ell, ell)
+        if y_t_pseudo is not None:
+            for c in range(n_classes):
+                e = np.zeros(n)
+                s_idx = np.where(src.y == c)[0]
+                t_idx = n_s + np.where(y_t_pseudo == c)[0]
+                if len(s_idx) == 0 or len(t_idx) == 0:
+                    continue
+                e[s_idx] = 1.0 / len(s_idx)
+                e[t_idx] = -1.0 / len(t_idx)
+                m0 += np.outer(e, e)
+        b = gamma * np.eye(n) + k @ m0 @ k
+        l = np.linalg.cholesky(b + 1e-8 * np.eye(n))
+        c_mat = np.linalg.solve(l, np.linalg.solve(l, khk).T).T
+        c_mat = 0.5 * (c_mat + c_mat.T)
+        w, v = np.linalg.eigh(c_mat)
+        vecs = np.linalg.solve(l.T, v[:, ::-1][:, :m])
+        feats = (vecs.T @ k)  # (m, n)
+        pred = knn_1(feats[:, :n_s].T, src.y)
+        y_t_pseudo = pred(feats[:, n_s:].T)
+        acc = float(np.mean(y_t_pseudo == target.y))
+    return acc
+
+
+def dann_mmd_baseline(
+    sources: list[Domain],
+    target: Domain,
+    *,
+    hidden: int = 64,
+    lam: float = 1.0,
+    steps: int = 400,
+    lr: float = 5e-3,
+    seed: int = 0,
+) -> float:
+    """DaNN (Ghifary et al. 2014): 1-hidden-layer net + MMD penalty on hidden."""
+    src = _concat(sources)
+    n_classes = int(src.y.max()) + 1
+    xs = jnp.asarray(src.x.T, jnp.float32)
+    ys = jnp.asarray(src.y)
+    xt = jnp.asarray(target.x.T, jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": jax.random.normal(k1, (xs.shape[1], hidden)) * jnp.sqrt(2.0 / xs.shape[1]),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, n_classes)) / jnp.sqrt(hidden),
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+    def hid(p, xx):
+        return jnp.tanh(xx @ p["w1"] + p["b1"])
+
+    def loss(p):
+        hs, ht = hid(p, xs), hid(p, xt)
+        logits = hs @ p["w2"] + p["b2"]
+        oh = jax.nn.one_hot(ys, n_classes)
+        ce = -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), axis=-1))
+        gap = jnp.mean(hs, axis=0) - jnp.mean(ht, axis=0)  # linear-kernel MMD
+        return ce + lam * gap @ gap
+
+    opt = adam(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(loss)(p)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    logits_t = hid(params, xt) @ params["w2"] + params["b2"]
+    return float(np.mean(np.asarray(jnp.argmax(logits_t, -1)) == target.y))
+
+
+def fedavg_baseline(
+    sources: list[Domain],
+    target: Domain,
+    cfg: ClientConfig,
+    *,
+    rounds: int = 200,
+    local_steps: int = 1,
+    batch_size: int = 64,
+    lr: float = 1e-2,
+    seed: int = 0,
+) -> float:
+    """Plain FedAvg: identical client model, no message exchange, no MMD —
+    the paper's 'ResNet updated using FedAvg' ablation row (Tables VIII/IX)."""
+    from repro.data.domains import batches
+
+    omega = make_omega(cfg)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(sources))
+    params = [init_params(cfg, keys[i]) for i in range(len(sources))]
+    opt = adam(lr)
+    opts = [opt.init(p) for p in params]
+    iters = [batches(d.x, d.y, batch_size, seed=seed + i) for i, d in enumerate(sources)]
+
+    @jax.jit
+    def local(p, s, x, y):
+        zero = jnp.zeros((2 * cfg.n_rff,))
+        (_, aux), g = jax.value_and_grad(
+            lambda pp: source_loss(pp, omega, x, y, zero, cfg, with_mmd=False), has_aux=True
+        )(p)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    for _ in range(rounds):
+        for i in range(len(sources)):
+            for _ in range(local_steps):
+                x, y = next(iters[i])
+                params[i], opts[i] = local(params[i], opts[i], jnp.asarray(x), jnp.asarray(y))
+        avg = fedavg_models(params)
+        params = [avg for _ in sources]
+    return float(accuracy(params[0], omega, jnp.asarray(target.x), jnp.asarray(target.y)))

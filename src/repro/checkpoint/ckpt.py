@@ -1,0 +1,80 @@
+"""Minimal dependable pytree checkpointing: npz payload + json treedef.
+
+Handles arbitrary nested dict/list/tuple/NamedTuple pytrees of jnp/np arrays and
+python scalars. Atomic via write-to-temp + rename. Keeps ``keep`` most recent
+steps (production habit: bounded disk).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp) for kp, _ in leaves_with_paths]
+    leaves = [v for _, v in leaves_with_paths]
+    return paths, leaves
+
+
+def save(path: str, tree, step: int | None = None, keep: int = 3) -> str:
+    """Save pytree. If ``step`` given, writes ``<path>/step_<step>.npz``."""
+    if step is not None:
+        os.makedirs(path, exist_ok=True)
+        target = os.path.join(path, f"step_{step:08d}.npz")
+    else:
+        os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+        target = path if path.endswith(".npz") else path + ".npz"
+    paths, leaves = _flatten_with_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    payload = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    payload["__paths__"] = np.array(json.dumps(paths))
+    payload["__treedef__"] = np.array(str(treedef))
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(target)), suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **payload)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, target)
+    if step is not None and keep:
+        _gc(path, keep)
+    return target
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if os.path.isdir(path):
+        path = latest(path)
+        if path is None:
+            raise FileNotFoundError("no checkpoints in directory")
+    data = np.load(path, allow_pickle=False)
+    leaves_like = jax.tree_util.tree_leaves(like)
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != expected {np.shape(ref)}")
+        leaves.append(arr.astype(np.asarray(ref).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest(ckpt_dir: str) -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    files = sorted(f for f in os.listdir(ckpt_dir) if re.match(r"step_\d+\.npz$", f))
+    return os.path.join(ckpt_dir, files[-1]) if files else None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    f = latest(ckpt_dir)
+    return int(re.search(r"step_(\d+)", f).group(1)) if f else None
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    files = sorted(f for f in os.listdir(ckpt_dir) if re.match(r"step_\d+\.npz$", f))
+    for f in files[:-keep]:
+        os.remove(os.path.join(ckpt_dir, f))

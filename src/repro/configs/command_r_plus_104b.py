@@ -1,0 +1,16 @@
+"""command-r-plus-104b [dense]: 64L, d_model=12288, 96H (GQA kv=8),
+d_ff=33792, vocab=256000, no biases [hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    source="Command-R+ [hf:CohereForAI/c4ai-command-r-v01]",
+)

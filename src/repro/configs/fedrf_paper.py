@@ -1,0 +1,24 @@
+"""The paper's own pipeline config (FedRF-TCA, Fig. 1): MLP feature extractor
++ RFF compressor + W_RF aligner + classifier, multi-source federated protocol.
+
+This is the configuration the repro benchmarks (benchmarks/) run; the LM
+backbones above integrate the same head via ModelConfig.fda_* fields.
+"""
+from repro.federated.model import ClientConfig
+from repro.federated.protocol import ProtocolConfig
+
+CLIENT = ClientConfig(
+    input_dim=16,
+    n_classes=5,
+    extractor_widths=(64, 32),
+    n_rff=512,  # N: messages are 2N = 1024 floats (paper uses N=1000)
+    m=32,
+    lambda_mmd=2.0,
+)
+
+PROTOCOL: ProtocolConfig = ProtocolConfig(
+    n_rounds=300,
+    t_c=50,
+    warmup_rounds=200,
+    lr=5e-3,
+)

@@ -1,0 +1,12 @@
+"""Core paper contribution: RFF, TCA variants, RF-TCA, decomposable MMD."""
+from repro.core.kernels_math import (
+    centering_matrix,
+    ell_vector,
+    gaussian_kernel,
+    intrinsic_dim,
+    laplace_kernel,
+)
+from repro.core.mmd import message, mmd_projected, mmd_projected_multi, mmd_rff, mmd_rkhs
+from repro.core.rf_tca import RFTCAState, rf_tca, rf_tca_fit, rf_tca_transform, solve_w_rf
+from repro.core.rff import draw_omega, rff_features, rff_features_rows, rff_message
+from repro.core.tca import TCAResult, r_tca, vanilla_tca

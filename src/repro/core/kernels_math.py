@@ -1,0 +1,52 @@
+"""Exact kernel matrices + spectral utilities (oracles for the RFF approximation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x: jnp.ndarray, y: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Squared Euclidean distances between columns of x (p,n) and y (p,m)."""
+    if y is None:
+        y = x
+    xx = jnp.sum(x * x, axis=0)
+    yy = jnp.sum(y * y, axis=0)
+    cross = x.T @ y
+    d = xx[:, None] + yy[None, :] - 2.0 * cross
+    return jnp.maximum(d, 0.0)
+
+
+def gaussian_kernel(x: jnp.ndarray, sigma: float = 1.0, y: jnp.ndarray | None = None) -> jnp.ndarray:
+    """K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)), columns-as-samples."""
+    return jnp.exp(-pairwise_sq_dists(x, y) / (2.0 * sigma**2))
+
+
+def laplace_kernel(x: jnp.ndarray, sigma: float = 1.0, y: jnp.ndarray | None = None) -> jnp.ndarray:
+    """K_ij = exp(-||x_i - x_j||_2 / sigma) (the RFF-Cauchy counterpart)."""
+    return jnp.exp(-jnp.sqrt(pairwise_sq_dists(x, y) + 1e-12) / sigma)
+
+
+def intrinsic_dim(k: jnp.ndarray) -> jnp.ndarray:
+    """dim(K) = tr(K) / ||K||_2 — controls the number of RFFs in Theorem 1/2."""
+    top = jnp.linalg.eigvalsh(k)[-1]
+    return jnp.trace(k) / top
+
+
+def centering_matrix(n: int) -> jnp.ndarray:
+    """H = I_n - 1 1^T / n."""
+    return jnp.eye(n) - jnp.ones((n, n)) / n
+
+
+def median_sigma(x: jnp.ndarray, max_n: int = 512) -> float:
+    """Median-heuristic Gaussian bandwidth: sigma = sqrt(median ||xi-xj||^2 / 2)."""
+    if x.shape[1] > max_n:
+        x = x[:, :: x.shape[1] // max_n + 1]
+    d = pairwise_sq_dists(x)
+    off = d[jnp.triu_indices(d.shape[0], k=1)]
+    return float(jnp.sqrt(jnp.median(off) / 2.0) + 1e-12)
+
+
+def ell_vector(n_s: int, n_t: int) -> jnp.ndarray:
+    """Paper eq. (2): ell_i = 1/n_S for source columns, -1/n_T for target columns."""
+    return jnp.concatenate(
+        [jnp.full((n_s,), 1.0 / n_s), jnp.full((n_t,), -1.0 / n_t)]
+    )

@@ -1,0 +1,44 @@
+"""MMD losses: exact RKHS form, RFF form, and the paper's decomposable eq. (11).
+
+The decomposition is the communication-efficiency enabler: the loss between a
+source/target pair only needs the two 2N-vectors  msg_S = Sigma_S l_S  and
+msg_T = Sigma_T l_T,  never the raw features.  In the distributed data plane the
+sum of per-client messages is a single small all-reduce.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mmd_rkhs(k: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
+    """Biased squared MMD in the RKHS of kernel K:  l^T K l."""
+    return ell @ (k @ ell)
+
+
+def mmd_rff(sigma: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
+    """RFF estimate:  ||Sigma l||^2  =  l^T Sigma^T Sigma l."""
+    msg = sigma @ ell
+    return msg @ msg
+
+
+def message(sigma: jnp.ndarray, sign: float, n: int | None = None) -> jnp.ndarray:
+    """Client message  Sigma l  with l = sign * 1/n (eq. 2).  sigma: (2N, n)."""
+    if n is None:
+        n = sigma.shape[1]
+    return sign * jnp.sum(sigma, axis=1) / n
+
+
+def mmd_projected(w_rf: jnp.ndarray, msg_s: jnp.ndarray, msg_t: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (11):  (msg_S + msg_T)^T W W^T (msg_S + msg_T) = ||W^T (msg_S+msg_T)||^2.
+
+    Differentiable in w_rf and (through the messages) in the feature extractors;
+    this is the loss backpropagated by Algorithms 2/3.
+    """
+    v = w_rf.T @ (msg_s + msg_t)
+    return v @ v
+
+
+def mmd_projected_multi(w_rf: jnp.ndarray, msgs_s: jnp.ndarray, msg_t: jnp.ndarray) -> jnp.ndarray:
+    """Mean of per-pair losses over K source messages msgs_s (K, 2N)."""
+    v = (msgs_s + msg_t[None, :]) @ w_rf  # (K, m)
+    return jnp.mean(jnp.sum(v * v, axis=1))

@@ -1,0 +1,102 @@
+"""RF-TCA (paper Algorithm 1, Section III).
+
+Finds ``W_RF in R^{2N x m}`` as the top-m eigenvectors of
+
+    (Sigma l l^T Sigma^T + gamma I_2N)^{-1} Sigma H Sigma^T,                (7)
+
+a 2N x 2N problem instead of vanilla TCA's n x n one.  We solve the *symmetric
+definite generalized* eigenproblem
+
+    G_H w = lambda (gamma I + u u^T) w,     G_H = Sigma H Sigma^T,  u = Sigma l,
+
+via Cholesky whitening, which is numerically cleaner than the non-symmetric
+Sherman–Morrison product and mathematically identical.
+
+Unlike vanilla TCA (transductive), RF-TCA yields an *out-of-sample* map:
+``transform(X_new) = W_RF^T Sigma(X_new)`` — this is what FedRF-TCA exploits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_math import ell_vector
+from repro.core.rff import draw_omega, rff_features
+
+
+class RFTCAState(NamedTuple):
+    omega: jnp.ndarray  # (N, p) shared-seed frequency matrix
+    w_rf: jnp.ndarray  # (2N, m) aligner
+    eigvals: jnp.ndarray  # (m,)
+
+
+def solve_w_rf(
+    sigma: jnp.ndarray, ell: jnp.ndarray, gamma: float, m: int, *, use_kernel: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m solution of (7) given the RFF matrix Sigma (2N, n).
+
+    Returns (w_rf (2N, m), eigvals (m,)).
+    """
+    two_n = sigma.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        g_h = kops.centered_gram(sigma)
+    else:
+        mu = jnp.mean(sigma, axis=1, keepdims=True)
+        s_c = sigma - mu
+        g_h = s_c @ s_c.T  # Sigma H Sigma^T  (H idempotent: SH(SH)^T = S H S^T)
+    g_h = 0.5 * (g_h + g_h.T)
+    u = sigma @ ell  # (2N,)
+
+    # B = gamma I + u u^T ;  Cholesky of a rank-one update computed directly.
+    b = gamma * jnp.eye(two_n) + jnp.outer(u, u)
+    l = jnp.linalg.cholesky(b)
+    # C = L^{-1} G_H L^{-T}
+    li_g = jax.scipy.linalg.solve_triangular(l, g_h, lower=True)
+    c = jax.scipy.linalg.solve_triangular(l, li_g.T, lower=True).T
+    c = 0.5 * (c + c.T)
+    vals, vecs = jnp.linalg.eigh(c)
+    vals = vals[::-1][:m]
+    vecs = vecs[:, ::-1][:, :m]
+    w_rf = jax.scipy.linalg.solve_triangular(l.T, vecs, lower=False)
+    return w_rf, vals
+
+
+def rf_tca_fit(
+    x_s: jnp.ndarray,
+    x_t: jnp.ndarray,
+    *,
+    n_features: int,
+    m: int,
+    gamma: float = 1.0,
+    sigma: float = 1.0,
+    seed: int = 0,
+    kernel: str = "gauss",
+    use_pallas: bool = False,
+) -> RFTCAState:
+    """Algorithm 1: fit W_RF on source (p, n_S) and target (p, n_T) data."""
+    p = x_s.shape[0]
+    omega = draw_omega(seed, n_features, p, sigma=sigma, kernel=kernel)
+    x = jnp.concatenate([x_s, x_t], axis=1)
+    sig = rff_features(x, omega, use_kernel=use_pallas)
+    ell = ell_vector(x_s.shape[1], x_t.shape[1])
+    w_rf, vals = solve_w_rf(sig, ell, gamma, m, use_kernel=use_pallas)
+    return RFTCAState(omega=omega, w_rf=w_rf, eigvals=vals)
+
+
+def rf_tca_transform(state: RFTCAState, x: jnp.ndarray) -> jnp.ndarray:
+    """F = W_RF^T Sigma(X) in R^{m x n} — works on unseen data (out-of-sample)."""
+    return state.w_rf.T @ rff_features(x, state.omega)
+
+
+def rf_tca(
+    x_s: jnp.ndarray, x_t: jnp.ndarray, **kw
+) -> tuple[jnp.ndarray, jnp.ndarray, RFTCAState]:
+    """Convenience: fit then return (F_S (m,n_S), F_T (m,n_T), state)."""
+    state = rf_tca_fit(x_s, x_t, **kw)
+    f_s = rf_tca_transform(state, x_s)
+    f_t = rf_tca_transform(state, x_t)
+    return f_s, f_t, state

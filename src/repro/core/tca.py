@@ -1,0 +1,73 @@
+"""Vanilla TCA and R-TCA (paper Section II-B / III-B).
+
+Vanilla TCA solves
+
+    min_W  tr(W^T K ll^T K W) + gamma tr(W^T W)   s.t.  W^T K H K W = I_m,
+
+whose transformed features ``H K W`` span the top-m eigenspace of (Lemma 1)
+
+    A = H ( K^2 - K^2 ll^T K^2 / (gamma + l^T K^2 l) ) H.
+
+R-TCA penalises ``tr(W^T K W)`` instead, giving (eq. 22)
+
+    A_R = (1/gamma) H ( K - K ll^T K / (gamma + l^T K l) ) H.
+
+Both are implemented with the Sherman–Morrison rank-one form — no n x n inverse.
+The aligned representations are the top-m eigenvectors (rows = samples), matching
+the paper's ``W^T K in R^{m x n}`` convention when transposed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.kernels_math import centering_matrix
+
+
+class TCAResult(NamedTuple):
+    features: jnp.ndarray  # (m, n) aligned features, columns are samples
+    eigvals: jnp.ndarray  # (m,) corresponding eigenvalues, descending
+
+
+def _top_m_eigh(a: jnp.ndarray, m: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m eigenpairs of a symmetric matrix, eigenvalues descending."""
+    vals, vecs = jnp.linalg.eigh(a)  # ascending
+    return vals[::-1][:m], vecs[:, ::-1][:, :m]
+
+
+def vanilla_tca(k: jnp.ndarray, ell: jnp.ndarray, gamma: float, m: int) -> TCAResult:
+    """Lemma-1 symmetric form of vanilla TCA on a precomputed kernel matrix."""
+    n = k.shape[0]
+    h = centering_matrix(n)
+    k2 = k @ k
+    u = k2 @ ell  # K^2 l
+    denom = gamma + ell @ u
+    a = k2 - jnp.outer(u, u) / denom
+    a = h @ a @ h
+    a = 0.5 * (a + a.T)
+    vals, vecs = _top_m_eigh(a, m)
+    return TCAResult(features=vecs.T, eigvals=vals)
+
+
+def r_tca(k: jnp.ndarray, ell: jnp.ndarray, gamma: float, m: int) -> TCAResult:
+    """R-TCA (RKHS-norm regularisation), eq. (22)."""
+    n = k.shape[0]
+    h = centering_matrix(n)
+    u = k @ ell
+    denom = gamma + ell @ u
+    a = k - jnp.outer(u, u) / denom
+    a = (h @ a @ h) / gamma
+    a = 0.5 * (a + a.T)
+    vals, vecs = _top_m_eigh(a, m)
+    return TCAResult(features=vecs.T, eigvals=vals)
+
+
+def r_tca_matrix(k: jnp.ndarray, ell: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """A_R itself (used by the Theorem-1 validation benchmark)."""
+    n = k.shape[0]
+    h = centering_matrix(n)
+    u = k @ ell
+    a = (k - jnp.outer(u, u) / (gamma + ell @ u)) / gamma
+    a = h @ a @ h
+    return 0.5 * (a + a.T)

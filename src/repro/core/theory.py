@@ -1,0 +1,70 @@
+"""Empirical validation helpers for Theorem 1 / Theorem 2 / Corollary 1."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.kernels_math import centering_matrix, gaussian_kernel, intrinsic_dim
+from repro.core.rff import draw_omega, rff_features
+from repro.core.tca import r_tca_matrix
+
+
+def kernel_approx_error(x: jnp.ndarray, n_features: int, sigma: float, seed: int) -> float:
+    """Relative spectral error  ||Sigma^T Sigma - K|| / ||K||  (Theorem 2 LHS)."""
+    k = gaussian_kernel(x, sigma)
+    omega = draw_omega(seed, n_features, x.shape[0], sigma=sigma)
+    s = rff_features(x, omega)
+    diff = s.T @ s - k
+    return float(jnp.linalg.norm(diff, 2) / jnp.linalg.norm(k, 2))
+
+
+def corollary1_error(
+    x: jnp.ndarray, ell: jnp.ndarray, gamma: float, n_features: int, sigma: float, seed: int
+) -> float:
+    """Relative spectral error between the rank-one-corrected matrices (Cor. 1)."""
+    k = gaussian_kernel(x, sigma)
+    omega = draw_omega(seed, n_features, x.shape[0], sigma=sigma)
+    s = rff_features(x, omega)
+    k_hat = s.T @ s
+
+    def corrected(km):
+        u = km @ ell
+        return km - jnp.outer(u, u) / (gamma + ell @ u)
+
+    err = jnp.linalg.norm(corrected(k) - corrected(k_hat), 2)
+    return float(err / jnp.linalg.norm(k, 2))
+
+
+def theorem1_feature_error(
+    x: jnp.ndarray, ell: jnp.ndarray, gamma: float, m: int, n_features: int, sigma: float, seed: int
+) -> float:
+    """|| H Sigma^T W_RF - H K W_R ||_F with sign-aligned eigenvectors (Thm 1 LHS).
+
+    Both sides are computed as the top-m eigenvectors of A_RF and A_R (eqs. 22-24);
+    eigenvector sign ambiguity is resolved by aligning to positive inner product.
+    """
+    n = x.shape[1]
+    h = centering_matrix(n)
+    k = gaussian_kernel(x, sigma)
+    a_r = r_tca_matrix(k, ell, gamma)
+
+    omega = draw_omega(seed, n_features, x.shape[0], sigma=sigma)
+    s = rff_features(x, omega)
+    k_hat = s.T @ s
+    a_rf = r_tca_matrix(k_hat, ell, gamma)
+
+    def top(a):
+        vals, vecs = jnp.linalg.eigh(a)
+        return vecs[:, ::-1][:, :m]
+
+    u_r, u_rf = top(a_r), top(a_rf)
+    # sign alignment per eigenvector
+    signs = jnp.sign(jnp.sum(u_r * u_rf, axis=0))
+    signs = jnp.where(signs == 0, 1.0, signs)
+    return float(jnp.linalg.norm(h @ (u_rf * signs[None, :] - u_r), "fro"))
+
+
+def required_features(x: jnp.ndarray, sigma: float, eps: float) -> float:
+    """Theorem-1 sufficient N (up to the constant):  dim(K) log(n) / eps^2."""
+    k = gaussian_kernel(x, sigma)
+    n = x.shape[1]
+    return float(intrinsic_dim(k) * jnp.log(n) / eps**2)

@@ -1,0 +1,9 @@
+from repro.data.domains import (
+    Domain,
+    batches,
+    make_domains,
+    make_implicit_domains,
+    normalize_unit,
+    train_test_split,
+)
+from repro.data.lm import TokenStream

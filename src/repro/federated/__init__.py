@@ -1,0 +1,13 @@
+from repro.federated.aggregation import fedavg_classifier, fedavg_models, fedavg_w_rf, hard_vote
+from repro.federated.model import (
+    ClientConfig,
+    accuracy,
+    client_message,
+    init_params,
+    logits_of,
+    make_omega,
+    source_loss,
+    target_loss,
+)
+from repro.federated.network import LossyChannel, RoundPlan, plan_round, sample_participants
+from repro.federated.protocol import CommLog, FedRFTCATrainer, ProtocolConfig

@@ -1,0 +1,49 @@
+"""Global parameter aggregation (paper Algorithm 4) + one-shot hard voting (App. D)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.utils.tree import tree_mean, tree_weighted_mean
+
+
+def fedavg_w_rf(source_params: list, target_params, participating: list[int]):
+    """Average W_RF over the participating sources + the target (Alg. 4 line 3),
+    assign back to everyone in S_t and the target (Alg. 5 line 15)."""
+    members = [source_params[i]["w_rf"] for i in participating] + [target_params["w_rf"]]
+    return tree_mean(members)
+
+
+def fedavg_classifier(source_params: list, participating: list[int]):
+    """Average classifiers over S_t (Alg. 4 line 5) — only every T_C rounds."""
+    if not participating:
+        return None
+    return tree_mean([source_params[i]["classifier"] for i in participating])
+
+
+def fedavg_models(param_list: list, weights=None):
+    """Plain FedAvg over whole models (the paper's FedAvg baseline, Table II)."""
+    if weights is None:
+        return tree_mean(param_list)
+    return tree_weighted_mean(param_list, weights)
+
+
+def hard_vote(per_source_logits: np.ndarray) -> np.ndarray:
+    """One-shot hard voting over K source classifiers (App. D, settings IV/V).
+
+    per_source_logits: (K, n, classes) -> (n,) majority-vote predictions,
+    ties broken by summed logits.
+    """
+    preds = np.argmax(per_source_logits, axis=-1)  # (K, n)
+    k, n = preds.shape
+    n_classes = per_source_logits.shape[-1]
+    votes = np.zeros((n, n_classes), dtype=np.int64)
+    for i in range(k):
+        votes[np.arange(n), preds[i]] += 1
+    best = votes.max(axis=1, keepdims=True)
+    tie = (votes == best).sum(axis=1) > 1
+    out = votes.argmax(axis=1)
+    if tie.any():
+        summed = per_source_logits.sum(axis=0)  # (n, classes)
+        masked = np.where(votes == best, summed, -np.inf)
+        out = np.where(tie, masked.argmax(axis=1), out)
+    return out

@@ -1,0 +1,248 @@
+"""FedRF-TCA training protocol (paper Algorithm 5).
+
+Host-side simulator of the full multi-client system: K source clients + 1
+target client, per-round client sampling S_t, the three message-drop settings
+of Table III, T_C-interval classifier aggregation, communication accounting,
+and the one-shot hard-voting variant of Appendix D.
+
+The per-client local updates are jit-compiled pure functions from
+``repro.federated.model``; the protocol (who talks to whom, what gets dropped)
+is deliberately host-side Python — that is the part XLA cannot express and the
+paper's robustness claims are about.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.domains import Domain, batches
+from repro.federated import aggregation, network
+from repro.federated.model import (
+    ClientConfig,
+    accuracy,
+    client_message,
+    init_params,
+    logits_of,
+    make_omega,
+    rff_of,
+    source_loss,
+    target_loss,
+)
+from repro.optim import adam, apply_updates
+
+
+@dataclass
+class ProtocolConfig:
+    n_rounds: int = 200
+    t_c: int = 50  # classifier aggregation interval T_C
+    local_steps: int = 1
+    batch_size: int = 64
+    message_batch_size: int = 256  # messages are cheap (2N floats): use more data
+    lr: float = 1e-2
+    drop_setting: str = "I"  # Table III: "I" | "II" | "III"
+    aggregate_w_rf: bool = True
+    aggregate_classifier: bool = True  # False => one-shot hard voting at eval
+    exchange_messages: bool = True  # False => ablation "without Sigma ell" (Fig. 5)
+    # The paper fine-tunes a *pretrained* extractor (ResNet-50). Offline we
+    # emulate pretraining with a FedAvg warm-up phase over the source clients
+    # (CE only, whole-model aggregation) before the adaptation phase starts.
+    warmup_rounds: int = 100
+    seed: int = 0
+
+
+@dataclass
+class CommLog:
+    """Uploaded floats, by payload type (Table I / II accounting)."""
+
+    data_messages: int = 0  # Sigma ell vectors
+    w_rf: int = 0
+    classifier: int = 0
+    rounds: int = 0
+    history: list = field(default_factory=list)
+
+    @property
+    def total(self) -> int:
+        return self.data_messages + self.w_rf + self.classifier
+
+
+class FedRFTCATrainer:
+    def __init__(
+        self,
+        sources: list[Domain],
+        target: Domain,
+        cfg: ClientConfig,
+        proto: ProtocolConfig,
+    ):
+        self.sources, self.target = sources, target
+        self.cfg, self.proto = cfg, proto
+        self.k = len(sources)
+        self.omega = make_omega(cfg)
+        # Paper Fig. 1: every client fine-tunes the SAME pretrained extractor,
+        # so all clients share one initialisation (they diverge during training).
+        key = jax.random.PRNGKey(proto.seed)
+        shared = init_params(cfg, key)
+        self.src_params = [jax.tree_util.tree_map(jnp.copy, shared) for _ in range(self.k)]
+        self.tgt_params = jax.tree_util.tree_map(jnp.copy, shared)
+        self.opt = adam(proto.lr)
+        self.src_opt = [self.opt.init(p) for p in self.src_params]
+        self.tgt_opt = self.opt.init(self.tgt_params)
+        self.rng = np.random.default_rng(proto.seed)
+        self.src_iters = [
+            batches(d.x, d.y, proto.batch_size, seed=proto.seed + i)
+            for i, d in enumerate(sources)
+        ]
+        self.tgt_iter = batches(target.x, target.y, proto.batch_size, seed=proto.seed + 777)
+        self.comm = CommLog()
+        self._build_steps()
+        self._msg_iters = [
+            batches(d.x, d.y, min(proto.message_batch_size, d.x.shape[1]), seed=proto.seed + 500 + i)
+            for i, d in enumerate(sources)
+        ]
+        self._tgt_msg_iter = batches(
+            target.x, target.y, min(proto.message_batch_size, target.x.shape[1]), seed=proto.seed + 999
+        )
+        if proto.warmup_rounds:
+            self._warmup(proto.warmup_rounds)
+
+    def _warmup(self, rounds: int) -> None:
+        """Emulated pretraining: FedAvg (CE only, whole model) over sources."""
+        for _ in range(rounds):
+            for i in range(self.k):
+                for _ in range(self.proto.local_steps):
+                    x, y = next(self.src_iters[i])
+                    self.src_params[i], self.src_opt[i], _ = self._src_step_plain(
+                        self.src_params[i], self.src_opt[i], jnp.asarray(x), jnp.asarray(y)
+                    )
+            avg = aggregation.fedavg_models(self.src_params)
+            self.src_params = [jax.tree_util.tree_map(jnp.copy, avg) for _ in range(self.k)]
+        self.tgt_params = jax.tree_util.tree_map(jnp.copy, avg)
+
+    # ---- jitted local updates ------------------------------------------------
+    def _build_steps(self):
+        cfg, omega = self.cfg, self.omega
+
+        @jax.jit
+        def src_step_mmd(params, opt_state, x, y, tgt_msg):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: source_loss(p, omega, x, y, tgt_msg, cfg, with_mmd=True),
+                has_aux=True,
+            )(params)
+            upd, opt_state = self.opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, aux
+
+        @jax.jit
+        def src_step_plain(params, opt_state, x, y):
+            zero = jnp.zeros((2 * cfg.n_rff,))
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: source_loss(p, omega, x, y, zero, cfg, with_mmd=False),
+                has_aux=True,
+            )(params)
+            upd, opt_state = self.opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, aux
+
+        @jax.jit
+        def tgt_step(params, opt_state, x, src_msgs):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: target_loss(p, omega, x, src_msgs, cfg), has_aux=True
+            )(params)
+            upd, opt_state = self.opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, aux
+
+        @jax.jit
+        def msg_of(params, x, sign):
+            return client_message(params, omega, x, sign)
+
+        self._src_step_mmd, self._src_step_plain = src_step_mmd, src_step_plain
+        self._tgt_step, self._msg_of = tgt_step, msg_of
+
+    # ---- one communication round (Alg. 5 body) -------------------------------
+    def round(self, t: int) -> dict[str, Any]:
+        proto, cfg = self.proto, self.cfg
+        plan = network.plan_round(self.rng, self.k, proto.drop_setting)
+
+        # target broadcasts its message to sources in S_t
+        xt, _ = next(self._tgt_msg_iter)
+        tgt_msg = self._msg_of(self.tgt_params, jnp.asarray(xt), -1.0)
+        if proto.exchange_messages and plan.msg_clients:
+            self.comm.data_messages += 2 * cfg.n_rff  # one 2N vector downlink
+
+        # local source training (Alg. 2)
+        src_msgs = {}
+        for i in range(self.k):
+            for _ in range(proto.local_steps):
+                x, y = next(self.src_iters[i])
+                x, y = jnp.asarray(x), jnp.asarray(y)
+                if proto.exchange_messages and i in plan.msg_clients:
+                    self.src_params[i], self.src_opt[i], aux = self._src_step_mmd(
+                        self.src_params[i], self.src_opt[i], x, y, tgt_msg
+                    )
+                else:
+                    self.src_params[i], self.src_opt[i], aux = self._src_step_plain(
+                        self.src_params[i], self.src_opt[i], x, y
+                    )
+            if proto.exchange_messages and i in plan.msg_clients:
+                xm, _ = next(self._msg_iters[i])
+                src_msgs[i] = self._msg_of(self.src_params[i], jnp.asarray(xm), +1.0)
+                self.comm.data_messages += 2 * cfg.n_rff
+
+        # local target training (Alg. 3)
+        if proto.exchange_messages and src_msgs:
+            msgs = jnp.stack(list(src_msgs.values()))
+            for _ in range(proto.local_steps):
+                xt, _ = next(self.tgt_iter)
+                self.tgt_params, self.tgt_opt, _ = self._tgt_step(
+                    self.tgt_params, self.tgt_opt, jnp.asarray(xt), msgs
+                )
+
+        # global aggregation (Alg. 4)
+        if proto.aggregate_w_rf and plan.w_clients:
+            w_rf = aggregation.fedavg_w_rf(self.src_params, self.tgt_params, plan.w_clients)
+            self.comm.w_rf += (len(plan.w_clients) + 1) * w_rf.size  # uplinks
+            for i in plan.w_clients:
+                self.src_params[i]["w_rf"] = w_rf
+            self.tgt_params["w_rf"] = w_rf
+
+        if proto.aggregate_classifier and t % proto.t_c == 0 and plan.c_clients:
+            clf = aggregation.fedavg_classifier(self.src_params, plan.c_clients)
+            self.comm.classifier += len(plan.c_clients) * sum(
+                int(np.prod(v.shape)) for v in jax.tree_util.tree_leaves(clf)
+            )
+            for i in plan.c_clients:
+                self.src_params[i]["classifier"] = clf
+            self.tgt_params["classifier"] = clf
+        self.comm.rounds += 1
+        return {"plan": plan}
+
+    def train(self, eval_every: int = 0) -> list[float]:
+        accs = []
+        for t in range(1, self.proto.n_rounds + 1):
+            self.round(t)
+            if eval_every and t % eval_every == 0:
+                accs.append(self.evaluate())
+        return accs
+
+    # ---- evaluation -----------------------------------------------------------
+    def evaluate(self, x=None, y=None) -> float:
+        """Aggregated-classifier accuracy on target data (the UFDA objective)."""
+        x = self.target.x if x is None else x
+        y = self.target.y if y is None else y
+        if self.proto.aggregate_classifier:
+            return float(accuracy(self.tgt_params, self.omega, jnp.asarray(x), jnp.asarray(y)))
+        # one-shot hard voting (App. D): each source classifier votes on the
+        # target's aligned features
+        aligned_params = dict(self.tgt_params)
+        per_src = []
+        for i in range(self.k):
+            p = {
+                "extractor": self.tgt_params["extractor"],
+                "w_rf": self.tgt_params["w_rf"],
+                "classifier": self.src_params[i]["classifier"],
+            }
+            per_src.append(np.asarray(logits_of(p, self.omega, jnp.asarray(x))))
+        preds = aggregation.hard_vote(np.stack(per_src))
+        return float(np.mean(preds == y))

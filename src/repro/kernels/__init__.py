@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- rff:             fused RFF feature map (paper Def. 2) — matmul + cos/sin epilogue
+- centered_gram:   Sigma H Sigma^T for RF-TCA (Alg. 1) with fused centering
+- flash_attention: blockwise online-softmax GQA attention (causal / window)
+
+Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py. On this
+CPU container they run with interpret=True; on TPU they lower via Mosaic.
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,86 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on a real TPU pass
+``interpret=False`` (the default flips on TPU backends). Wrappers handle
+padding to tile boundaries so callers keep arbitrary shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.centered_gram import centered_gram_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rff import rff_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, size
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rff(x: jax.Array, omega: jax.Array, *, block: int = 128, interpret: bool | None = None):
+    """Sigma (2N, n) from X (p, n) and Omega (N, p)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n_orig = x.shape[1]
+    x, _ = _pad_to(x, 1, block)
+    x, _ = _pad_to(x, 0, block)
+    omega, p_orig = _pad_to(omega, 1, block)
+    omega, n_feat = _pad_to(omega, 0, block)
+    out = rff_pallas(
+        x, omega, block_n=block, block_m=block, block_p=block,
+        scale_n=n_feat, interpret=interpret,
+    )
+    # rows: [cos(padded N); sin(padded N)] -> slice both halves to N
+    cos = out[: omega.shape[0]][:n_feat]
+    sin = out[omega.shape[0] :][:n_feat]
+    return jnp.concatenate([cos, sin], axis=0)[:, :n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def centered_gram(sigma: jax.Array, *, block: int = 128, interpret: bool | None = None):
+    """Sigma H Sigma^T (fp32) from Sigma (2N, n)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    two_n_orig = sigma.shape[0]
+    n_orig = sigma.shape[1]
+    # sample padding would corrupt the mean -> pad with the row mean (no-op
+    # after centering), then correct the scale of the contraction
+    pad = (-n_orig) % block
+    if pad:
+        mu = jnp.mean(sigma, axis=1, keepdims=True)
+        sigma = jnp.concatenate([sigma, jnp.broadcast_to(mu, (sigma.shape[0], pad))], axis=1)
+    sigma, _ = _pad_to(sigma, 0, block)
+    out = centered_gram_pallas(sigma, block=block, block_k=block, interpret=interpret)
+    return out[:two_n_orig, :two_n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """(b,h,s,d) x (b,kv,s,d) x (b,kv,s,dv) -> (b,h,s,dv)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

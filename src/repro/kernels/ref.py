@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rff_ref(x: jax.Array, omega: jax.Array) -> jax.Array:
+    """(p, n), (N, p) -> (2N, n)."""
+    z = (omega @ x).astype(jnp.float32)
+    n = omega.shape[0]
+    out = jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=0) / jnp.sqrt(n)
+    return out.astype(x.dtype)
+
+
+def centered_gram_ref(sigma: jax.Array) -> jax.Array:
+    """(2N, n) -> (2N, 2N) fp32."""
+    s = sigma.astype(jnp.float32)
+    c = s - jnp.mean(s, axis=1, keepdims=True)
+    return c @ c.T
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0
+) -> jax.Array:
+    """(b,h,s,d), (b,kv,s,d), (b,kv,s,dv) -> (b,h,s,dv)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    sc = sc / (d ** 0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i >= j
+    if window:
+        mask &= (i - j) < window
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: AOT lower + compile every (arch x input-shape x mesh).
+
+For each combination this lowers the real step function (train_step for
+train_4k, prefill for prefill_32k, decode_step for decode shapes) against
+ShapeDtypeStruct inputs on the production mesh, compiles it, and records
+memory_analysis / cost_analysis / the collective schedule for §Dry-run and
+§Roofline of EXPERIMENTS.md. No arrays are ever allocated.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-2.7b --shape train_4k --mesh multi
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import roofline as rl
+from repro.launch.mesh import data_axis_size, make_production_mesh
+from repro.launch.specs import cache_pspecs, input_pspecs, input_specs
+from repro.models import LM, ShardRules
+from repro.models.param import abstract, is_decl, specs
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+def active_params(model: LM) -> int:
+    cfg = model.cfg
+    total = model.param_count()
+    if not cfg.n_experts:
+        return total
+    routed = cfg.n_layers * 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+    return int(total - routed + routed * cfg.top_k / cfg.n_experts)
+
+
+def adjusted_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: SSM/hybrid run natively; all
+    attention archs get a 4096-token sliding window (ring-buffer cache)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        if cfg.family == "hybrid":
+            # hybrid shared-attn also windows its ring cache
+            return dataclasses.replace(cfg, attn_window=4096)
+        return dataclasses.replace(cfg, attn_window=4096)
+    return cfg
+
+
+def _ns(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_opt_state(params_abs, opt):
+    """AdamState ShapeDtypeStructs mirroring abstract params (fp32 moments)."""
+    f32 = lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32)
+    from repro.optim.optimizers import AdamState
+
+    return AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, params_abs),
+        nu=jax.tree_util.tree_map(f32, params_abs),
+    )
+
+
+def opt_pspecs(param_specs):
+    from repro.optim.optimizers import AdamState
+
+    return AdamState(step=P(), mu=param_specs, nu=param_specs)
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool, unroll: bool = False,
+                depth: int | None = None, opt: bool = False):
+    """Returns (record dict, compiled) for one (arch, shape, mesh).
+
+    opt=True enables the §Perf hillclimb variants (sharded CE, expert-parallel
+    MoE, triangular causal attention); default is the paper-faithful baseline.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    rules = ShardRules(model_size=16, batch_axes=batch_axes, mesh=mesh if opt else None)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = adjusted_config(get_config(arch), shape)
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll_scan=True)
+    if depth is not None:
+        cfg = dataclasses.replace(cfg, n_layers=depth)
+    if opt:
+        cfg = dataclasses.replace(
+            cfg, sharded_ce=True, moe_ep=True, causal_skip=True, seq_parallel=True
+        )
+    model = LM(cfg, rules)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    n_clients = data_axis_size(mesh)
+
+    param_specs = model.specs()
+    params_abs = model.abstract()
+    batch_abs = input_specs(cfg, shape)
+    batch_ps = input_pspecs(cfg, shape, rules)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = adamw(3e-4, weight_decay=0.1)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, n_clients), has_aux=True
+            )(params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+            return params, opt_state, metrics
+
+        opt_abs = abstract_opt_state(params_abs, opt)
+        o_specs = opt_pspecs(param_specs)
+        metrics_specs = {k: P() for k in ("ce", "aux", "mmd", "loss", "grad_norm")}
+        fn = jax.jit(
+            train_step,
+            in_shardings=(_ns(mesh, param_specs), _ns(mesh, o_specs), _ns(mesh, batch_ps)),
+            out_shardings=(_ns(mesh, param_specs), _ns(mesh, o_specs), _ns(mesh, metrics_specs)),
+        )
+        lowered = fn.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        fn = jax.jit(prefill_step, in_shardings=(_ns(mesh, param_specs), _ns(mesh, batch_ps)))
+        lowered = fn.lower(params_abs, batch_abs)
+    else:  # decode
+        cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+        cache_ps = cache_pspecs(model, shape, rules)
+
+        def serve_step(params, cache, batch, pos):
+            return model.decode_step(params, cache, batch, pos)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(
+                _ns(mesh, param_specs),
+                _ns(mesh, cache_ps),
+                _ns(mesh, batch_ps),
+                NamedSharding(mesh, P()),
+            ),
+            out_shardings=(NamedSharding(mesh, P(batch_ps[list(batch_ps)[0]][0], None)),
+                           _ns(mesh, cache_ps)),
+        )
+        lowered = fn.lower(
+            params_abs, cache_abs, batch_abs, jax.ShapeDtypeStruct((), jnp.int32)
+        )
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = rl.from_compiled(compiled)
+    n_active = active_params(model)
+    n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = rl.model_flops(n_active, n_tokens, shape.kind)
+    flops_global = roof.flops_per_chip * n_chips
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "params_total": model.param_count(),
+        "params_active": n_active,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "roofline": roof.as_dict(),
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / flops_global) if flops_global else 0.0,
+    }
+    return record, compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans so cost_analysis counts every layer "
+                         "(roofline runs); default keeps scan (fast compile)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if multi else '16x16'}"
+                if args.unroll:
+                    tag += "_unroll"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                try:
+                    rec, compiled = lower_combo(arch, shape, multi, unroll=args.unroll)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(
+                        f"[ok]   {tag}: compile={rec['compile_s']}s "
+                        f"flops/chip={r['flops_per_chip']:.3g} "
+                        f"bytes/chip={r['hbm_bytes_per_chip']:.3g} "
+                        f"coll/chip={r['coll_bytes_per_chip']:.3g} "
+                        f"dominant={r['dominant']} "
+                        f"useful={rec['useful_flops_ratio']:.2f}"
+                    )
+                    del compiled
+                except Exception as e:  # noqa: BLE001 — report all failures at end
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run combos failed: {[t for t, _ in failures]}")
+    print("all requested combos lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) = 256 chips single pod; (2, 16, 16) = 512 chips across 2 pods."""
+    import jax
+    from jax.sharding import AxisType
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)}. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE "
+            "importing jax (dryrun.py does this)."
+        )
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n], axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (smoke tests, examples)."""
+    import jax
+    from jax.sharding import AxisType
+
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        devices=jax.devices()[: data * model],
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def data_axis_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.shape if a in ("pod", "data")]))

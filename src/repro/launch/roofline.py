@@ -1,0 +1,123 @@
+"""Roofline-term derivation from compiled AOT artifacts (no TPU at runtime).
+
+Terms per (arch, shape, mesh), all in seconds per step, per chip:
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = collective_bytes_per_chip / ICI_BW
+
+``cost_analysis`` of the SPMD-partitioned module is per-device; collective
+bytes are parsed from the compiled HLO text by summing the *result* shapes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (methodology: result bytes bound the ICI traffic of the
+op up to a ring factor, uniform across configs so comparisons are fair).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+# TPU v5e-class hardware constants (per brief)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# one result tensor: dtype[d0,d1,...] — dims may be empty (scalar)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes summed over the module (per device)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "fusion" in stripped.split("=")[-1][:60] if "=" in stripped else False:
+            continue
+        for kind in _COLLECTIVES:
+            # match `= <type> kind(` or `= <type> kind-start(` (async pairs)
+            if re.search(rf"=\s+[^=]*\s{kind}(-start)?\(", stripped):
+                lhs = stripped.split("=", 1)[1]
+                head = lhs.split(f" {kind}", 1)[0]
+                total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+                out[kind] += total
+                break
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: dict
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_by_kind": self.coll_by_kind,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def from_compiled(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    colls = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        coll_bytes_per_chip=float(sum(colls.values())),
+        coll_by_kind=colls,
+    )
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N·D for inference."""
+    return (6.0 if kind == "train" else 2.0) * n_params_active * n_tokens

@@ -1,0 +1,101 @@
+"""Abstract input specs + shardings for every (arch x input-shape) pair.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation); ``input_pspecs`` the matching PartitionSpec tree. Batch dims
+shard over the data axes when divisible; for ``long_500k`` (global_batch=1)
+attention caches shard their *sequence* dim over data instead (context
+parallelism for the cache), and SSM states shard their head dim over model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.layers import ShardRules
+from repro.models.model import LM
+
+
+def _bspec(rules: ShardRules, batch: int):
+    n_data = rules_data_size(rules)
+    return rules.batch if batch % n_data == 0 else None
+
+
+def rules_data_size(rules: ShardRules) -> int:
+    # data axes sizes are fixed by the production mesh: 16 per axis, pod=2
+    sizes = {"data": 16, "pod": 2, "model": rules.model_size}
+    n = 1
+    for a in rules.batch_axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        if cfg.embeddings_in:
+            out["embeddings"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            out["images"] = jax.ShapeDtypeStruct((b, cfg.n_image_tokens, cfg.d_image), cfg.dtype)
+        return out
+    # decode: one new token against a seq_len cache
+    if cfg.embeddings_in:
+        return {"embeddings": jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.dtype)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def input_pspecs(cfg: ModelConfig, shape: InputShape, rules: ShardRules) -> dict:
+    bs = _bspec(rules, shape.global_batch)
+    out = {}
+    for k in input_specs(cfg, shape):
+        if k in ("tokens", "labels"):
+            out[k] = P(bs, None)
+        elif k == "embeddings":
+            out[k] = P(bs, None, None)
+        elif k == "images":
+            out[k] = P(bs, None, None)
+    return out
+
+
+def cache_pspecs(model: LM, shape: InputShape, rules: ShardRules) -> dict:
+    """PartitionSpec tree matching LM.cache_shapes()."""
+    cfg = model.cfg
+    bs = _bspec(rules, shape.global_batch)
+    # when the batch can't shard, shard attention cache sequence over data
+    seq_spec = None if bs is not None else rules.batch
+    m = rules.model_axis
+
+    def leaf_spec(key: str, shp: tuple) -> P:
+        # all leaves are layer-stacked: axis 0 = layers/groups
+        if key in ("k", "v", "attn_k", "attn_v"):
+            # (L, b, S, kv, hd)
+            kv_spec = m if shp[3] % rules.model_size == 0 else None
+            return P(None, bs, seq_spec, kv_spec, None)
+        if key in ("c", "kr"):  # MLA latent: (L, b, S, r)
+            return P(None, bs, seq_spec, None)
+        if key in ("img_k", "img_v"):  # (n_cross, b, n_img, kv, hd)
+            kv_spec = m if shp[3] % rules.model_size == 0 else None
+            return P(None, bs, None, kv_spec, None)
+        if key == "ssm":  # (L, b, h, p, n)
+            h_spec = m if shp[2] % rules.model_size == 0 else None
+            return P(None, bs, h_spec, None, None)
+        if key == "conv":  # (L, b, w-1, ch)
+            ch_spec = m if shp[3] % rules.model_size == 0 else None
+            return P(None, bs, None, ch_spec)
+        raise KeyError(key)
+
+    shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+
+    def walk(tree):
+        return {
+            k: walk(v) if isinstance(v, dict) else leaf_spec(k, v) for k, v in tree.items()
+        }
+
+    return walk(shapes)

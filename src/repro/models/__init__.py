@@ -1,0 +1,2 @@
+from repro.models.layers import ShardRules
+from repro.models.model import LM

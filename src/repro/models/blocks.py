@@ -1,0 +1,154 @@
+"""Transformer/SSM block bodies: decls + apply for every assigned family.
+
+Each block is (decl_fn, forward_fn, decode_fn) over a params dict; model.py
+stacks uniform blocks and scans them, and slices grouped stacks for the
+non-uniform families (hybrid shared-attention, VLM cross-attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ShardRules, mlp, mlp_decl, rmsnorm, rmsnorm_decl
+
+
+# ---------------------------------------------------------------------------
+# dense / moe decoder blocks (GQA or MLA attention)
+# ---------------------------------------------------------------------------
+
+def decoder_block_decl(cfg: ModelConfig, rules: ShardRules) -> dict:
+    d = {
+        "ln_attn": rmsnorm_decl(cfg.d_model, cfg.dtype),
+        "ln_mlp": rmsnorm_decl(cfg.d_model, cfg.dtype),
+        "attn": attn.mla_decl(cfg, rules) if cfg.kv_lora_rank else attn.gqa_decl(cfg, rules),
+    }
+    if cfg.n_experts:
+        d["moe"] = moe_mod.moe_decl(cfg, rules)
+    else:
+        d["mlp"] = mlp_decl(cfg, rules)
+    return d
+
+
+def decoder_block_forward(
+    params, x, positions, cfg: ModelConfig, *, window: int | None = None,
+    collect_cache: bool = False, rules=None,
+):
+    """Returns (x, aux_loss) — or (x, aux_loss, cache_entry) when collecting."""
+    h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+    cache = None
+    if cfg.kv_lora_rank:
+        if collect_cache:
+            o, (c, kr) = attn.mla_forward(params["attn"], h, positions, cfg, return_cache=True)
+            cache = {"c": c, "kr": kr}
+        else:
+            o = attn.mla_forward(params["attn"], h, positions, cfg)
+    else:
+        if collect_cache:
+            o, (k, v) = attn.gqa_forward(
+                params["attn"], h, positions, cfg, window=window, return_kv=True
+            )
+            cache = {"k": k, "v": v}
+        else:
+            o = attn.gqa_forward(params["attn"], h, positions, cfg, window=window)
+    x = x + o
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        if cfg.moe_ep and rules is not None and getattr(rules, "mesh", None) is not None:
+            y, aux = moe_mod.moe_forward_ep(params["moe"], h, cfg, rules)
+        else:
+            y, aux = moe_mod.moe_forward(params["moe"], h, cfg)
+        x = x + y
+    else:
+        x, aux = x + mlp(params["mlp"], h), jnp.zeros((), jnp.float32)
+    if collect_cache:
+        return x, aux, cache
+    return x, aux
+
+
+def decoder_block_decode(params, x, cache, pos, cfg: ModelConfig, *, window: int | None = None,
+                         rules=None):
+    """cache: dict of per-layer tensors. Returns (x, cache)."""
+    h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        o, c, kr = attn.mla_decode(params["attn"], h, cache["c"], cache["kr"], pos, cfg)
+        cache = {"c": c, "kr": kr}
+    else:
+        o, ck, cv = attn.gqa_decode(
+            params["attn"], h, cache["k"], cache["v"], pos, cfg, window=window, rules=rules
+        )
+        cache = {"k": ck, "v": cv}
+    x = x + o
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = moe_mod.moe_forward(params["moe"], h, cfg)
+        x = x + y
+    else:
+        x = x + mlp(params["mlp"], h)
+    return x, cache
+
+
+def decoder_cache_decl(cfg: ModelConfig, batch: int, s_cache: int) -> dict:
+    """Abstract per-layer cache shapes (dtype = cfg.dtype)."""
+    if cfg.kv_lora_rank:
+        return {
+            "c": (batch, s_cache, cfg.kv_lora_rank),
+            "kr": (batch, s_cache, cfg.rope_head_dim),
+        }
+    return {
+        "k": (batch, s_cache, cfg.n_kv_heads, cfg.hd),
+        "v": (batch, s_cache, cfg.n_kv_heads, cfg.hd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# ssm (mamba2) blocks
+# ---------------------------------------------------------------------------
+
+def ssm_block_decl(cfg: ModelConfig, rules: ShardRules) -> dict:
+    return {"ln": rmsnorm_decl(cfg.d_model, cfg.dtype), "ssm": ssm_mod.ssm_decl(cfg, rules)}
+
+
+def ssm_block_forward(params, x, cfg: ModelConfig, *, collect_cache: bool = False):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    if collect_cache:
+        y, cache = ssm_mod.ssm_forward(params["ssm"], h, cfg, return_state=True)
+        return x + y, jnp.zeros((), jnp.float32), cache
+    return x + ssm_mod.ssm_forward(params["ssm"], h, cfg), jnp.zeros((), jnp.float32)
+
+
+def ssm_block_decode(params, x, cache, cfg: ModelConfig):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    y, cache = ssm_mod.ssm_decode(params["ssm"], h, cache, cfg)
+    return x + y, cache
+
+
+def ssm_cache_decl(cfg: ModelConfig, batch: int) -> dict:
+    ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": (batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv_width - 1, ch),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross-attention block (VLM)
+# ---------------------------------------------------------------------------
+
+def cross_block_decl(cfg: ModelConfig, rules: ShardRules) -> dict:
+    return {
+        "ln_x": rmsnorm_decl(cfg.d_model, cfg.dtype),
+        "ln_mlp": rmsnorm_decl(cfg.d_model, cfg.dtype),
+        "xattn": attn.cross_attn_decl(cfg, rules),
+        "mlp": mlp_decl(cfg, rules),
+    }
+
+
+def cross_block_forward(params, x, img_kv, cfg: ModelConfig):
+    h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+    x = x + attn.cross_attn_forward(params["xattn"], h, img_kv, cfg)
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    return x + mlp(params["mlp"], h)

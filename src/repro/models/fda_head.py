@@ -1,0 +1,49 @@
+"""The paper's technique as a first-class backbone head.
+
+Pooled final hidden states -> fixed shared-seed RFF compressor -> trainable
+linear aligner W_RF -> decomposable MMD loss across clients (paper eq. 11).
+
+On the production mesh the client axis IS the data-parallel axis: the batch is
+laid out as (n_clients, per_client, ...) and the only cross-client traffic the
+loss induces is the mean of the (n_clients, 2N) message matrix — an all-reduce
+of 2N floats per step, the paper's O(KN) claim, visible in the dry-run HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDecl
+
+
+def fda_decl(cfg: ModelConfig) -> dict:
+    n = cfg.fda_n_rff
+    return {
+        # fixed compressor: shared-seed Omega (stop-gradient in the loss);
+        # std ~ 2 on unit-normalised pooled features
+        "omega": ParamDecl((n, cfg.d_model), P(None, None), "std", jnp.float32, scale=2.0),
+        "w_rf": ParamDecl((2 * n, cfg.fda_m), P(None, None), "normal", jnp.float32),
+    }
+
+
+def fda_messages(params, hidden: jnp.ndarray, n_clients: int) -> jnp.ndarray:
+    """Per-client compressed messages Sigma ell: (n_clients, 2N)."""
+    b = hidden.shape[0]
+    pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)  # (b, d)
+    pooled = pooled / (jnp.linalg.norm(pooled, axis=-1, keepdims=True) + 1e-6)
+    omega = jax.lax.stop_gradient(params["omega"])
+    z = pooled @ omega.T  # (b, N)
+    n = omega.shape[0]
+    feats = jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=-1) / jnp.sqrt(n)  # (b, 2N)
+    return feats.reshape(n_clients, b // n_clients, 2 * n).mean(axis=1)
+
+
+def fda_loss(params, hidden: jnp.ndarray, n_clients: int) -> jnp.ndarray:
+    """Align every client's mean embedding to the federation mean (eq. 11 with
+    the global mean as the target message)."""
+    msgs = fda_messages(params, hidden, n_clients)
+    center = jnp.mean(msgs, axis=0)  # the 2N-float all-reduce
+    v = (msgs - center[None, :]) @ params["w_rf"]  # (nc, m)
+    return jnp.mean(jnp.sum(v * v, axis=-1))

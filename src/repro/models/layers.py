@@ -1,0 +1,146 @@
+"""Shared model primitives: sharding rules, RMSNorm, RoPE, GLU-MLP, embeddings.
+
+All parameter trees are declared via :mod:`repro.models.param` so shapes,
+shardings and init stay in lockstep. Activations are computed in the config
+dtype; norms/softmax accumulate in fp32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDecl
+
+
+@dataclass(frozen=True, eq=False)
+class ShardRules:
+    """Maps logical dimensions to mesh axes, with divisibility fallbacks."""
+
+    model_size: int = 16  # size of the tensor-parallel mesh axis
+    batch_axes: tuple[str, ...] = ("data",)  # ("pod","data") for multi-pod
+    model_axis: str = "model"
+    mesh: object = None  # concrete Mesh — required only by shard_map paths (moe_ep)
+
+    def tp(self, dim: int):
+        """Tensor-parallel shard `dim` if divisible, else replicate."""
+        return self.model_axis if dim % self.model_size == 0 else None
+
+    @property
+    def batch(self):
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decl(d: int, dtype) -> dict:
+    return {"scale": ParamDecl((d,), P(None), "ones", dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_decl(cfg: ModelConfig, rules: ShardRules, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ff_spec = rules.tp(f)
+    return {
+        "gate": ParamDecl((d, f), P(None, ff_spec), "normal", cfg.dtype),
+        "up": ParamDecl((d, f), P(None, ff_spec), "normal", cfg.dtype),
+        "down": ParamDecl((f, d), P(ff_spec, None), "normal", cfg.dtype),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# token embedding + LM head
+# ---------------------------------------------------------------------------
+
+def embedding_decl(cfg: ModelConfig, rules: ShardRules) -> dict:
+    v, d = cfg.vocab_padded, cfg.d_model
+    return {
+        # embed sharded along d_model: row gather stays local, small all-gather
+        "embed": ParamDecl((v, d), P(None, rules.tp(d)), "normal", cfg.dtype),
+        # unembed sharded along vocab: logits stay sharded through the CE loss
+        "unembed": ParamDecl((d, v), P(None, rules.tp(v)), "normal", cfg.dtype),
+    }
+
+
+def embed(params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def unembed(params, x):
+    return x @ params["unembed"]
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int, *, sharded: bool = False
+) -> jnp.ndarray:
+    """Mean next-token CE over the real (unpadded) vocabulary.
+
+    sharded=False (baseline): f32 cast + pad-concat + take_along_axis. The
+    gather along a vocab-sharded logits axis forces XLA to ALL-GATHER the full
+    (b, s, vocab) logits — measured as the dominant collective for the
+    large-vocab archs (see EXPERIMENTS.md §Perf).
+
+    sharded=True (optimized): everything is elementwise ops + reductions over
+    the vocab axis, which SPMD partitions locally with only (b, s)-sized
+    cross-shard reductions; the gold logit is picked with an iota==label mask
+    fused into the reduce instead of a gather. Identical math.
+    """
+    if not sharded:
+        logits = logits.astype(jnp.float32)
+        pad = logits.shape[-1] - vocab_size
+        if pad:
+            neg = jnp.full((pad,), -1e9, dtype=logits.dtype)
+            logits = logits + jnp.concatenate([jnp.zeros((vocab_size,), logits.dtype), neg])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    v_padded = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v_padded,), 0)
+    valid = iota < vocab_size  # mask padded vocab entries
+    x = jnp.where(valid, logits.astype(jnp.float32), -jnp.inf)
+    m = jnp.max(x, axis=-1, keepdims=True)  # local max + tiny (b,s) all-reduce
+    sumexp = jnp.sum(jnp.where(valid, jnp.exp(x - m), 0.0), axis=-1)
+    logz = jnp.log(sumexp) + m[..., 0]
+    gold_mask = iota[None, None, :] == labels[..., None]
+    gold = jnp.sum(jnp.where(gold_mask, x, 0.0), axis=-1)  # masked reduce, no gather
+    return jnp.mean(logz - gold)

@@ -1,0 +1,482 @@
+"""Full language-model assembly for every assigned architecture family.
+
+One :class:`LM` wraps a ModelConfig and provides
+  decls / init / specs / abstract     — parameter machinery (see param.py)
+  forward(params, batch)              — training/prefill hidden states
+  loss(params, batch, n_clients)      — CE + MoE aux + the paper's FDA MMD head
+  decode_step(params, cache, batch)   — one-token serve step with KV/SSM cache
+  init_cache / abstract_cache         — cache pytrees (concrete or ShapeDtype)
+
+Uniform layer stacks are `lax.scan`-ned over stacked parameters (HLO size stays
+O(1) in depth); the hybrid (shared attention every k SSM layers) and VLM
+(cross-attention every k self layers) families run grouped scans with the
+non-uniform blocks unrolled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.attention import gqa_decl, gqa_decode, gqa_forward, image_kv
+from repro.models.fda_head import fda_decl, fda_loss
+from repro.models.layers import (
+    ShardRules,
+    cross_entropy,
+    embed,
+    embedding_decl,
+    rmsnorm,
+    rmsnorm_decl,
+    unembed,
+)
+from repro.models.param import ParamDecl, abstract, materialize, param_count, specs, stack_decls
+
+
+def _tree_slice(tree, start: int, size: int):
+    return jax.tree_util.tree_map(lambda a: a[start : start + size], tree)
+
+
+def _tree_index(tree, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, rules: ShardRules | None = None):
+        self.cfg = cfg
+        self.rules = rules or ShardRules()
+
+    def _scan(self, body, init, xs):
+        """Layer scan; unrolled when cfg.unroll_scan (roofline dry-runs need
+        true per-step op counts — XLA counts while bodies once)."""
+        return jax.lax.scan(body, init, xs, unroll=True if self.cfg.unroll_scan else 1)
+
+    def _sp(self, x):
+        """§Perf sequence parallelism: pin the residual's seq dim sharded over
+        the model axis between blocks, so XLA lowers the TP partial-sum
+        all-reduces as reduce-scatter (+all-gather at the next TP einsum) —
+        half the ICI bytes, and norms/elementwise work shards 16-way."""
+        cfg, rules = self.cfg, self.rules
+        if not (cfg.seq_parallel and getattr(rules, "mesh", None) is not None):
+            return x
+        from jax.sharding import NamedSharding
+        bspec = rules.batch
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(rules.mesh, P(bspec, rules.model_axis, None))
+        )
+
+    # ------------------------------------------------------------------
+    # parameter declarations
+    # ------------------------------------------------------------------
+    def decls(self) -> dict:
+        cfg, rules = self.cfg, self.rules
+        d: dict[str, Any] = {}
+        if not cfg.embeddings_in:
+            d["embedding"] = embedding_decl(cfg, rules)
+        else:
+            v = cfg.vocab_padded
+            d["embedding"] = {
+                "unembed": ParamDecl((cfg.d_model, v), P(None, rules.tp(v)), "normal", cfg.dtype)
+            }
+        d["ln_f"] = rmsnorm_decl(cfg.d_model, cfg.dtype)
+        d["fda"] = fda_decl(cfg)
+
+        if cfg.family in ("dense", "moe", "audio"):
+            d["blocks"] = stack_decls(B.decoder_block_decl(cfg, rules), cfg.n_layers)
+        elif cfg.family == "ssm":
+            d["blocks"] = stack_decls(B.ssm_block_decl(cfg, rules), cfg.n_layers)
+        elif cfg.family == "hybrid":
+            d["blocks"] = stack_decls(B.ssm_block_decl(cfg, rules), cfg.n_layers)
+            d["shared_attn"] = {
+                "ln": rmsnorm_decl(cfg.d_model, cfg.dtype),
+                "attn": gqa_decl(cfg, rules),
+            }
+        elif cfg.family == "vlm":
+            n_cross = cfg.n_layers // (cfg.cross_attn_every + 1)
+            n_self = cfg.n_layers - n_cross
+            d["blocks"] = stack_decls(B.decoder_block_decl(cfg, rules), n_self)
+            d["cross_blocks"] = stack_decls(B.cross_block_decl(cfg, rules), n_cross)
+        else:
+            raise ValueError(f"unknown family {cfg.family}")
+        return d
+
+    def init(self, key: jax.Array):
+        return materialize(self.decls(), key)
+
+    def specs(self):
+        return specs(self.decls())
+
+    def abstract(self):
+        return abstract(self.decls())
+
+    def param_count(self) -> int:
+        return param_count(self.decls())
+
+    # ------------------------------------------------------------------
+    # layer-group geometry for non-uniform families
+    # ------------------------------------------------------------------
+    def _hybrid_groups(self) -> tuple[int, int]:
+        """(n_groups, remainder): shared attn applied after every group."""
+        k = self.cfg.attn_every
+        return self.cfg.n_layers // k, self.cfg.n_layers % k
+
+    def _vlm_groups(self) -> tuple[int, int, int]:
+        """(n_cross, self_per_group, self_remainder)."""
+        n_cross = self.cfg.n_layers // (self.cfg.cross_attn_every + 1)
+        n_self = self.cfg.n_layers - n_cross
+        per = self.cfg.cross_attn_every
+        return n_cross, per, n_self - n_cross * per
+
+    # ------------------------------------------------------------------
+    # forward (training / prefill)
+    # ------------------------------------------------------------------
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.embeddings_in:
+            x = batch["embeddings"].astype(cfg.dtype)
+        else:
+            x = embed(params["embedding"], batch["tokens"])
+        return x
+
+    def forward(self, params, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (hidden (b,s,d), aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+
+        if cfg.family in ("dense", "moe", "audio"):
+            def body(carry, layer_params):
+                y, aux = B.decoder_block_forward(
+                    layer_params, carry, positions, cfg, rules=self.rules
+                )
+                return self._sp(y), aux
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, auxs = self._scan(body, self._sp(x), params["blocks"])
+            return self._finish(params, x), jnp.mean(auxs)
+
+        if cfg.family == "ssm":
+            def body(carry, layer_params):
+                y, aux = B.ssm_block_forward(layer_params, carry, cfg)
+                return y, aux
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, auxs = self._scan(body, x, params["blocks"])
+            return self._finish(params, x), jnp.mean(auxs)
+
+        if cfg.family == "hybrid":
+            def body(carry, layer_params):
+                y, aux = B.ssm_block_forward(layer_params, carry, cfg)
+                return y, aux
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+
+            def attn_apply(h):
+                z = rmsnorm(params["shared_attn"]["ln"], h, cfg.norm_eps)
+                return h + gqa_forward(params["shared_attn"]["attn"], z, positions, cfg)
+
+            if cfg.remat:
+                attn_apply = jax.checkpoint(attn_apply)
+            ng, rem = self._hybrid_groups()
+            k = cfg.attn_every
+            for g in range(ng):
+                x, _ = self._scan(body, x, _tree_slice(params["blocks"], g * k, k))
+                x = attn_apply(x)
+            if rem:
+                x, _ = self._scan(body, x, _tree_slice(params["blocks"], ng * k, rem))
+            return self._finish(params, x), jnp.zeros((), jnp.float32)
+
+        if cfg.family == "vlm":
+            def body(carry, layer_params):
+                y, aux = B.decoder_block_forward(
+                    layer_params, carry, positions, cfg, rules=self.rules
+                )
+                return y, aux
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            img = batch["images"].astype(cfg.dtype)  # (b, n_img, d_image)
+            n_cross, per, rem = self._vlm_groups()
+            for g in range(n_cross):
+                x, _ = self._scan(body, x, _tree_slice(params["blocks"], g * per, per))
+                cp = _tree_index(params["cross_blocks"], g)
+
+                def xbody(h):
+                    kv = image_kv(cp["xattn"], img)
+                    return B.cross_block_forward(cp, h, kv, cfg)
+
+                x = jax.checkpoint(xbody)(x) if cfg.remat else xbody(x)
+            if rem:
+                x, _ = self._scan(body, x, _tree_slice(params["blocks"], n_cross * per, rem))
+            return self._finish(params, x), jnp.zeros((), jnp.float32)
+
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------
+    # prefill: forward + KV/SSM cache collection for the decode handoff
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch):
+        """Returns (last-token logits (b, vocab_padded), cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+
+        if cfg.family in ("dense", "moe", "audio", "ssm"):
+            def body(carry, layer_params):
+                if cfg.family == "ssm":
+                    y, _, cache = B.ssm_block_forward(layer_params, carry, cfg, collect_cache=True)
+                else:
+                    y, _, cache = B.decoder_block_forward(
+                        layer_params, carry, positions, cfg, collect_cache=True,
+                        rules=self.rules,
+                    )
+                return y, cache
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, layers = self._scan(body, x, params["blocks"])
+            return self._last_logits(params, x), {"layers": layers}
+
+        if cfg.family == "hybrid":
+            def body(carry, layer_params):
+                y, _, cache = B.ssm_block_forward(layer_params, carry, cfg, collect_cache=True)
+                return y, cache
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            ng, rem = self._hybrid_groups()
+            k = cfg.attn_every
+            layer_caches, ak, av = [], [], []
+            for g in range(ng):
+                x, lc = self._scan(body, x, _tree_slice(params["blocks"], g * k, k))
+                layer_caches.append(lc)
+                h = rmsnorm(params["shared_attn"]["ln"], x, cfg.norm_eps)
+                o, (kk, vv) = gqa_forward(
+                    params["shared_attn"]["attn"], h, positions, cfg, return_kv=True
+                )
+                x = x + o
+                ak.append(kk)
+                av.append(vv)
+            if rem:
+                x, lc = self._scan(body, x, _tree_slice(params["blocks"], ng * k, rem))
+                layer_caches.append(lc)
+            cache = {
+                "layers": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *layer_caches),
+                "attn_k": jnp.stack(ak),
+                "attn_v": jnp.stack(av),
+            }
+            return self._last_logits(params, x), cache
+
+        if cfg.family == "vlm":
+            def body(carry, layer_params):
+                y, _, cache = B.decoder_block_forward(
+                    layer_params, carry, positions, cfg, collect_cache=True, rules=self.rules
+                )
+                return y, cache
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            img = batch["images"].astype(cfg.dtype)
+            n_cross, per, rem = self._vlm_groups()
+            layer_caches, ik, iv = [], [], []
+            for g in range(n_cross):
+                x, lc = self._scan(body, x, _tree_slice(params["blocks"], g * per, per))
+                layer_caches.append(lc)
+                cp = _tree_index(params["cross_blocks"], g)
+                kv = image_kv(cp["xattn"], img)
+                x = B.cross_block_forward(cp, x, kv, cfg)
+                ik.append(kv[0])
+                iv.append(kv[1])
+            if rem:
+                x, lc = self._scan(body, x, _tree_slice(params["blocks"], n_cross * per, rem))
+                layer_caches.append(lc)
+            cache = {
+                "layers": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *layer_caches),
+                "img_k": jnp.stack(ik),
+                "img_v": jnp.stack(iv),
+            }
+            return self._last_logits(params, x), cache
+
+        raise ValueError(cfg.family)
+
+    def _last_logits(self, params, x):
+        x = self._finish(params, x[:, -1:, :])
+        return self.logits(params, x)[:, 0, :]
+
+    def _finish(self, params, x):
+        return rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
+
+    def logits(self, params, hidden):
+        return unembed(params["embedding"], hidden)
+
+    # ------------------------------------------------------------------
+    # training loss: CE + MoE aux + the paper's FDA MMD head
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, n_clients: int = 1):
+        cfg = self.cfg
+        hidden, aux = self.forward(params, batch)
+        logits = self.logits(params, hidden)
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size, sharded=cfg.sharded_ce)
+        total = ce + 0.01 * aux
+        mmd = jnp.zeros((), jnp.float32)
+        if cfg.fda_lambda and n_clients > 1:
+            mmd = fda_loss(params["fda"], hidden, n_clients)
+            total = total + cfg.fda_lambda * mmd
+        return total, {"ce": ce, "aux": aux, "mmd": mmd}
+
+    # ------------------------------------------------------------------
+    # decode (serve) path
+    # ------------------------------------------------------------------
+    def cache_shapes(self, batch: int, s_cache: int) -> dict:
+        cfg = self.cfg
+        if cfg.attn_window:
+            s_cache = min(s_cache, cfg.attn_window)
+        if cfg.family in ("dense", "moe", "audio"):
+            per = B.decoder_cache_decl(cfg, batch, s_cache)
+            return {"layers": {k: (cfg.n_layers, *v) for k, v in per.items()}}
+        if cfg.family == "ssm":
+            per = B.ssm_cache_decl(cfg, batch)
+            return {"layers": {k: (cfg.n_layers, *v) for k, v in per.items()}}
+        if cfg.family == "hybrid":
+            per = B.ssm_cache_decl(cfg, batch)
+            ng, _ = self._hybrid_groups()
+            return {
+                "layers": {k: (cfg.n_layers, *v) for k, v in per.items()},
+                "attn_k": (ng, batch, s_cache, cfg.n_kv_heads, cfg.hd),
+                "attn_v": (ng, batch, s_cache, cfg.n_kv_heads, cfg.hd),
+            }
+        if cfg.family == "vlm":
+            n_cross, _, _ = self._vlm_groups()
+            n_self = cfg.n_layers - n_cross
+            per = B.decoder_cache_decl(cfg, batch, s_cache)
+            return {
+                "layers": {k: (n_self, *v) for k, v in per.items()},
+                "img_k": (n_cross, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.hd),
+                "img_v": (n_cross, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.hd),
+            }
+        raise ValueError(cfg.family)
+
+    def _cache_tree(self, shapes, maker):
+        return jax.tree_util.tree_map(maker, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+    def init_cache(self, batch: int, s_cache: int):
+        return self._cache_tree(
+            self.cache_shapes(batch, s_cache), lambda s: jnp.zeros(s, self.cfg.dtype)
+        )
+
+    def abstract_cache(self, batch: int, s_cache: int):
+        return self._cache_tree(
+            self.cache_shapes(batch, s_cache),
+            lambda s: jax.ShapeDtypeStruct(s, self.cfg.dtype),
+        )
+
+    def cache_specs(self):
+        """Batch dim of every cache leaf is data-sharded."""
+        def spec(shape):
+            return P(None, self.rules.batch, *([None] * (len(shape) - 2)))
+
+        return self._cache_tree(self.cache_shapes(1, 1), spec)
+
+    def decode_step(self, params, cache, batch, pos):
+        """One token for the whole stack. batch: tokens (b,1) or embeddings
+        (b,1,d). pos: scalar int32 (same position across the batch).
+        Returns (logits (b, vocab_padded), new_cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+
+        if cfg.family in ("dense", "moe", "audio", "ssm"):
+            def body(carry, xs):
+                layer_params, layer_cache = xs
+                if cfg.family == "ssm":
+                    y, c = B.ssm_block_decode(layer_params, carry, layer_cache, cfg)
+                else:
+                    y, c = B.decoder_block_decode(
+                        layer_params, carry, layer_cache, pos, cfg, rules=self.rules
+                    )
+                return y, c
+
+            x, new_layers = self._scan(body, x, (params["blocks"], cache["layers"]))
+            cache = {**cache, "layers": new_layers}
+            return self._decode_logits(params, x), cache
+
+        if cfg.family == "hybrid":
+            def body(carry, xs):
+                layer_params, layer_cache = xs
+                return B.ssm_block_decode(layer_params, carry, layer_cache, cfg)
+
+            ng, rem = self._hybrid_groups()
+            k = cfg.attn_every
+            new_layers = []
+            new_ak, new_av = [], []
+            for g in range(ng):
+                x, nl = self._scan(
+                    body, x, (_tree_slice(params["blocks"], g * k, k),
+                              _tree_slice(cache["layers"], g * k, k))
+                )
+                new_layers.append(nl)
+                h = rmsnorm(params["shared_attn"]["ln"], x, cfg.norm_eps)
+                o, ck, cv = gqa_decode(
+                    params["shared_attn"]["attn"], h, cache["attn_k"][g], cache["attn_v"][g],
+                    pos, cfg,
+                )
+                x = x + o
+                new_ak.append(ck)
+                new_av.append(cv)
+            if rem:
+                x, nl = self._scan(
+                    body, x, (_tree_slice(params["blocks"], ng * k, rem),
+                              _tree_slice(cache["layers"], ng * k, rem))
+                )
+                new_layers.append(nl)
+            cache = {
+                "layers": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *new_layers),
+                "attn_k": jnp.stack(new_ak),
+                "attn_v": jnp.stack(new_av),
+            }
+            return self._decode_logits(params, x), cache
+
+        if cfg.family == "vlm":
+            def body(carry, xs):
+                layer_params, layer_cache = xs
+                return B.decoder_block_decode(
+                    layer_params, carry, layer_cache, pos, cfg, rules=self.rules
+                )
+
+            n_cross, per, rem = self._vlm_groups()
+            new_layers = []
+            for g in range(n_cross):
+                x, nl = self._scan(
+                    body, x, (_tree_slice(params["blocks"], g * per, per),
+                              _tree_slice(cache["layers"], g * per, per))
+                )
+                new_layers.append(nl)
+                cp = _tree_index(params["cross_blocks"], g)
+                kv = (cache["img_k"][g], cache["img_v"][g])
+                x = B.cross_block_forward(cp, x, kv, cfg)
+            if rem:
+                x, nl = self._scan(
+                    body, x, (_tree_slice(params["blocks"], n_cross * per, rem),
+                              _tree_slice(cache["layers"], n_cross * per, rem))
+                )
+                new_layers.append(nl)
+            cache = {
+                **cache,
+                "layers": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *new_layers),
+            }
+            return self._decode_logits(params, x), cache
+
+        raise ValueError(cfg.family)
+
+    def _decode_logits(self, params, x):
+        x = self._finish(params, x)
+        return self.logits(params, x)[:, 0, :]

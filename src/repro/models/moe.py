@@ -1,0 +1,174 @@
+"""Mixture-of-Experts with top-k routing and capacity-bounded scatter dispatch.
+
+TPU-native dispatch: tokens are scatter-added into a per-expert buffer
+(E, C, d) — no (T, E, C) one-hot dispatch tensor is ever materialised — then a
+single batched einsum runs all experts, and results gather back weighted by
+the (renormalised) router probabilities. Expert weights shard over the
+``model`` mesh axis (expert parallelism); XLA inserts the token all-to-alls.
+
+Supports DeepSeek-style shared experts (always-on dense experts alongside the
+routed ones) and emits the standard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardRules, mlp, mlp_decl
+from repro.models.param import ParamDecl
+
+
+def moe_decl(cfg: ModelConfig, rules: ShardRules) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    e_spec = rules.tp(e)
+    decl = {
+        "router": ParamDecl((d, e), P(None, None), "normal", jnp.float32),
+        "gate": ParamDecl((e, d, f), P(e_spec, None, None), "normal", cfg.dtype),
+        "up": ParamDecl((e, d, f), P(e_spec, None, None), "normal", cfg.dtype),
+        "down": ParamDecl((e, f, d), P(e_spec, None, None), "normal", cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        decl["shared"] = mlp_decl(cfg, rules, d_ff=cfg.n_shared_experts * cfg.d_ff)
+    return decl
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_forward(params, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (b, s, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise over chosen
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    c = capacity(cfg, t)
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+
+    # position of each (token, choice) within its expert's buffer
+    one_hot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(one_hot, axis=0) - 1
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < c
+    slot = jnp.where(keep, flat_e * c + pos, e * c)  # overflow slot dropped
+
+    buf = jnp.zeros((e * c + 1, d), cfg.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+    buf = buf[:-1].reshape(e, c, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, params["up"]
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, params["down"]).reshape(e * c, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)])  # overflow reads 0
+
+    gathered = out[slot] * (flat_p * keep)[:, None].astype(out.dtype)
+    y = jnp.zeros((t, d), cfg.dtype).at[tok_idx].add(gathered)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], xt)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel dispatch (shard_map) — §Perf hillclimb
+# ---------------------------------------------------------------------------
+#
+# The baseline scatter above is written on GLOBAL shapes; its data-dependent
+# scatter indices block the SPMD partitioner, so XLA replicates the dispatch
+# and every chip computes (up to) the full global expert batch. Here the
+# routing is made explicitly local: each (data, model) shard routes ITS tokens
+# to ITS E/M experts and the only cross-chip combine is one psum of the
+# (b_loc, s, d) output over the model axis — the same all-reduce tensor
+# parallelism already pays for the dense layers.
+
+def moe_forward_ep(params, x: jnp.ndarray, cfg: ModelConfig, rules: ShardRules):
+    """Expert-parallel MoE. x: (b, s, d) with batch sharded over rules.batch,
+    expert weights sharded over rules.model_axis. Requires rules.mesh."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = rules.mesh
+    m_axis = rules.model_axis
+    e_total = cfg.n_experts
+    m_size = mesh.shape[m_axis]
+    e_loc = e_total // m_size
+    all_axes = tuple(rules.batch_axes) + (m_axis,)
+
+    def local(x_loc, router, gate_w, up_w, down_w):
+        b_loc, s, d = x_loc.shape
+        t = b_loc * s
+        k = cfg.top_k
+        xt = x_loc.reshape(t, d)
+        logits = (xt.astype(jnp.float32) @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        me = jnp.mean(probs, axis=0)
+        ce_cnt = jnp.zeros((e_total,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+        aux = e_total * jnp.sum(me * ce_cnt)
+        # x is replicated over the model axis, so aux only varies over batch
+        aux = jax.lax.pmean(aux, tuple(rules.batch_axes))
+
+        c = capacity(cfg, t)
+        flat_e = top_e.reshape(-1)
+        flat_p = top_p.reshape(-1)
+        tok_idx = jnp.repeat(jnp.arange(t), k)
+        one_hot = jax.nn.one_hot(flat_e, e_total, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(one_hot, axis=0) - 1
+        pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+
+        # local experts on this model shard: [m_idx*e_loc, (m_idx+1)*e_loc)
+        m_idx = jax.lax.axis_index(m_axis)
+        local_e = flat_e - m_idx * e_loc
+        keep = (pos < c) & (local_e >= 0) & (local_e < e_loc)
+        slot = jnp.where(keep, local_e * c + pos, e_loc * c)
+
+        buf = jnp.zeros((e_loc * c + 1, d), cfg.dtype)
+        buf = buf.at[slot].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+        buf = buf[:-1].reshape(e_loc, c, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate_w)) * jnp.einsum(
+            "ecd,edf->ecf", buf, up_w
+        )
+        out = jnp.einsum("ecf,efd->ecd", h, down_w).reshape(e_loc * c, d)
+        out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)])
+        gathered = out[slot] * (flat_p * keep)[:, None].astype(out.dtype)
+        y = jnp.zeros((t, d), cfg.dtype).at[tok_idx].add(gathered)
+        # combine contributions from all expert shards
+        y = jax.lax.psum(y, m_axis)
+        return y.reshape(b_loc, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+
+    bspec = rules.batch
+    y, aux = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None),
+            P(None, None),
+            P(m_axis, None, None),
+            P(m_axis, None, None),
+            P(m_axis, None, None),
+        ),
+        out_specs=(P(bspec, None, None), P()),
+    )(x, params["router"], params["gate"], params["up"], params["down"])
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x.reshape(-1, x.shape[-1])).reshape(x.shape)
+    return y, aux

@@ -1,0 +1,96 @@
+"""Single-source-of-truth parameter declarations.
+
+Every module declares its parameters as a pytree of :class:`ParamDecl`; the
+same tree then yields
+
+- concrete parameters          (:func:`materialize`, seeded per-path),
+- ``PartitionSpec`` tree       (:func:`specs`) for pjit in/out shardings,
+- ``ShapeDtypeStruct`` tree    (:func:`abstract`) for the AOT dry-run,
+
+so shapes, shardings, and init can never drift apart.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    spec: Any  # PartitionSpec
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "scaled:<fan_in>"
+    dtype: Any = jnp.float32
+    scale: float = 1.0
+
+    def stacked(self, n: int, stack_spec_axis=None) -> "ParamDecl":
+        """Prepend a layer axis (for lax.scan over stacked blocks)."""
+        spec = P(stack_spec_axis, *self.spec) if self.spec is not None else None
+        return ParamDecl((n, *self.shape), spec, self.init, self.dtype, self.scale)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _tree_map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_decl)
+
+
+def materialize(decls, key: jax.Array, path: str = ""):
+    """Instantiate parameters; each leaf key is derived from its tree path so
+    results are independent of traversal order."""
+    flat = jax.tree_util.tree_flatten_with_path(decls, is_leaf=is_decl)[0]
+    treedef = jax.tree_util.tree_structure(decls, is_leaf=is_decl)
+    leaves = []
+    for kp, d in flat:
+        pathstr = path + jax.tree_util.keystr(kp)
+        digest = int.from_bytes(hashlib.sha256(pathstr.encode()).digest()[:4], "big")
+        k = jax.random.fold_in(key, digest)
+        if d.init == "zeros":
+            leaves.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            leaves.append(jnp.ones(d.shape, d.dtype))
+        elif d.init == "normal":
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            std = d.scale / np.sqrt(fan_in)
+            leaves.append((jax.random.normal(k, d.shape) * std).astype(d.dtype))
+        elif d.init == "std":
+            # direct standard deviation (scale IS the std)
+            leaves.append((jax.random.normal(k, d.shape) * d.scale).astype(d.dtype))
+        elif d.init == "ssm_a":
+            # mamba2 A init: A = -exp(a_log), a ~ U[1, 16]
+            a = jax.random.uniform(k, d.shape, minval=1.0, maxval=16.0)
+            leaves.append(jnp.log(a).astype(d.dtype))
+        elif d.init == "ssm_dt":
+            # dt bias: softplus^-1 of U[1e-3, 1e-1]
+            dt = jax.random.uniform(k, d.shape, minval=1e-3, maxval=1e-1)
+            leaves.append(jnp.log(jnp.expm1(dt)).astype(d.dtype))
+        else:
+            raise ValueError(f"unknown init {d.init}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def specs(decls):
+    """PartitionSpec pytree with the same structure as the parameters."""
+    return _tree_map(lambda d: d.spec if d.spec is not None else P(), decls)
+
+
+def abstract(decls):
+    """ShapeDtypeStruct pytree (no allocation) — dry-run input."""
+    return _tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls)
+
+
+def stack_decls(decls, n: int):
+    """Stack every decl with a leading layer axis (for scanned blocks)."""
+    return _tree_map(lambda d: d.stacked(n), decls)
+
+
+def param_count(decls) -> int:
+    return int(sum(np.prod(d.shape) for d in jax.tree_util.tree_leaves(decls, is_leaf=is_decl)))

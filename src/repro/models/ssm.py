@@ -1,0 +1,225 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (the paper's "minimal SSD"):
+quadratic attention-like computation inside chunks of length Q, a linear
+recurrence across chunk states — O(S·Q) instead of O(S^2), scan-friendly and
+TPU-native (all chunk ops are MXU matmuls).
+
+Decode is the O(1)-per-token recurrent update on the (H, P, N) state — this is
+why the SSM archs run ``long_500k`` natively.
+
+Convention: G (ssm groups) = 1, B/C shared across heads within the group.
+The depthwise causal conv runs over the packed (x, B, C) channels as in
+Mamba2; decode keeps a (W-1)-deep shift register.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardRules
+from repro.models.param import ParamDecl
+
+
+def ssm_decl(cfg: ModelConfig, rules: ShardRules) -> dict:
+    d, di, n, h, w = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_conv_width
+    di_spec, h_spec = rules.tp(di), rules.tp(h)
+    return {
+        "w_z": ParamDecl((d, di), P(None, di_spec), "normal", cfg.dtype),
+        "w_x": ParamDecl((d, di), P(None, di_spec), "normal", cfg.dtype),
+        "w_b": ParamDecl((d, n), P(None, None), "normal", cfg.dtype),
+        "w_c": ParamDecl((d, n), P(None, None), "normal", cfg.dtype),
+        "w_dt": ParamDecl((d, h), P(None, h_spec), "normal", cfg.dtype),
+        "dt_bias": ParamDecl((h,), P(h_spec), "ssm_dt", jnp.float32),
+        "a_log": ParamDecl((h,), P(h_spec), "ssm_a", jnp.float32),
+        "d_skip": ParamDecl((h,), P(h_spec), "ones", jnp.float32),
+        "conv_x": ParamDecl((w, di), P(None, di_spec), "normal", cfg.dtype, 0.5),
+        "conv_b": ParamDecl((w, n), P(None, None), "normal", cfg.dtype, 0.5),
+        "conv_c": ParamDecl((w, n), P(None, None), "normal", cfg.dtype, 0.5),
+        "norm": ParamDecl((di,), P(di_spec), "ones", cfg.dtype),
+        "w_out": ParamDecl((di, d), P(di_spec, None), "normal", cfg.dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (b, s, ch); w: (width, ch)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum_{j<k<=i} a_k."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (b, s, h, p)
+    dt: jnp.ndarray,  # (b, s, h)  (post-softplus)
+    a_log: jnp.ndarray,  # (h,)
+    b_in: jnp.ndarray,  # (b, s, n)
+    c_in: jnp.ndarray,  # (b, s, n)
+    chunk: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (h,)
+    abar = dt.astype(jnp.float32) * a  # (b, s, h)
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    bc = b_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    ac = abar.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)  # (b, h, nc, q)
+    a_cs = jnp.cumsum(ac, axis=-1)  # (b, h, nc, q)
+
+    # 1) intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(_segsum(ac))  # (b, h, nc, q, q)
+    scores = jnp.einsum("bcln,bcsn->bcls", cc, bc)  # (b, nc, q, q)
+    m = jnp.einsum("bcls,bhcls->bhcls", scores, l_mat)
+    # dt-weighted input enters the state: weight x by dt
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (b, nc, q, h, p)
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", m, xdt)
+
+    # 2) per-chunk states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)  # (b, h, nc, q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xdt)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])  # (b, h, nc)
+
+    def step(carry, inp):
+        st, dec = inp  # (b, h, p, n), (b, h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # 4) inter-chunk outputs
+    state_decay = jnp.exp(a_cs)  # (b, h, nc, q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(params, x: jnp.ndarray, cfg: ModelConfig, *, return_state: bool = False):
+    """Full Mamba2 block body (pre-norm residual handled by caller).
+
+    x: (b, s, d) -> (b, s, d); with return_state also the decode-ready
+    {"ssm": (b,h,p,n), "conv": (b,w-1,ch)} cache.
+    """
+    h, p, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ params["w_z"]
+    xs_raw = x @ params["w_x"]
+    bb_raw = x @ params["w_b"]
+    cb_raw = x @ params["w_c"]
+    dt_raw = x @ params["w_dt"]
+
+    xs = jax.nn.silu(_causal_conv(xs_raw, params["conv_x"]))
+    bb = jax.nn.silu(_causal_conv(bb_raw, params["conv_b"]))
+    cb = jax.nn.silu(_causal_conv(cb_raw, params["conv_c"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    bsz, s, _ = x.shape
+    xh = xs.reshape(bsz, s, h, p)
+    y, final_state = ssd_chunked(xh, dt, params["a_log"], bb, cb, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, h * p).astype(x.dtype)
+
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) * params["norm"]
+    out = y @ params["w_out"]
+    if return_state:
+        w = cfg.ssm_conv_width
+        packed = jnp.concatenate([xs_raw, bb_raw, cb_raw], axis=-1)  # pre-conv
+        tail = packed[:, -(w - 1):, :]
+        return out, {"ssm": final_state, "conv": tail.astype(x.dtype)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) recurrent update
+# ---------------------------------------------------------------------------
+
+def ssm_decode(params, x: jnp.ndarray, state: dict, cfg: ModelConfig):
+    """Single-token step. x: (b, 1, d); state = {"ssm": (b,h,p,n), "conv": (b,w-1,ch)}."""
+    h, p, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    bsz = x.shape[0]
+    xt = x[:, 0, :]
+    z = xt @ params["w_z"]
+    packed = jnp.concatenate(
+        [xt @ params["w_x"], xt @ params["w_b"], xt @ params["w_c"]], axis=-1
+    )  # (b, ch)
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_b"], params["conv_c"]], axis=1)
+    hist = jnp.concatenate([state["conv"], packed[:, None, :]], axis=1)  # (b, w, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xs, bb, cb = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+    new_conv = hist[:, 1:, :]
+
+    dt = jax.nn.softplus((xt @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"])  # (b, h)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (b, h)
+    xh = xs.reshape(bsz, h, p).astype(jnp.float32)
+    ssm = state["ssm"] * da[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bb.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cb.astype(jnp.float32), ssm)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, h * p).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) * params["norm"]
+    return (y @ params["w_out"])[:, None, :], {"ssm": ssm, "conv": new_conv}
+
+
+def ssm_ref_sequential(x, dt, a_log, b_in, c_in):
+    """Pure recurrence oracle for tests: O(S) loop, no chunking."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt * a)  # (b, h)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            x.transpose(1, 0, 2, 3),
+            dt.astype(jnp.float32).transpose(1, 0, 2),
+            b_in.astype(jnp.float32).transpose(1, 0, 2),
+            c_in.astype(jnp.float32).transpose(1, 0, 2),
+        ),
+    )
+    return ys.transpose(1, 0, 2, 3)

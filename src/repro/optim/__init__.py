@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (
+    AdamState,
+    Optimizer,
+    SGDState,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_schedule,
+    sgd,
+)

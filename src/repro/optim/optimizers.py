@@ -1,0 +1,141 @@
+"""Pure-JAX optimizers (no optax in the container): SGD(+momentum), Adam, AdamW.
+
+API mirrors optax's GradientTransformation so call-sites stay idiomatic:
+
+    opt = adamw(lr=3e-4, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr)
+
+
+def sgd(lr: float | Schedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else None
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state.momentum, grads)
+            if nesterov:
+                upd = jax.tree_util.tree_map(lambda m, g: -lr_t * (momentum * m + g), mom, grads)
+            else:
+                upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mom)
+            return upd, SGDState(step=step, momentum=mom)
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, SGDState(step=step, momentum=None)
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr: float | Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam; with weight_decay > 0 this is AdamW (decoupled decay)."""
+
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        z2 = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=z, nu=z2)
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd_leaf(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype if p is not None else u.dtype)
+
+        if weight_decay:
+            if params is None:
+                raise ValueError("adamw requires params for decoupled weight decay")
+            upd = jax.tree_util.tree_map(upd_leaf, mu, nu, params)
+        else:
+            upd = jax.tree_util.tree_map(lambda m, v: upd_leaf(m, v, None), mu, nu)
+            if params is not None:
+                upd = jax.tree_util.tree_map(
+                    lambda u, p: u.astype(p.dtype), upd, params
+                )
+        return upd, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Schedule, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, global_norm)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def linear_schedule(base_lr: float, total: int, end_frac: float = 0.0) -> Schedule:
+    def sched(step):
+        prog = jnp.clip(step.astype(jnp.float32) / max(total, 1), 0.0, 1.0)
+        return base_lr * (1 - (1 - end_frac) * prog)
+
+    return sched

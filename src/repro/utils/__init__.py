@@ -1,0 +1,10 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_mean,
+    tree_weighted_mean,
+    tree_allclose,
+)

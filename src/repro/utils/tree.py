@@ -1,0 +1,60 @@
+"""Small pytree helpers used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree."""
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (uses leaf dtype itemsize)."""
+    return int(
+        sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_mean(trees):
+    """Elementwise mean of a non-empty list of pytrees (FedAvg aggregation)."""
+    if not trees:
+        raise ValueError("tree_mean of empty list")
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / len(trees))
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of pytrees; weights normalised to sum 1 (FedAvg with sizes)."""
+    if not trees:
+        raise ValueError("tree_weighted_mean of empty list")
+    ws = np.asarray(weights, dtype=np.float64)
+    ws = ws / ws.sum()
+    acc = tree_scale(trees[0], float(ws[0]))
+    for t, w in zip(trees[1:], ws[1:]):
+        acc = tree_add(acc, tree_scale(t, float(w)))
+    return acc
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))

@@ -1,0 +1,53 @@
+"""DA baselines produce sane accuracies and expected orderings."""
+import numpy as np
+import pytest
+
+from repro.baselines import (
+    coral_baseline,
+    dann_mmd_baseline,
+    jda_baseline,
+    rf_tca_baseline,
+    source_only,
+    tca_baseline,
+)
+from repro.data import make_domains
+
+
+@pytest.fixture(scope="module")
+def suite():
+    doms = make_domains(3, 250, shift=1.0, seed=5)
+    return doms[:2], doms[2]
+
+
+def test_source_only_runs(suite):
+    s, t = suite
+    acc = source_only(s, t, seed=0)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_tca_variants_run(suite):
+    s, t = suite
+    for variant in ("vanilla", "r"):
+        acc = tca_baseline(s, t, gamma=1e-3, variant=variant, m=16)
+        assert 0.05 <= acc <= 1.0
+
+
+def test_rf_tca_close_to_r_tca(suite):
+    """Theorem 1 downstream: RF-TCA accuracy ~ R-TCA accuracy (same gamma)."""
+    s, t = suite
+    a_r = tca_baseline(s, t, gamma=1e-3, variant="r", m=16)
+    a_rf = rf_tca_baseline(s, t, gamma=1e-3, n_features=1024, m=16)
+    assert abs(a_r - a_rf) < 0.2, (a_r, a_rf)
+
+
+def test_coral_jda_dann_run(suite):
+    s, t = suite
+    assert 0.0 <= coral_baseline(s, t) <= 1.0
+    assert 0.0 <= jda_baseline(s, t, gamma=1e-3, iters=2) <= 1.0
+    assert 0.0 <= dann_mmd_baseline(s, t, steps=150) <= 1.0
+
+
+def test_adaptation_beats_chance(suite):
+    s, t = suite
+    acc = tca_baseline(s, t, gamma=1e-3, m=16)
+    assert acc > 1.0 / 5 + 0.05  # better than 5-class chance

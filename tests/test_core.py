@@ -1,0 +1,142 @@
+"""Core paper math: TCA variants, RF-TCA, MMD, Sherman-Morrison identities."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    centering_matrix,
+    ell_vector,
+    gaussian_kernel,
+    laplace_kernel,
+    message,
+    mmd_projected,
+    mmd_rff,
+    mmd_rkhs,
+    r_tca,
+    rf_tca,
+    rf_tca_fit,
+    rf_tca_transform,
+    solve_w_rf,
+    vanilla_tca,
+)
+from repro.core.rff import draw_omega, rff_features
+from repro.core.tca import r_tca_matrix
+
+
+@pytest.fixture(scope="module")
+def data(rng):
+    p, ns, nt = 8, 60, 40
+    xs = jnp.asarray(rng.normal(size=(p, ns)), jnp.float32)
+    xt = jnp.asarray(rng.normal(size=(p, nt)) + 1.0, jnp.float32)
+    x = jnp.concatenate([xs, xt], axis=1)
+    return xs, xt, x, ell_vector(ns, nt)
+
+
+def test_ell_vector_properties(data):
+    *_, ell = data
+    ns, nt = 60, 40
+    assert np.isclose(float(jnp.sum(ell)), 0.0, atol=1e-6)  # H l = l
+    assert np.isclose(float(ell @ ell), (ns + nt) / (ns * nt), rtol=1e-5)  # paper eq. (2)
+
+
+def test_centering_matrix_idempotent():
+    h = centering_matrix(10)
+    assert np.allclose(h @ h, h, atol=1e-6)
+
+
+def test_vanilla_tca_eigvals_descending(data):
+    _, _, x, ell = data
+    k = gaussian_kernel(x, 2.0)
+    res = vanilla_tca(k, ell, 1e-2, 6)
+    v = np.asarray(res.eigvals)
+    assert (np.diff(v) <= 1e-5).all()
+    assert res.features.shape == (6, 100)
+
+
+def test_sherman_morrison_form_matches_direct_inverse(data):
+    """Lemma 1: the rank-one corrected matrix equals the explicit inverse form."""
+    _, _, x, ell = data
+    k = np.asarray(gaussian_kernel(x, 2.0), np.float64)
+    ell = np.asarray(ell, np.float64)
+    gamma = 0.05
+    # direct: (gamma I + K ll^T K)^{-1} K H K -> top eigvecs of symmetric form
+    n = k.shape[0]
+    direct = np.linalg.inv(gamma * np.eye(n) + k @ np.outer(ell, ell) @ k)
+    u = k @ k @ ell
+    sm = (np.eye(n) - (k @ np.outer(ell, ell) @ k) / (gamma + ell @ k @ k @ ell)) / gamma
+    assert np.allclose(direct, sm, atol=1e-8)
+
+
+def test_r_tca_equals_generalized_eig(data):
+    """Eq. (22): A_R's top eigenspace == R-TCA solution."""
+    _, _, x, ell = data
+    k = gaussian_kernel(x, 2.0)
+    res = r_tca(k, ell, 1e-2, 4)
+    a_r = r_tca_matrix(k, ell, 1e-2)
+    vals = np.linalg.eigvalsh(np.asarray(a_r, np.float64))[::-1][:4]
+    assert np.allclose(np.asarray(res.eigvals), vals, rtol=1e-3)
+
+
+def test_rf_tca_reduces_projected_mmd(data):
+    xs, xt, x, ell = data
+    st = rf_tca_fit(xs, xt, n_features=256, m=8, gamma=1e-2, sigma=2.0, seed=0)
+    sig = rff_features(x, st.omega)
+    m_s = message(rff_features(xs, st.omega), +1.0)
+    m_t = message(rff_features(xt, st.omega), -1.0)
+    raw = mmd_rff(sig, ell)
+    proj = mmd_projected(st.w_rf, m_s, m_t)
+    assert float(proj) < 0.1 * float(raw)
+
+
+def test_rf_tca_out_of_sample(data):
+    xs, xt, *_ = data
+    st = rf_tca_fit(xs, xt, n_features=128, m=8, gamma=1e-2, sigma=2.0, seed=0)
+    f_new = rf_tca_transform(st, xs[:, :5])
+    assert f_new.shape == (8, 5)
+    assert np.isfinite(np.asarray(f_new)).all()
+
+
+def test_mmd_rkhs_vs_rff_agree(data):
+    _, _, x, ell = data
+    k = gaussian_kernel(x, 2.0)
+    omega = draw_omega(0, 4096, x.shape[0], sigma=2.0)
+    sig = rff_features(x, omega)
+    exact = float(mmd_rkhs(k, ell))
+    approx = float(mmd_rff(sig, ell))
+    assert abs(exact - approx) < 0.1 * abs(exact) + 1e-3
+
+
+def test_mmd_decomposability(data):
+    """Eq. (11): pair loss only needs the two 2N-float messages."""
+    xs, xt, x, ell = data
+    omega = draw_omega(1, 64, x.shape[0])
+    sig = rff_features(x, omega)
+    m_s = message(rff_features(xs, omega), +1.0)
+    m_t = message(rff_features(xt, omega), -1.0)
+    w = jnp.eye(128)
+    assert np.isclose(float(mmd_projected(w, m_s, m_t)), float(mmd_rff(sig, ell)), rtol=1e-4)
+
+
+def test_message_size_independent_of_n(data):
+    xs, xt, *_ = data
+    omega = draw_omega(0, 32, xs.shape[0])
+    m1 = message(rff_features(xs, omega), +1.0)
+    m2 = message(rff_features(xs[:, :7], omega), +1.0)
+    assert m1.shape == m2.shape == (64,)
+
+
+def test_solve_w_rf_constraint(data):
+    """W^T (Sigma H Sigma^T) W should be ~orthonormal on the top eigenspace."""
+    xs, xt, x, ell = data
+    omega = draw_omega(0, 64, x.shape[0], sigma=2.0)
+    sig = rff_features(x, omega)
+    w, vals = solve_w_rf(sig, ell, 1e-2, 4)
+    assert w.shape == (128, 4)
+    assert (np.diff(np.asarray(vals)) <= 1e-5).all()
+
+
+def test_laplace_kernel_psd(data):
+    _, _, x, _ = data
+    k = laplace_kernel(x, 2.0)
+    vals = np.linalg.eigvalsh(np.asarray(k, np.float64))
+    assert vals.min() > -1e-6

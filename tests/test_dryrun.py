@@ -1,0 +1,59 @@
+"""Dry-run machinery: roofline parsing units + one real (small) AOT combo in a
+subprocess with 512 forced host devices."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.roofline import Roofline, collective_bytes, model_flops
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %x = bf16[2048]{0} all-reduce(bf16[2048]{0} %p), replica_groups={}
+  %y = f32[16,128]{1,0} all-gather(f32[16,8]{1,0} %q), dimensions={1}
+  %z.1 = bf16[4,4]{1,0} reduce-scatter(bf16[16,4]{1,0} %r)
+  %w = (f32[8]{0}, f32[8]{0}) all-to-all(f32[8]{0} %a, f32[8]{0} %b)
+  %n = f32[9]{0} add(f32[9]{0} %c, f32[9]{0} %d)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 2048 * 2
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["reduce-scatter"] == 4 * 4 * 2
+    assert out["all-to-all"] == 8 * 4 * 2
+
+
+def test_roofline_terms():
+    r = Roofline(197e12, 819e9, 50e9, {})
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.dominant in ("compute", "memory", "collective")
+
+
+def test_model_flops():
+    assert model_flops(100, 10, "train") == 6000
+    assert model_flops(100, 10, "decode") == 2000
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo_subprocess(tmp_path):
+    """Smallest real combo: proves mesh + AOT machinery works end to end."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "smollm-135m", "--shape", "decode_32k",
+            "--mesh", "single", "--out", str(tmp_path),
+        ],
+        capture_output=True, text=True, env=env, timeout=570,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "smollm-135m_decode_32k_16x16.json"))
+    assert rec["kind"] == "decode"
+    assert rec["roofline"]["flops_per_chip"] > 0
+    assert rec["roofline"]["coll_bytes_per_chip"] > 0  # sharded => collectives exist

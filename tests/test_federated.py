@@ -1,0 +1,116 @@
+"""FedRF-TCA protocol: rounds, drop settings, communication accounting, voting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_domains
+from repro.federated import (
+    ClientConfig,
+    FedRFTCATrainer,
+    ProtocolConfig,
+    hard_vote,
+    plan_round,
+    sample_participants,
+)
+from repro.federated.model import accuracy, client_message, init_params, make_omega
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    return doms[:3], doms[3], cfg
+
+
+def test_round_plans_are_nested():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        plan = plan_round(rng, 6, "III")
+        assert set(plan.c_clients) <= set(plan.w_clients) <= set(plan.msg_clients)
+
+
+def test_sample_participants_range():
+    rng = np.random.default_rng(0)
+    sizes = {len(sample_participants(rng, 5)) for _ in range(200)}
+    assert sizes <= set(range(6)) and 0 in sizes and 5 in sizes
+
+
+def test_shared_seed_omega_identical():
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=16)
+    assert np.allclose(make_omega(cfg), make_omega(cfg))
+
+
+def test_protocol_runs_and_accounts_comm(small_setup):
+    sources, target, cfg = small_setup
+    proto = ProtocolConfig(n_rounds=5, t_c=2, warmup_rounds=2, batch_size=32, seed=0)
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    tr.train()
+    assert tr.comm.rounds == 5
+    # messages are 2N floats each: total must be a multiple of 2N
+    assert tr.comm.data_messages % (2 * cfg.n_rff) == 0
+    # communication is independent of the sample size: rerun with 4x data
+    doms_big = make_domains(4, 480, shift=0.5, seed=1, dim=8, n_classes=3)
+    tr2 = FedRFTCATrainer(doms_big[:3], doms_big[3], cfg, proto)
+    tr2.train()
+    assert tr2.comm.data_messages == tr.comm.data_messages  # O(KN), not O(Kn)
+
+
+def test_drop_settings_all_run(small_setup):
+    sources, target, cfg = small_setup
+    for setting in ("I", "II", "III"):
+        proto = ProtocolConfig(
+            n_rounds=3, t_c=2, warmup_rounds=1, batch_size=32, drop_setting=setting, seed=0
+        )
+        tr = FedRFTCATrainer(sources, target, cfg, proto)
+        acc = tr.train(eval_every=3)
+        assert 0.0 <= acc[-1] <= 1.0
+
+
+def test_no_message_ablation(small_setup):
+    sources, target, cfg = small_setup
+    proto = ProtocolConfig(
+        n_rounds=3, warmup_rounds=1, batch_size=32, exchange_messages=False, seed=0
+    )
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    tr.train()
+    assert tr.comm.data_messages == 0
+
+
+def test_hard_vote_majority():
+    logits = np.zeros((3, 4, 5))
+    logits[0, :, 1] = 9  # client 0 votes class 1
+    logits[1, :, 1] = 8  # client 1 votes class 1
+    logits[2, :, 2] = 9  # client 2 votes class 2
+    assert (hard_vote(logits) == 1).all()
+
+
+def test_hard_vote_tiebreak_by_logits():
+    logits = np.zeros((2, 1, 3))
+    logits[0, 0, 0] = 5.0
+    logits[1, 0, 1] = 6.0
+    assert hard_vote(logits)[0] == 1  # tie 1-1, summed logits favor class 1
+
+
+def test_one_shot_hard_voting_eval(small_setup):
+    sources, target, cfg = small_setup
+    proto = ProtocolConfig(
+        n_rounds=3, warmup_rounds=2, batch_size=32, aggregate_classifier=False, seed=0
+    )
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    acc = tr.train(eval_every=3)
+    assert 0.0 <= acc[-1] <= 1.0
+
+
+def test_adaptation_beats_no_adaptation_on_shifted_domains():
+    """End-to-end paper claim at small scale: FedRF-TCA > no-MMD ablation."""
+    doms = make_domains(5, 300, shift=1.2, seed=3)
+    cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
+    proto = ProtocolConfig(n_rounds=120, t_c=25, warmup_rounds=150, lr=5e-3, seed=0)
+    tr = FedRFTCATrainer(doms[:4], doms[4], cfg, proto)
+    with_mmd = tr.train(eval_every=120)[-1]
+    proto_off = ProtocolConfig(
+        n_rounds=120, t_c=25, warmup_rounds=150, lr=5e-3, exchange_messages=False, seed=0
+    )
+    tr2 = FedRFTCATrainer(doms[:4], doms[4], cfg, proto_off)
+    without = tr2.train(eval_every=120)[-1]
+    assert with_mmd > without + 0.03, (with_mmd, without)

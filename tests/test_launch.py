@@ -1,0 +1,76 @@
+"""Launch-layer units: input specs, cache pspecs, shape registry, drivers."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.specs import cache_pspecs, input_pspecs, input_specs
+from repro.models import LM, ShardRules
+
+RULES = ShardRules(model_size=16, batch_axes=("data",))
+
+
+def test_input_shapes_registry():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert INPUT_SHAPES["train_4k"].kind == "train"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_cover_model_inputs(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    # token/embedding input present
+    assert ("tokens" in specs) != cfg.embeddings_in
+    if shape.kind == "train":
+        assert "labels" in specs
+    if cfg.family == "vlm" and shape.kind != "decode":
+        assert "images" in specs
+    ps = input_pspecs(cfg, shape, RULES)
+    assert set(ps) == set(specs)
+
+
+def test_long500k_batch_not_sharded_but_cache_seq_is():
+    cfg = get_config("command-r-plus-104b")
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, attn_window=4096)
+    model = LM(cfg, RULES)
+    shape = INPUT_SHAPES["long_500k"]
+    cps = cache_pspecs(model, shape, RULES)
+    k_spec = cps["layers"]["k"]
+    assert k_spec[1] is None  # batch=1 can't shard
+    assert k_spec[2] == "data"  # cache sequence context-parallel over data
+
+
+def test_decode32k_batch_sharded():
+    cfg = get_config("internlm2-1.8b")
+    model = LM(cfg, RULES)
+    cps = cache_pspecs(model, INPUT_SHAPES["decode_32k"], RULES)
+    assert cps["layers"]["k"][1] == "data"
+    assert cps["layers"]["k"][2] is None
+
+
+def test_train_driver_reduced_loss_decreases():
+    from repro.launch import train as train_mod
+
+    out = train_mod.main(
+        ["--arch", "smollm-135m", "--reduced", "--steps", "30", "--batch", "4",
+         "--seq", "64", "--clients", "2", "--log-every", "30"]
+    )
+    assert out["last"] < out["first"] + 0.5  # noisy but sane
+
+
+def test_mla_cache_is_compressed():
+    """MLA decode cache must be (r + rope) per token, not kv*heads*hd."""
+    cfg = get_config("deepseek-v2-lite-16b")
+    model = LM(cfg, RULES)
+    shapes = model.cache_shapes(1, 1000)
+    per_tok_mla = shapes["layers"]["c"][-1] + shapes["layers"]["kr"][-1]
+    per_tok_gqa = cfg.n_kv_heads * cfg.hd * 2
+    assert per_tok_mla == cfg.kv_lora_rank + cfg.rope_head_dim  # 576
+    assert per_tok_mla < per_tok_gqa / 7  # the MLA memory win

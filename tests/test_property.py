@@ -1,0 +1,140 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kernels_math import centering_matrix, ell_vector, gaussian_kernel
+from repro.core.mmd import message, mmd_projected
+from repro.core.rff import draw_omega, rff_features
+from repro.federated.aggregation import hard_vote
+from repro.models.layers import cross_entropy
+from repro.utils.tree import tree_mean, tree_weighted_mean
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(ns=st.integers(1, 50), nt=st.integers(1, 50))
+@settings(**SETTINGS)
+def test_ell_vector_invariants(ns, nt):
+    ell = np.asarray(ell_vector(ns, nt))
+    assert np.isclose(ell.sum(), 0.0, atol=1e-5)
+    assert np.isclose(ell @ ell, (ns + nt) / (ns * nt), rtol=1e-4)
+    # H l = l (centering leaves ell invariant)
+    h = np.asarray(centering_matrix(ns + nt))
+    assert np.allclose(h @ ell, ell, atol=1e-6)
+
+
+@given(
+    p=st.integers(2, 10), n=st.integers(2, 30), nf=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_rff_gram_is_psd_and_diag_one(p, n, nf, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(p, n)), jnp.float32)
+    om = draw_omega(seed, nf, p)
+    s = rff_features(x, om)
+    g = np.asarray(s.T @ s, np.float64)
+    vals = np.linalg.eigvalsh(0.5 * (g + g.T))
+    assert vals.min() > -1e-5  # PSD
+    # diag of Sigma^T Sigma == ||phi(x)||^2 == (cos^2+sin^2 summed)/N == 1
+    assert np.allclose(np.diag(g), 1.0, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 20))
+@settings(**SETTINGS)
+def test_gaussian_kernel_range(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, n)), jnp.float32)
+    k = np.asarray(gaussian_kernel(x, 1.5))
+    assert (k <= 1.0 + 1e-6).all() and (k >= 0.0).all()
+    assert np.allclose(np.diag(k), 1.0, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_message_scale_invariance_in_n(seed):
+    """Duplicating every sample leaves the message unchanged (it's a mean)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 10)), jnp.float32)
+    om = draw_omega(0, 8, 4)
+    m1 = message(rff_features(x, om), 1.0)
+    x2 = jnp.concatenate([x, x], axis=1)
+    m2 = message(rff_features(x2, om), 1.0)
+    assert np.allclose(m1, m2, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_mmd_projected_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    assert float(mmd_projected(w, a, b)) >= 0.0
+
+
+@given(k=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_fedavg_idempotent_on_identical_models(k, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)}
+    avg = tree_mean([tree] * k)
+    assert np.allclose(avg["a"], tree["a"], atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_weighted_mean_convexity(seed):
+    rng = np.random.default_rng(seed)
+    a = {"x": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    b = {"x": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    out = tree_weighted_mean([a, b], [3.0, 1.0])["x"]
+    lo = np.minimum(a["x"], b["x"]) - 1e-6
+    hi = np.maximum(a["x"], b["x"]) + 1e-6
+    assert ((out >= lo) & (out <= hi)).all()
+
+
+@given(
+    k=st.integers(1, 7), n=st.integers(1, 10), c=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_hard_vote_unanimous(k, n, c, seed):
+    rng = np.random.default_rng(seed)
+    cls = rng.integers(0, c, size=n)
+    logits = rng.normal(size=(k, n, c)) * 0.01
+    logits[:, np.arange(n), cls] += 10.0  # every client agrees
+    assert (hard_vote(logits) == cls).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), v=st.integers(5, 50), pad=st.integers(0, 16))
+@settings(**SETTINGS)
+def test_cross_entropy_padding_invariant(seed, v, pad):
+    """Padded vocab entries must not change the loss."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, 3, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(2, 3)))
+    base = float(cross_entropy(logits, labels, v))
+    padded = jnp.concatenate(
+        [logits, jnp.asarray(rng.normal(size=(2, 3, pad)), jnp.float32)], axis=-1
+    )
+    withpad = float(cross_entropy(padded, labels, v))
+    assert np.isclose(base, withpad, atol=1e-3)
+    assert base >= 0.0
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_row_stochastic(seed):
+    """Attention output of constant-V must be constant (softmax sums to 1)."""
+    from repro.models.attention import flash_attention
+
+    key = jax.random.PRNGKey(seed % (2**31))
+    q = jax.random.normal(key, (1, 16, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 16, 2, 8))
+    v = jnp.ones((1, 16, 2, 8))
+    out = flash_attention(q, k, v, causal=True)
+    assert np.allclose(np.asarray(out), 1.0, atol=1e-5)

@@ -1,0 +1,45 @@
+"""Empirical validation of Theorem 2 / Corollary 1 / Theorem 1 trends."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ell_vector
+from repro.core.theory import (
+    corollary1_error,
+    kernel_approx_error,
+    required_features,
+    theorem1_feature_error,
+)
+
+
+@pytest.fixture(scope="module")
+def x(rng):
+    return jnp.asarray(rng.normal(size=(8, 80)), jnp.float32)
+
+
+def test_theorem2_error_decays_with_n(x):
+    errs = [np.mean([kernel_approx_error(x, n, 2.0, s) for s in range(3)]) for n in (32, 256, 2048)]
+    assert errs[0] > errs[1] > errs[2]
+    # Theorem 2 rate: eps ~ 1/sqrt(N) -> 8x N => ~2.8x error drop (allow slack)
+    assert errs[0] / errs[2] > 3.0
+
+
+def test_corollary1_error_decays(x):
+    ell = ell_vector(50, 30)
+    errs = [corollary1_error(x, ell, 1e-2, n, 2.0, 0) for n in (32, 512)]
+    assert errs[1] < errs[0]
+
+
+def test_theorem1_feature_error_decays(x):
+    ell = ell_vector(50, 30)
+    errs = [
+        np.mean([theorem1_feature_error(x, ell, 1e-2, 2, n, 2.0, s) for s in range(3)])
+        for n in (64, 4096)
+    ]
+    assert errs[1] < errs[0]
+
+
+def test_required_features_scaling(x):
+    n1 = required_features(x, 2.0, 0.5)
+    n2 = required_features(x, 2.0, 0.25)
+    assert np.isclose(n2 / n1, 4.0, rtol=1e-3)  # 1/eps^2 scaling
