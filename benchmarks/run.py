@@ -5,6 +5,11 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run --only fig3,table2
+
+The ``fig3`` bench additionally writes ``BENCH_rf_tca.json`` at the repo root
+(fit wall-times dense/stream/lobpcg, speedups, peak-memory proxy, round-engine
+per-round times, accuracies) — the machine-readable perf record tracked
+across PRs.
 """
 from __future__ import annotations
 

@@ -7,6 +7,15 @@ from repro.core.kernels_math import (
     laplace_kernel,
 )
 from repro.core.mmd import message, mmd_projected, mmd_projected_multi, mmd_rff, mmd_rkhs
-from repro.core.rf_tca import RFTCAState, rf_tca, rf_tca_fit, rf_tca_transform, solve_w_rf
+from repro.core.rf_tca import (
+    RFTCAState,
+    rf_tca,
+    rf_tca_fit,
+    rf_tca_transform,
+    solve_w_rf,
+    solve_w_rf_cholesky,
+    solve_w_rf_gram,
+    streaming_gram,
+)
 from repro.core.rff import draw_omega, rff_features, rff_features_rows, rff_message
 from repro.core.tca import TCAResult, r_tca, vanilla_tca

@@ -38,7 +38,22 @@ def mmd_projected(w_rf: jnp.ndarray, msg_s: jnp.ndarray, msg_t: jnp.ndarray) -> 
     return v @ v
 
 
-def mmd_projected_multi(w_rf: jnp.ndarray, msgs_s: jnp.ndarray, msg_t: jnp.ndarray) -> jnp.ndarray:
-    """Mean of per-pair losses over K source messages msgs_s (K, 2N)."""
+def mmd_projected_multi(
+    w_rf: jnp.ndarray,
+    msgs_s: jnp.ndarray,
+    msg_t: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Mean of per-pair losses over K source messages msgs_s (K, 2N).
+
+    ``weights`` (K,) masks/weights the pairs (mean over weight mass) — this is
+    how the batched round engine expresses "messages from clients outside S_t
+    were dropped" inside one compiled program.  With no weight mass the loss
+    is 0 (no messages arrived, Alg. 3 performs no MMD step).
+    """
     v = (msgs_s + msg_t[None, :]) @ w_rf  # (K, m)
-    return jnp.mean(jnp.sum(v * v, axis=1))
+    per_pair = jnp.sum(v * v, axis=1)
+    if weights is None:
+        return jnp.mean(per_pair)
+    w = weights.astype(per_pair.dtype)
+    return jnp.sum(w * per_pair) / jnp.maximum(jnp.sum(w), 1e-9)

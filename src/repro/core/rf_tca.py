@@ -7,23 +7,57 @@ Finds ``W_RF in R^{2N x m}`` as the top-m eigenvectors of
 a 2N x 2N problem instead of vanilla TCA's n x n one.  We solve the *symmetric
 definite generalized* eigenproblem
 
-    G_H w = lambda (gamma I + u u^T) w,     G_H = Sigma H Sigma^T,  u = Sigma l,
+    G_H w = lambda (gamma I + u u^T) w,     G_H = Sigma H Sigma^T,  u = Sigma l.
 
-via Cholesky whitening, which is numerically cleaner than the non-symmetric
-Sherman–Morrison product and mathematically identical.
+Two layers make the fit scale independently of the sample count n:
+
+**Statistics pass** (``mode``): the default ``"stream"`` path consumes X in
+sample blocks and accumulates G_H and u directly — via the fused Pallas kernel
+``kernels.ops.rff_gram_stream`` on TPU (``use_pallas=True``) or an XLA
+``lax.scan`` with the identical O(N^2 + N b) memory profile elsewhere.  The
+(2N, n) RFF matrix Sigma never exists.  ``mode="dense"`` is the original
+materializing path, kept as the benchmark baseline and small-n reference.
+
+**Solve** (``solver``): B = gamma I + u u^T is an identity-plus-rank-one, so
+its inverse square root has the closed Sherman–Morrison-style form
+
+    B^{-1/2} = gamma^{-1/2} (I + c uhat uhat^T),  c = sqrt(gamma/(gamma+|u|^2)) - 1,
+
+which replaces the Cholesky factorization + two triangular solves with two
+rank-one updates (O(N^2) instead of O(N^3)).  The whitened operator
+C = B^{-1/2} G_H B^{-1/2} is then diagonalized by:
+
+- ``solver="eigh"``   — direct symmetric eigendecomposition.  When running
+  outside jit with SciPy available, only the top-m eigenpairs are computed
+  (LAPACK ``syevr`` subset — much cheaper than a full ``eigh``).  Best up to
+  2N ~ a few thousand; bitwise-deterministic.
+- ``solver="lobpcg"`` — matrix-free top-m LOBPCG
+  (``jax.experimental.sparse.linalg.lobpcg_standard``) that only applies
+  C·v products (O(N^2 m) per iteration).  Pick this when 2N is large enough
+  that an O((2N)^3) factorization dominates (2N >~ 4096) or on accelerators
+  where the full eigh does not parallelize.  Falls back to ``eigh`` when
+  5m >= 2N (the LOBPCG search block would not fit).
+- ``solver="cholesky"`` — the original Cholesky-whitening + full ``eigh``
+  reference path (seed implementation), kept for benchmarking.
 
 Unlike vanilla TCA (transductive), RF-TCA yields an *out-of-sample* map:
 ``transform(X_new) = W_RF^T Sigma(X_new)`` — this is what FedRF-TCA exploits.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import functools
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.kernels_math import ell_vector
 from repro.core.rff import draw_omega, rff_features
+
+try:  # SciPy is optional: only used for the host-side subset-eigh fast path
+    from scipy.linalg import eigh as _scipy_eigh
+except ImportError:  # pragma: no cover - container always ships SciPy
+    _scipy_eigh = None
 
 
 class RFTCAState(NamedTuple):
@@ -32,14 +66,99 @@ class RFTCAState(NamedTuple):
     eigvals: jnp.ndarray  # (m,)
 
 
-def solve_w_rf(
-    sigma: jnp.ndarray, ell: jnp.ndarray, gamma: float, m: int, *, use_kernel: bool = False
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-m solution of (7) given the RFF matrix Sigma (2N, n).
+# --------------------------------------------------------------------------
+# statistics pass: (G_H, u) from data, streaming or dense
+# --------------------------------------------------------------------------
 
-    Returns (w_rf (2N, m), eigvals (m,)).
+
+def _gram_stream_body(x: jnp.ndarray, ell: jnp.ndarray, omega: jnp.ndarray, *, block: int):
+    """lax.scan streaming accumulation of (G_H, u) — Sigma never materialized.
+
+    Mirrors the Pallas rff_gram_stream kernel's structure and memory profile
+    on backends where interpret-mode Pallas would be slow (CPU/GPU): per step
+    only an (N, block) cos and sin slab exists, plus (N, N) fp32 accumulators.
+    Accumulating the three blocks G_cc / G_cs / G_ss separately instead of the
+    concatenated (2N, block) slab saves the G_sc = G_cs^T quarter of the
+    contraction FLOPs and a per-step copy.
     """
-    two_n = sigma.shape[0]
+    p, n = x.shape
+    nf = omega.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    ep = jnp.pad(ell.astype(jnp.float32), (0, pad))
+    nb = (n + pad) // block
+    xb = xp.T.reshape(nb, block, p)
+    eb = ep.reshape(nb, block)
+    if pad:  # static: mask slabs only exist when sample columns are padded
+        mb = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad)).reshape(nb, block)
+    else:
+        mb = jnp.ones((nb, 1), jnp.float32)
+
+    def body(carry, inp):
+        cc, cs, ss, u_c, u_s, s_c, s_s = carry
+        xblk, elb, mkb = inp
+        z = (omega @ xblk.T).astype(jnp.float32)
+        # unscaled features; the 1/sqrt(N) normalization is folded into the
+        # final statistics (quadratic for G, linear for u and the column sum)
+        c = jnp.cos(z)
+        s = jnp.sin(z)
+        if pad:
+            c = c * mkb[None, :]  # zero out padded sample columns
+            s = s * mkb[None, :]
+        return (
+            cc + c @ c.T,
+            cs + c @ s.T,
+            ss + s @ s.T,
+            u_c + c @ elb,
+            u_s + s @ elb,
+            s_c + jnp.sum(c, axis=1),
+            s_s + jnp.sum(s, axis=1),
+        ), None
+
+    init = (
+        jnp.zeros((nf, nf), jnp.float32),
+        jnp.zeros((nf, nf), jnp.float32),
+        jnp.zeros((nf, nf), jnp.float32),
+        jnp.zeros((nf,), jnp.float32),
+        jnp.zeros((nf,), jnp.float32),
+        jnp.zeros((nf,), jnp.float32),
+        jnp.zeros((nf,), jnp.float32),
+    )
+    (cc, cs, ss, u_c, u_s, s_c, s_s), _ = jax.lax.scan(body, init, (xb, eb, mb))
+    inv2 = 1.0 / jnp.float32(nf)
+    g = inv2 * jnp.concatenate(
+        [jnp.concatenate([cc, cs], axis=1), jnp.concatenate([cs.T, ss], axis=1)], axis=0
+    )
+    inv = jnp.sqrt(inv2)
+    u = inv * jnp.concatenate([u_c, u_s])
+    col_sum = inv * jnp.concatenate([s_c, s_s])
+    g_h = g - jnp.outer(col_sum, col_sum) / n  # rank-one centering (H idempotent)
+    return 0.5 * (g_h + g_h.T), u
+
+
+_gram_stream_xla = jax.jit(_gram_stream_body, static_argnames=("block",))
+
+
+def streaming_gram(
+    x: jnp.ndarray,
+    ell: jnp.ndarray,
+    omega: jnp.ndarray,
+    *,
+    block: int = 1024,
+    use_pallas: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(G_H (2N, 2N), u (2N,)) fp32 from X (p, n) in one blocked pass."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.rff_gram_stream(x, omega, ell, block=min(128, max(8, block)))
+    return _gram_stream_xla(x, ell, omega, block=min(block, x.shape[1]))
+
+
+def _dense_gram(
+    sigma: jnp.ndarray, ell: jnp.ndarray, *, use_kernel: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Materializing reference: (G_H, u) from an explicit Sigma (2N, n)."""
     if use_kernel:
         from repro.kernels import ops as kops
 
@@ -48,13 +167,153 @@ def solve_w_rf(
         mu = jnp.mean(sigma, axis=1, keepdims=True)
         s_c = sigma - mu
         g_h = s_c @ s_c.T  # Sigma H Sigma^T  (H idempotent: SH(SH)^T = S H S^T)
-    g_h = 0.5 * (g_h + g_h.T)
-    u = sigma @ ell  # (2N,)
+    return 0.5 * (g_h + g_h.T), sigma @ ell
 
-    # B = gamma I + u u^T ;  Cholesky of a rank-one update computed directly.
+
+# --------------------------------------------------------------------------
+# solve: top-m of  G_H w = lambda (gamma I + u u^T) w
+# --------------------------------------------------------------------------
+
+
+def _whiten_half(u: jnp.ndarray, gamma: float) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Closed-form B^{-1/2} for B = gamma I + u u^T (identity plus rank one).
+
+    B has eigenvalue gamma + |u|^2 along uhat and gamma elsewhere, so
+    B^{-1/2} = gamma^{-1/2} (I + c uhat uhat^T) with
+    c = sqrt(gamma / (gamma + |u|^2)) - 1.  Applying it is two rank-one
+    updates, O(N k) for a (2N, k) block — no Cholesky, no triangular solves.
+    """
+    uu = u @ u
+    c = jnp.sqrt(gamma / (gamma + uu)) - 1.0
+    uhat = u * jax.lax.rsqrt(uu + 1e-30)
+    inv_sqrt_gamma = jax.lax.rsqrt(jnp.asarray(gamma, u.dtype))
+
+    def apply(v: jnp.ndarray) -> jnp.ndarray:
+        return (v + c * jnp.outer(uhat, uhat @ v)) * inv_sqrt_gamma
+
+    return apply
+
+
+@jax.jit
+def _whitened_cmat(g_h: jnp.ndarray, u: jnp.ndarray, gamma) -> jnp.ndarray:
+    """C = B^{-1/2} G_H B^{-1/2} via two rank-one whitening passes (jitted)."""
+    bihalf = _whiten_half(u, gamma)
+    cmat = bihalf(bihalf(g_h).T)
+    return 0.5 * (cmat + cmat.T)
+
+
+def _solve_whitened_top_m(g_h, u, gamma, key, *, m: int, iters: int, tol):
+    """Traceable top-m of the whitened operator: matrix-free LOBPCG when the
+    [X, R, P] search block fits (5m < 2N — jax's lobpcg_standard rejects
+    5k >= n), symmetric eigh otherwise.  The single home of that guard."""
+    bihalf = _whiten_half(u, gamma)
+    if 5 * m < g_h.shape[0]:
+        from jax.experimental.sparse.linalg import lobpcg_standard
+
+        def matvec(v):
+            return bihalf(g_h @ bihalf(v))
+
+        x0 = jax.random.normal(key, (g_h.shape[0], m), g_h.dtype)
+        vals, vecs, _ = lobpcg_standard(matvec, x0, m=iters, tol=tol)
+    else:
+        vals, vecs = _top_eigh(_whitened_cmat(g_h, u, gamma), m)
+    return bihalf(vecs), vals
+
+
+_lobpcg_solve = functools.partial(
+    jax.jit, static_argnames=("m", "iters", "tol")
+)(_solve_whitened_top_m)
+
+
+def _host_top_eigh(cmat, *, m: int):
+    """Host-side LAPACK subset eigendecomposition (syevr): top-m pairs only."""
+    import numpy as np
+
+    two_n = cmat.shape[0]
+    vals, vecs = _scipy_eigh(
+        np.asarray(cmat, np.float32), subset_by_index=[two_n - m, two_n - 1]
+    )
+    return (
+        np.ascontiguousarray(vals[::-1]).astype(np.float32),
+        np.ascontiguousarray(vecs[:, ::-1]).astype(np.float32),
+    )
+
+
+def _top_eigh(cmat, m: int):
+    """Top-m (vals desc, vecs) of a symmetric matrix.
+
+    With SciPy present this routes to the LAPACK subset driver (syevr),
+    which only back-transforms the m requested eigenvectors and is several
+    times faster than a full ``eigh`` at bench sizes.  On concrete arrays
+    SciPy is called directly AFTER the XLA program has finished — running it
+    as an in-program callback stalls it badly (XLA's spin-waiting worker
+    threads starve the single-threaded LAPACK call).  Under tracing it
+    becomes a ``pure_callback``; without SciPy: full jnp eigh.
+    """
+    two_n = cmat.shape[0]
+    if _scipy_eigh is not None:
+        if not isinstance(cmat, jax.core.Tracer):
+            import numpy as np
+
+            vals, vecs = _host_top_eigh(np.asarray(cmat), m=m)
+            return jnp.asarray(vals), jnp.asarray(vecs)
+        out_shapes = (
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((two_n, m), jnp.float32),
+        )
+        return jax.pure_callback(
+            functools.partial(_host_top_eigh, m=m), out_shapes, cmat.astype(jnp.float32)
+        )
+    vals, vecs = jnp.linalg.eigh(cmat)
+    return vals[::-1][:m], vecs[:, ::-1][:, :m]
+
+
+@jax.jit
+def _apply_whiten(u, gamma, vecs):
+    """w = B^{-1/2} vecs as one dispatch (the final back-transform)."""
+    return _whiten_half(u, gamma)(vecs)
+
+
+def solve_w_rf_gram(
+    g_h: jnp.ndarray,
+    u: jnp.ndarray,
+    gamma: float,
+    m: int,
+    *,
+    solver: str = "eigh",
+    lobpcg_iters: int = 100,
+    lobpcg_tol: float | None = None,
+    seed: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m solution of (7) from the streamed statistics (G_H, u).
+
+    Returns (w_rf (2N, m), eigvals (m,)).  See the module docstring for the
+    eigh-vs-lobpcg trade-off.
+    """
+    if solver == "lobpcg":
+        return _lobpcg_solve(
+            g_h, u, gamma, jax.random.PRNGKey(seed),
+            m=m, iters=lobpcg_iters, tol=lobpcg_tol,
+        )
+    if solver != "eigh":
+        raise ValueError(f"unknown solver {solver!r}")
+    cmat = _whitened_cmat(g_h, u, gamma)
+    vals, vecs = _top_eigh(cmat, m)
+    return _apply_whiten(u, gamma, vecs), vals
+
+
+def solve_w_rf_cholesky(
+    sigma: jnp.ndarray, ell: jnp.ndarray, gamma: float, m: int, *, use_kernel: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Original Cholesky-whitening + full-eigh reference (the seed dense path).
+
+    Kept verbatim as the benchmark baseline and a numerical cross-check for
+    the Sherman–Morrison solvers.
+    """
+    two_n = sigma.shape[0]
+    g_h, u = _dense_gram(sigma, ell, use_kernel=use_kernel)
     b = gamma * jnp.eye(two_n) + jnp.outer(u, u)
     l = jnp.linalg.cholesky(b)
-    # C = L^{-1} G_H L^{-T}
     li_g = jax.scipy.linalg.solve_triangular(l, g_h, lower=True)
     c = jax.scipy.linalg.solve_triangular(l, li_g.T, lower=True).T
     c = 0.5 * (c + c.T)
@@ -63,6 +322,74 @@ def solve_w_rf(
     vecs = vecs[:, ::-1][:, :m]
     w_rf = jax.scipy.linalg.solve_triangular(l.T, vecs, lower=False)
     return w_rf, vals
+
+
+def solve_w_rf(
+    sigma: jnp.ndarray,
+    ell: jnp.ndarray,
+    gamma: float,
+    m: int,
+    *,
+    use_kernel: bool = False,
+    solver: str = "eigh",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m solution of (7) given an explicit RFF matrix Sigma (2N, n).
+
+    Returns (w_rf (2N, m), eigvals (m,)).  ``solver="cholesky"`` reproduces
+    the original implementation; "eigh"/"lobpcg" use Sherman–Morrison
+    whitening (same eigenpairs, W B-orthonormal in both cases).
+    """
+    if solver == "cholesky":
+        return solve_w_rf_cholesky(sigma, ell, gamma, m, use_kernel=use_kernel)
+    g_h, u = _dense_gram(sigma, ell, use_kernel=use_kernel)
+    return solve_w_rf_gram(g_h, u, gamma, m, solver=solver)
+
+
+# --------------------------------------------------------------------------
+# public fit / transform
+# --------------------------------------------------------------------------
+
+
+def _draw_omega_traced(key, p: int, sigma, *, n_features: int, kernel: str):
+    if kernel == "gauss":
+        return jax.random.normal(key, (n_features, p)) / sigma
+    if kernel == "laplace":
+        return jax.random.cauchy(key, (n_features, p)) / sigma
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("n_features", "block", "kernel"))
+def _fit_stream_stats(
+    x_s, x_t, key, gamma, sigma, *, n_features: int, block: int, kernel: str
+):
+    """Streamed statistics as ONE compiled program: omega draw, blocked Gram
+    scan and Sherman–Morrison whitening fuse into (omega, C, u).  The top-m
+    eigensolve runs on the host afterwards (see _top_eigh for why it must not
+    be an in-program callback)."""
+    omega = _draw_omega_traced(key, x_s.shape[0], sigma, n_features=n_features, kernel=kernel)
+    x = jnp.concatenate([x_s, x_t], axis=1)
+    ell = ell_vector(x_s.shape[1], x_t.shape[1])
+    g_h, u = _gram_stream_body(x, ell, omega, block=block)
+    return omega, _whitened_cmat(g_h, u, gamma), u
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_features", "m", "block", "kernel", "lobpcg_iters", "lobpcg_tol")
+)
+def _fit_stream_lobpcg(
+    x_s, x_t, key, gamma, sigma,
+    *, n_features: int, m: int, block: int, kernel: str, lobpcg_iters: int, lobpcg_tol,
+):
+    """Fully-fused streamed fit with the matrix-free LOBPCG solve (no host
+    work at all — the right shape for accelerators and large 2N)."""
+    omega = _draw_omega_traced(key, x_s.shape[0], sigma, n_features=n_features, kernel=kernel)
+    x = jnp.concatenate([x_s, x_t], axis=1)
+    ell = ell_vector(x_s.shape[1], x_t.shape[1])
+    g_h, u = _gram_stream_body(x, ell, omega, block=block)
+    w_rf, vals = _solve_whitened_top_m(
+        g_h, u, gamma, jax.random.fold_in(key, 1), m=m, iters=lobpcg_iters, tol=lobpcg_tol
+    )
+    return omega, w_rf, vals
 
 
 def rf_tca_fit(
@@ -76,14 +403,52 @@ def rf_tca_fit(
     seed: int = 0,
     kernel: str = "gauss",
     use_pallas: bool = False,
+    mode: str = "stream",
+    solver: str = "eigh",
+    block: int = 1024,
 ) -> RFTCAState:
-    """Algorithm 1: fit W_RF on source (p, n_S) and target (p, n_T) data."""
+    """Algorithm 1: fit W_RF on source (p, n_S) and target (p, n_T) data.
+
+    mode="stream" (default) never materializes the (2N, n) RFF matrix;
+    mode="dense" is the original materializing path (solver "cholesky"
+    reproduces the seed implementation exactly).
+    """
+    if mode not in ("stream", "dense"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if solver not in ("eigh", "lobpcg", "cholesky"):
+        raise ValueError(f"unknown solver {solver!r}")
+    if mode == "stream" and solver == "cholesky":
+        raise ValueError(
+            'solver="cholesky" factorizes the explicit-Sigma path and requires '
+            'mode="dense"; the streaming solvers are "eigh" and "lobpcg"'
+        )
+    if mode == "stream" and not use_pallas:
+        key = jax.random.PRNGKey(seed)
+        blk = min(block, x_s.shape[1] + x_t.shape[1])
+        if solver == "lobpcg":
+            omega, w_rf, vals = _fit_stream_lobpcg(
+                x_s, x_t, key, gamma, sigma,
+                n_features=n_features, m=m, block=blk, kernel=kernel,
+                lobpcg_iters=100, lobpcg_tol=None,
+            )
+        else:
+            omega, cmat, u = _fit_stream_stats(
+                x_s, x_t, key, gamma, sigma,
+                n_features=n_features, block=blk, kernel=kernel,
+            )
+            vals, vecs = _top_eigh(cmat, m)
+            w_rf = _apply_whiten(u, gamma, vecs)
+        return RFTCAState(omega=omega, w_rf=w_rf, eigvals=vals)
     p = x_s.shape[0]
     omega = draw_omega(seed, n_features, p, sigma=sigma, kernel=kernel)
     x = jnp.concatenate([x_s, x_t], axis=1)
-    sig = rff_features(x, omega, use_kernel=use_pallas)
     ell = ell_vector(x_s.shape[1], x_t.shape[1])
-    w_rf, vals = solve_w_rf(sig, ell, gamma, m, use_kernel=use_pallas)
+    if mode == "stream":
+        g_h, u = streaming_gram(x, ell, omega, block=block, use_pallas=use_pallas)
+        w_rf, vals = solve_w_rf_gram(g_h, u, gamma, m, solver=solver, seed=seed)
+    else:
+        sig = rff_features(x, omega, use_kernel=use_pallas)
+        w_rf, vals = solve_w_rf(sig, ell, gamma, m, use_kernel=use_pallas, solver=solver)
     return RFTCAState(omega=omega, w_rf=w_rf, eigvals=vals)
 
 

@@ -1,4 +1,5 @@
 from repro.federated.aggregation import fedavg_classifier, fedavg_models, fedavg_w_rf, hard_vote
+from repro.federated.engine import BatchedRoundEngine, stack_trees, unstack_tree
 from repro.federated.model import (
     ClientConfig,
     accuracy,

@@ -1,0 +1,219 @@
+"""Batched federated round engine: one compiled dispatch per round.
+
+The serial simulator in ``protocol.py`` dispatches ``K x local_steps`` jitted
+calls per round from Python — faithful to the asynchronous protocol, but the
+Python/dispatch overhead grows linearly in the client count.  This engine
+expresses the same round body (Alg. 5) as a single jitted program:
+
+- per-client parameters/optimizer states are *stacked* along a leading K axis
+  (one pytree whose leaves are (K, ...) arrays);
+- source local steps run under ``jax.vmap`` across clients and ``lax.scan``
+  across local steps;
+- the round's drop plan (Table III) enters as 0/1 mask vectors: the MMD term
+  is gated per client, dropped messages carry zero weight in the target loss,
+  and aggregation assign-backs are ``where``-selected — the program itself is
+  identical every round, so XLA compiles it exactly once.
+
+What stays host-side by design: client sampling, drop-set construction and
+communication accounting (``network.py``) — the part the paper's robustness
+claims are about and XLA cannot express.
+
+Semantics vs the serial path: identical when every client participates (the
+equivalence test monkeypatches a full-participation plan and checks parameter
+trajectories match).  Under random drops the two paths consume client batch
+streams at different rates (the serial path skips message batches of dropped
+clients), so trajectories are statistically — not bitwise — equal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.federated.model import ClientConfig, client_message, source_loss, target_loss
+from repro.optim import apply_updates
+
+
+def stack_trees(trees: list):
+    """List of identically-structured pytrees -> one pytree of (K, ...) leaves."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, i: int):
+    """Row i of a stacked pytree (client i's parameters)."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def tree_where(pred, new, old):
+    """Leafwise jnp.where(pred, new, old) — traced-bool conditional assignment."""
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(pred, a, b), new, old)
+
+
+class BatchedRoundEngine:
+    """Compiled data plane for ``FedRFTCATrainer`` (one dispatch per round)."""
+
+    def __init__(
+        self,
+        cfg: ClientConfig,
+        opt,
+        omega: jnp.ndarray,
+        *,
+        exchange_messages: bool = True,
+        aggregate_w_rf: bool = True,
+        aggregate_classifier: bool = True,
+    ):
+        self.cfg, self.opt, self.omega = cfg, opt, omega
+        self.exchange_messages = exchange_messages
+        self.aggregate_w_rf = aggregate_w_rf
+        self.aggregate_classifier = aggregate_classifier
+        self._round = jax.jit(self._round_fn)
+        self._warmup = jax.jit(self._warmup_fn)
+
+    # -- building blocks ----------------------------------------------------
+
+    def _src_local_scan(self, src_p, src_o, xs, ys, mmd_mask, tgt_msg):
+        """lax.scan over local steps of a vmapped per-client Adam step.
+
+        xs: (L, K, p, b), ys: (L, K, b), mmd_mask: (K,) 0/1 floats.
+        """
+        cfg, omega, opt = self.cfg, self.omega, self.opt
+
+        def one_client(p, o, x, y, gate):
+            (_, aux), grads = jax.value_and_grad(
+                lambda pp: source_loss(pp, omega, x, y, tgt_msg, cfg, mmd_gate=gate),
+                has_aux=True,
+            )(p)
+            upd, o = opt.update(grads, o, p)
+            return apply_updates(p, upd), o, aux
+
+        def step(carry, xy):
+            ps, os = carry
+            x, y = xy
+            ps, os, _ = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0))(ps, os, x, y, mmd_mask)
+            return (ps, os), None
+
+        (src_p, src_o), _ = jax.lax.scan(step, (src_p, src_o), (xs, ys))
+        return src_p, src_o
+
+    # -- round body (Alg. 5) ------------------------------------------------
+
+    def _round_fn(
+        self,
+        src_p,
+        src_o,
+        tgt_p,
+        tgt_o,
+        xs,  # (L, K, p, b) source training batches
+        ys,  # (L, K, b)
+        x_msg,  # (K, p, mb) source message batches
+        xt_steps,  # (L, p, b) target training batches
+        xt_msg,  # (p, mb) target message batch
+        mmd_mask,  # (K,) 1.0 iff client in plan.msg_clients
+        w_mask,  # (K,) 1.0 iff client in plan.w_clients
+        c_mask,  # (K,) 1.0 iff client in plan.c_clients
+        do_clf,  # () bool: t % T_C == 0 this round
+    ):
+        cfg, omega, opt = self.cfg, self.omega, self.opt
+
+        # target broadcasts its message to the sources in S_t
+        tgt_msg = client_message(tgt_p, omega, xt_msg, -1.0)
+
+        # local source training (Alg. 2), MMD gated by S_t membership
+        gates = mmd_mask if self.exchange_messages else jnp.zeros_like(mmd_mask)
+        src_p, src_o = self._src_local_scan(src_p, src_o, xs, ys, gates, tgt_msg)
+
+        # local target training (Alg. 3) on the messages that arrived
+        if self.exchange_messages:
+            msgs = jax.vmap(lambda p, x: client_message(p, omega, x, +1.0))(src_p, x_msg)
+            any_msg = jnp.sum(mmd_mask) > 0
+
+            def tgt_step(carry, x):
+                p, o = carry
+                (_, _), grads = jax.value_and_grad(
+                    lambda pp: target_loss(pp, omega, x, msgs, cfg, weights=mmd_mask),
+                    has_aux=True,
+                )(p)
+                upd, o = opt.update(grads, o, p)
+                return (apply_updates(p, upd), o), None
+
+            (new_tgt_p, new_tgt_o), _ = jax.lax.scan(tgt_step, (tgt_p, tgt_o), xt_steps)
+            # if no source message arrived the target performs no step (serial
+            # semantics) — opt state must stay untouched too
+            tgt_p = tree_where(any_msg, new_tgt_p, tgt_p)
+            tgt_o = tree_where(any_msg, new_tgt_o, tgt_o)
+
+        # global aggregation (Alg. 4): W_RF over plan.w_clients + the target
+        if self.aggregate_w_rf:
+            have_w = jnp.sum(w_mask) > 0
+            w_avg = (jnp.einsum("k,kij->ij", w_mask, src_p["w_rf"]) + tgt_p["w_rf"]) / (
+                jnp.sum(w_mask) + 1.0
+            )
+            src_p["w_rf"] = jnp.where(
+                (w_mask > 0)[:, None, None] & have_w, w_avg[None], src_p["w_rf"]
+            )
+            tgt_p["w_rf"] = jnp.where(have_w, w_avg, tgt_p["w_rf"])
+
+        # classifier aggregation every T_C rounds over plan.c_clients
+        if self.aggregate_classifier:
+            have_c = do_clf & (jnp.sum(c_mask) > 0)
+            denom = jnp.maximum(jnp.sum(c_mask), 1.0)
+            c_avg = jax.tree_util.tree_map(
+                lambda leaf: jnp.tensordot(c_mask, leaf, axes=1) / denom,
+                src_p["classifier"],
+            )
+            assign = (c_mask > 0) & have_c
+            src_p["classifier"] = jax.tree_util.tree_map(
+                lambda avg, old: jnp.where(
+                    assign.reshape((-1,) + (1,) * (old.ndim - 1)), avg[None], old
+                ),
+                c_avg,
+                src_p["classifier"],
+            )
+            tgt_p["classifier"] = tree_where(have_c, c_avg, tgt_p["classifier"])
+
+        return src_p, src_o, tgt_p, tgt_o
+
+    def round(self, src_p, src_o, tgt_p, tgt_o, batch, masks):
+        """One communication round. ``batch``/``masks`` are dicts of arrays."""
+        return self._round(
+            src_p,
+            src_o,
+            tgt_p,
+            tgt_o,
+            batch["xs"],
+            batch["ys"],
+            batch["x_msg"],
+            batch["xt_steps"],
+            batch["xt_msg"],
+            masks["mmd"],
+            masks["w"],
+            masks["c"],
+            masks["do_clf"],
+        )
+
+    # -- warm-up (emulated pretraining, FedAvg over sources) -----------------
+
+    def _warmup_fn(self, src_p, src_o, xs, ys):
+        """Scan over R warm-up rounds: local CE steps then whole-model FedAvg.
+
+        xs: (R, L, K, p, b), ys: (R, L, K, b).  Replaces R*K*L Python-loop
+        dispatches with a single compiled program.
+        """
+        zeros = jnp.zeros((self.cfg.n_rff * 2,))
+
+        def round_body(carry, inp):
+            ps, os = carry
+            x_r, y_r = inp
+            ps, os = self._src_local_scan(
+                ps, os, x_r, y_r, jnp.zeros((x_r.shape[1],)), zeros
+            )
+            avg = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0, keepdims=True), ps)
+            ps = jax.tree_util.tree_map(
+                lambda a, t: jnp.broadcast_to(a, t.shape), avg, ps
+            )
+            return (ps, os), None
+
+        (src_p, src_o), _ = jax.lax.scan(round_body, (src_p, src_o), (xs, ys))
+        return src_p, src_o
+
+    def warmup(self, src_p, src_o, xs, ys):
+        return self._warmup(src_p, src_o, xs, ys)

@@ -83,22 +83,44 @@ def logits_of(params, omega, x_cols) -> jnp.ndarray:
     return aligned @ params["classifier"]["w"] + params["classifier"]["b"]
 
 
-def source_loss(params, omega, x, y, target_msg, cfg: ClientConfig, *, with_mmd: bool = True):
-    """Alg. 2: L_S = L_C + lambda L_MMD (or L_C alone when i not in S_t)."""
+def source_loss(
+    params,
+    omega,
+    x,
+    y,
+    target_msg,
+    cfg: ClientConfig,
+    *,
+    with_mmd: bool = True,
+    mmd_gate=None,
+):
+    """Alg. 2: L_S = L_C + lambda L_MMD (or L_C alone when i not in S_t).
+
+    ``with_mmd`` selects the branch at trace time (the serial simulator jits
+    two separate step functions).  ``mmd_gate`` instead is a *traced* 0/1
+    scalar multiplying the MMD term, so a single vmapped program can express
+    per-client membership in S_t — the batched round engine's drop masks.
+    """
     logits = logits_of(params, omega, x)
     one_hot = jax.nn.one_hot(y, cfg.n_classes)
     l_c = -jnp.mean(jnp.sum(one_hot * jax.nn.log_softmax(logits), axis=-1))
-    if not with_mmd:
-        return l_c, {"l_c": l_c, "l_mmd": jnp.zeros(())}
+    if mmd_gate is None:
+        if not with_mmd:
+            return l_c, {"l_c": l_c, "l_mmd": jnp.zeros(())}
+        mmd_gate = 1.0
     msg_s = client_message(params, omega, x, +1.0)
-    l_mmd = mmd_projected(params["w_rf"], msg_s, target_msg)
+    l_mmd = mmd_gate * mmd_projected(params["w_rf"], msg_s, target_msg)
     return l_c + cfg.lambda_mmd * l_mmd, {"l_c": l_c, "l_mmd": l_mmd}
 
 
-def target_loss(params, omega, x, source_msgs, cfg: ClientConfig):
-    """Alg. 3: L_T = mean over received source messages of the pair MMD (11)."""
+def target_loss(params, omega, x, source_msgs, cfg: ClientConfig, *, weights=None):
+    """Alg. 3: L_T = mean over received source messages of the pair MMD (11).
+
+    ``weights`` (K,) restricts the mean to the messages that actually arrived
+    (batched engine); None means all rows of ``source_msgs`` were received.
+    """
     msg_t = client_message(params, omega, x, -1.0)
-    l_mmd = mmd_projected_multi(params["w_rf"], source_msgs, msg_t)
+    l_mmd = mmd_projected_multi(params["w_rf"], source_msgs, msg_t, weights=weights)
     return l_mmd, {"l_mmd": l_mmd}
 
 

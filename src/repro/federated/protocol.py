@@ -5,14 +5,25 @@ target client, per-round client sampling S_t, the three message-drop settings
 of Table III, T_C-interval classifier aggregation, communication accounting,
 and the one-shot hard-voting variant of Appendix D.
 
-The per-client local updates are jit-compiled pure functions from
-``repro.federated.model``; the protocol (who talks to whom, what gets dropped)
-is deliberately host-side Python — that is the part XLA cannot express and the
-paper's robustness claims are about.
+Two interchangeable data planes execute the round body:
+
+- ``engine="serial"``  — per-client jitted local updates dispatched from a
+  Python loop (K x local_steps dispatches per round).  Faithful to the
+  asynchronous protocol; the original implementation.
+- ``engine="batched"`` (default) — ``federated.engine.BatchedRoundEngine``:
+  per-client parameters stacked on a leading K axis, local steps run under
+  ``jax.vmap``/``lax.scan``, the round's drop plan enters as 0/1 masks, and
+  the whole round (plus the entire warm-up phase) is ONE compiled dispatch.
+  Identical math when every client participates; under random drops the two
+  planes consume client batch streams at different offsets, so trajectories
+  agree statistically rather than bitwise.
+
+The protocol itself (who talks to whom, what gets dropped, what it costs)
+stays host-side Python in both planes — that is the part XLA cannot express
+and the paper's robustness claims are about.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -22,6 +33,7 @@ import numpy as np
 
 from repro.data.domains import Domain, batches
 from repro.federated import aggregation, network
+from repro.federated.engine import BatchedRoundEngine, stack_trees, unstack_tree
 from repro.federated.model import (
     ClientConfig,
     accuracy,
@@ -29,7 +41,6 @@ from repro.federated.model import (
     init_params,
     logits_of,
     make_omega,
-    rff_of,
     source_loss,
     target_loss,
 )
@@ -52,6 +63,7 @@ class ProtocolConfig:
     # emulate pretraining with a FedAvg warm-up phase over the source clients
     # (CE only, whole-model aggregation) before the adaptation phase starts.
     warmup_rounds: int = 100
+    engine: str = "batched"  # "batched" (vmap/scan round engine) | "serial"
     seed: int = 0
 
 
@@ -78,6 +90,11 @@ class FedRFTCATrainer:
         cfg: ClientConfig,
         proto: ProtocolConfig,
     ):
+        if proto.engine not in ("serial", "batched"):
+            raise ValueError(f"unknown engine {proto.engine!r}")
+        # nothing to stack/vmap with zero sources — the serial plane handles
+        # K=0 (all loops degenerate) while stack_trees([]) cannot
+        engine = proto.engine if sources else "serial"
         self.sources, self.target = sources, target
         self.cfg, self.proto = cfg, proto
         self.k = len(sources)
@@ -86,10 +103,9 @@ class FedRFTCATrainer:
         # so all clients share one initialisation (they diverge during training).
         key = jax.random.PRNGKey(proto.seed)
         shared = init_params(cfg, key)
-        self.src_params = [jax.tree_util.tree_map(jnp.copy, shared) for _ in range(self.k)]
+        src_params = [jax.tree_util.tree_map(jnp.copy, shared) for _ in range(self.k)]
         self.tgt_params = jax.tree_util.tree_map(jnp.copy, shared)
         self.opt = adam(proto.lr)
-        self.src_opt = [self.opt.init(p) for p in self.src_params]
         self.tgt_opt = self.opt.init(self.tgt_params)
         self.rng = np.random.default_rng(proto.seed)
         self.src_iters = [
@@ -98,22 +114,67 @@ class FedRFTCATrainer:
         ]
         self.tgt_iter = batches(target.x, target.y, proto.batch_size, seed=proto.seed + 777)
         self.comm = CommLog()
-        self._build_steps()
+        # The batched engine stacks message batches across source clients, so
+        # all sources must contribute the same count (min over sources; the
+        # target's message batch is sized independently); the serial plane
+        # keeps the original per-client sizes.
+        self._msg_batch = min([proto.message_batch_size] + [d.x.shape[1] for d in sources])
+        if engine == "batched":
+            msg_sizes = [self._msg_batch] * self.k
+        else:
+            msg_sizes = [min(proto.message_batch_size, d.x.shape[1]) for d in sources]
         self._msg_iters = [
-            batches(d.x, d.y, min(proto.message_batch_size, d.x.shape[1]), seed=proto.seed + 500 + i)
+            batches(d.x, d.y, msg_sizes[i], seed=proto.seed + 500 + i)
             for i, d in enumerate(sources)
         ]
         self._tgt_msg_iter = batches(
-            target.x, target.y, min(proto.message_batch_size, target.x.shape[1]), seed=proto.seed + 999
+            target.x, target.y, min(proto.message_batch_size, target.x.shape[1]),
+            seed=proto.seed + 999,
         )
+        if engine == "batched":
+            self._engine = BatchedRoundEngine(
+                cfg,
+                self.opt,
+                self.omega,
+                exchange_messages=proto.exchange_messages,
+                aggregate_w_rf=proto.aggregate_w_rf,
+                aggregate_classifier=proto.aggregate_classifier,
+            )
+            self._src_stack = stack_trees(src_params)
+            self._src_opt_stack = jax.vmap(self.opt.init)(self._src_stack)
+            self.src_params, self.src_opt = None, None
+        else:
+            self._engine = None
+            self.src_params = src_params
+            self.src_opt = [self.opt.init(p) for p in src_params]
+            self._build_steps()
         if proto.warmup_rounds:
             self._warmup(proto.warmup_rounds)
 
+    # ---- views over the per-client state (both engines) ----------------------
+    def _src_param(self, i: int):
+        if self._engine is not None:
+            return unstack_tree(self._src_stack, i)
+        return self.src_params[i]
+
+    # ---- warm-up (emulated pretraining: FedAvg, CE only, whole model) --------
     def _warmup(self, rounds: int) -> None:
-        """Emulated pretraining: FedAvg (CE only, whole model) over sources."""
+        if rounds <= 0 or self.k == 0:
+            return  # nothing to average — leave the shared init untouched
+        proto = self.proto
+        if self._engine is not None:
+            xs, ys = self._draw_source_batches(rounds)
+            self._src_stack, self._src_opt_stack = self._engine.warmup(
+                self._src_stack, self._src_opt_stack, xs, ys
+            )
+            # after the final FedAvg broadcast every row is the average; the
+            # target starts from that shared pretrained model (paper Fig. 1)
+            self.tgt_params = jax.tree_util.tree_map(jnp.copy, unstack_tree(self._src_stack, 0))
+            return
+        avg = None
         for _ in range(rounds):
             for i in range(self.k):
-                for _ in range(self.proto.local_steps):
+                for _ in range(proto.local_steps):
                     x, y = next(self.src_iters[i])
                     self.src_params[i], self.src_opt[i], _ = self._src_step_plain(
                         self.src_params[i], self.src_opt[i], jnp.asarray(x), jnp.asarray(y)
@@ -122,7 +183,60 @@ class FedRFTCATrainer:
             self.src_params = [jax.tree_util.tree_map(jnp.copy, avg) for _ in range(self.k)]
         self.tgt_params = jax.tree_util.tree_map(jnp.copy, avg)
 
-    # ---- jitted local updates ------------------------------------------------
+    # ---- host-side batch plumbing --------------------------------------------
+    def _draw_source_batches(self, rounds: int):
+        """(R, L, K, p, b) x / (R, L, K, b) y in the serial consumption order
+        (each client's stream yields R*L batches, round-major)."""
+        L = self.proto.local_steps
+        xs = np.empty((rounds, L, self.k) + (self.sources[0].x.shape[0], self.proto.batch_size),
+                      dtype=np.float32)
+        ys = np.empty((rounds, L, self.k, self.proto.batch_size), dtype=np.int32)
+        for r in range(rounds):
+            for i in range(self.k):
+                for s in range(L):
+                    x, y = next(self.src_iters[i])
+                    xs[r, s, i], ys[r, s, i] = x, y
+        return jnp.asarray(xs), jnp.asarray(ys)
+
+    def _round_batch(self):
+        """Draw one round's worth of batches for the batched engine."""
+        L, p = self.proto.local_steps, self.sources[0].x.shape[0]
+        b = self.proto.batch_size
+        xs = np.empty((L, self.k, p, b), np.float32)
+        ys = np.empty((L, self.k, b), np.int32)
+        for i in range(self.k):
+            for s in range(L):
+                xs[s, i], ys[s, i] = next(self.src_iters[i])
+        x_msg = np.stack([next(self._msg_iters[i])[0] for i in range(self.k)])
+        xt_steps = np.stack([next(self.tgt_iter)[0] for _ in range(L)])
+        xt_msg = next(self._tgt_msg_iter)[0]
+        return {
+            "xs": jnp.asarray(xs),
+            "ys": jnp.asarray(ys),
+            "x_msg": jnp.asarray(x_msg),
+            "xt_steps": jnp.asarray(xt_steps),
+            "xt_msg": jnp.asarray(xt_msg),
+        }
+
+    def _mask_of(self, ids: list[int]) -> jnp.ndarray:
+        m = np.zeros((self.k,), np.float32)
+        m[list(ids)] = 1.0
+        return jnp.asarray(m)
+
+    # ---- communication accounting (shared by both planes) --------------------
+    def _account_comm(self, plan: network.RoundPlan, t: int) -> None:
+        proto, cfg = self.proto, self.cfg
+        if proto.exchange_messages and plan.msg_clients:
+            self.comm.data_messages += 2 * cfg.n_rff  # one 2N vector downlink
+            self.comm.data_messages += 2 * cfg.n_rff * len(plan.msg_clients)  # uplinks
+        if proto.aggregate_w_rf and plan.w_clients:
+            self.comm.w_rf += (len(plan.w_clients) + 1) * 2 * cfg.n_rff * cfg.m
+        if proto.aggregate_classifier and t % proto.t_c == 0 and plan.c_clients:
+            clf_size = cfg.m * cfg.n_classes + cfg.n_classes
+            self.comm.classifier += len(plan.c_clients) * clf_size
+        self.comm.rounds += 1
+
+    # ---- jitted local updates (serial plane) ---------------------------------
     def _build_steps(self):
         cfg, omega = self.cfg, self.omega
 
@@ -162,14 +276,38 @@ class FedRFTCATrainer:
 
     # ---- one communication round (Alg. 5 body) -------------------------------
     def round(self, t: int) -> dict[str, Any]:
-        proto, cfg = self.proto, self.cfg
-        plan = network.plan_round(self.rng, self.k, proto.drop_setting)
+        plan = network.plan_round(self.rng, self.k, self.proto.drop_setting)
+        if self._engine is not None:
+            self._round_batched(t, plan)
+        else:
+            self._round_serial(t, plan)
+        self._account_comm(plan, t)
+        return {"plan": plan}
+
+    def _round_batched(self, t: int, plan: network.RoundPlan) -> None:
+        batch = self._round_batch()
+        masks = {
+            "mmd": self._mask_of(plan.msg_clients) if self.proto.exchange_messages
+            else self._mask_of([]),
+            "w": self._mask_of(plan.w_clients),
+            "c": self._mask_of(plan.c_clients),
+            "do_clf": jnp.asarray(t % self.proto.t_c == 0),
+        }
+        (
+            self._src_stack,
+            self._src_opt_stack,
+            self.tgt_params,
+            self.tgt_opt,
+        ) = self._engine.round(
+            self._src_stack, self._src_opt_stack, self.tgt_params, self.tgt_opt, batch, masks
+        )
+
+    def _round_serial(self, t: int, plan: network.RoundPlan) -> None:
+        proto = self.proto
 
         # target broadcasts its message to sources in S_t
         xt, _ = next(self._tgt_msg_iter)
         tgt_msg = self._msg_of(self.tgt_params, jnp.asarray(xt), -1.0)
-        if proto.exchange_messages and plan.msg_clients:
-            self.comm.data_messages += 2 * cfg.n_rff  # one 2N vector downlink
 
         # local source training (Alg. 2)
         src_msgs = {}
@@ -188,7 +326,6 @@ class FedRFTCATrainer:
             if proto.exchange_messages and i in plan.msg_clients:
                 xm, _ = next(self._msg_iters[i])
                 src_msgs[i] = self._msg_of(self.src_params[i], jnp.asarray(xm), +1.0)
-                self.comm.data_messages += 2 * cfg.n_rff
 
         # local target training (Alg. 3)
         if proto.exchange_messages and src_msgs:
@@ -202,21 +339,15 @@ class FedRFTCATrainer:
         # global aggregation (Alg. 4)
         if proto.aggregate_w_rf and plan.w_clients:
             w_rf = aggregation.fedavg_w_rf(self.src_params, self.tgt_params, plan.w_clients)
-            self.comm.w_rf += (len(plan.w_clients) + 1) * w_rf.size  # uplinks
             for i in plan.w_clients:
                 self.src_params[i]["w_rf"] = w_rf
             self.tgt_params["w_rf"] = w_rf
 
         if proto.aggregate_classifier and t % proto.t_c == 0 and plan.c_clients:
             clf = aggregation.fedavg_classifier(self.src_params, plan.c_clients)
-            self.comm.classifier += len(plan.c_clients) * sum(
-                int(np.prod(v.shape)) for v in jax.tree_util.tree_leaves(clf)
-            )
             for i in plan.c_clients:
                 self.src_params[i]["classifier"] = clf
             self.tgt_params["classifier"] = clf
-        self.comm.rounds += 1
-        return {"plan": plan}
 
     def train(self, eval_every: int = 0) -> list[float]:
         accs = []
@@ -235,13 +366,12 @@ class FedRFTCATrainer:
             return float(accuracy(self.tgt_params, self.omega, jnp.asarray(x), jnp.asarray(y)))
         # one-shot hard voting (App. D): each source classifier votes on the
         # target's aligned features
-        aligned_params = dict(self.tgt_params)
         per_src = []
         for i in range(self.k):
             p = {
                 "extractor": self.tgt_params["extractor"],
                 "w_rf": self.tgt_params["w_rf"],
-                "classifier": self.src_params[i]["classifier"],
+                "classifier": self._src_param(i)["classifier"],
             }
             per_src.append(np.asarray(logits_of(p, self.omega, jnp.asarray(x))))
         preds = aggregation.hard_vote(np.stack(per_src))

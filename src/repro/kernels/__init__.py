@@ -2,9 +2,14 @@
 
 - rff:             fused RFF feature map (paper Def. 2) — matmul + cos/sin epilogue
 - centered_gram:   Sigma H Sigma^T for RF-TCA (Alg. 1) with fused centering
+- rff_gram_stream: one-pass fused featurize + Gram/moment accumulation —
+                   Sigma never hits HBM, peak memory O(N^2 + N b) regardless
+                   of the sample count n (the RF-TCA scaling claim)
 - flash_attention: blockwise online-softmax GQA attention (causal / window)
 
 Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py. On this
 CPU container they run with interpret=True; on TPU they lower via Mosaic.
+The streaming RF-TCA fit (core.rf_tca) uses an XLA lax.scan with the same
+memory profile on non-TPU backends, where interpret-mode Pallas is slow.
 """
 from repro.kernels import ops, ref

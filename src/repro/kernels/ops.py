@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.centered_gram import centered_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rff import rff_pallas
+from repro.kernels.rff_gram_stream import rff_gram_stream_pallas
 
 
 def _on_tpu() -> bool:
@@ -64,6 +65,43 @@ def centered_gram(sigma: jax.Array, *, block: int = 128, interpret: bool | None 
     sigma, _ = _pad_to(sigma, 0, block)
     out = centered_gram_pallas(sigma, block=block, block_k=block, interpret=interpret)
     return out[:two_n_orig, :two_n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rff_gram_stream(
+    x: jax.Array,
+    omega: jax.Array,
+    ell: jax.Array,
+    *,
+    block: int = 128,
+    interpret: bool | None = None,
+):
+    """(G_H (2N, 2N) fp32, u = Sigma ell (2N,) fp32) from X (p, n), Omega (N, p).
+
+    Streams sample blocks through the fused featurize+accumulate kernel so the
+    (2N, n) RFF matrix Sigma is never materialized (peak memory O(N^2 + N b)).
+    Padded sample columns are masked inside the kernel; padded feature rows
+    are sliced off here before assembling the [cos; sin] block structure.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = x.shape[1]
+    lm = jnp.stack([ell.astype(x.dtype), jnp.ones((n,), x.dtype)])  # (2, n)
+    x, _ = _pad_to(x, 1, block)
+    lm, _ = _pad_to(lm, 1, block)  # zero-pads ell AND the column mask
+    x, _ = _pad_to(x, 0, block)
+    omega, _ = _pad_to(omega, 1, block)
+    omega, n_feat = _pad_to(omega, 0, block)
+    gcc, gcs, gss, mc, ms = rff_gram_stream_pallas(
+        x, omega, lm, block_k=block, scale_n=n_feat, interpret=interpret
+    )
+    gcc, gcs, gss = gcc[:n_feat, :n_feat], gcs[:n_feat, :n_feat], gss[:n_feat, :n_feat]
+    g = jnp.concatenate(
+        [jnp.concatenate([gcc, gcs], axis=1), jnp.concatenate([gcs.T, gss], axis=1)], axis=0
+    )
+    u = jnp.concatenate([mc[:n_feat, 0], ms[:n_feat, 0]])
+    col_sum = jnp.concatenate([mc[:n_feat, 1], ms[:n_feat, 1]])
+    g_h = g - jnp.outer(col_sum, col_sum) / n  # rank-one centering correction
+    return 0.5 * (g_h + g_h.T), u
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))

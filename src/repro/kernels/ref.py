@@ -20,6 +20,13 @@ def centered_gram_ref(sigma: jax.Array) -> jax.Array:
     return c @ c.T
 
 
+def rff_gram_stream_ref(x: jax.Array, omega: jax.Array, ell: jax.Array):
+    """Dense oracle for ops.rff_gram_stream: (G_H (2N,2N), u (2N,)) fp32."""
+    sigma = rff_ref(x, omega).astype(jnp.float32)
+    g_h = centered_gram_ref(sigma)
+    return 0.5 * (g_h + g_h.T), sigma @ ell.astype(jnp.float32)
+
+
 def attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0
 ) -> jax.Array:

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: streamed RFF Gram accumulation (RF-TCA Alg. 1 hot path).
+
+Fuses the three stages of the RF-TCA statistics pass — RFF featurization
+(paper Def. 2), sample masking, and Gram/moment accumulation — into one
+kernel that consumes X (p, n) in sample blocks and emits only O(N^2)-sized
+statistics:
+
+    G_cc = C C^T,  G_cs = C S^T,  G_ss = S S^T      (N, N) each
+    M_c  = C [ell; mask]^T,  M_s = S [ell; mask]^T  (N, 2) each
+
+with C = cos(Omega X)/sqrt(N), S = sin(Omega X)/sqrt(N) masked to the true
+sample columns.  The caller assembles Sigma H Sigma^T and u = Sigma ell from
+these; the (2N, n) matrix Sigma itself NEVER exists in HBM, so peak memory is
+O(N^2 + N b) for sample-block size b, independent of n — exactly the scaling
+the paper claims for RF-TCA.
+
+Grid: (n / bk,) — one axis over sample blocks, fp32 VMEM accumulators held
+across the whole pass.  The accumulators are (N_pad, N_pad) fp32, so the
+kernel targets N_pad up to ~1024 per core (3 N^2 fp32 buffers must fit VMEM);
+larger feature counts need an additional (i, j) output tiling, which the
+dense `centered_gram` kernel already provides.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rff_gram_kernel(
+    omega_ref,
+    x_ref,
+    lm_ref,
+    gcc_ref,
+    gcs_ref,
+    gss_ref,
+    mc_ref,
+    ms_ref,
+    acc_cc,
+    acc_cs,
+    acc_ss,
+    acc_mc,
+    acc_ms,
+    *,
+    n_features: int,
+    k_steps: int,
+):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_cc[...] = jnp.zeros_like(acc_cc)
+        acc_cs[...] = jnp.zeros_like(acc_cs)
+        acc_ss[...] = jnp.zeros_like(acc_ss)
+        acc_mc[...] = jnp.zeros_like(acc_mc)
+        acc_ms[...] = jnp.zeros_like(acc_ms)
+
+    z = jnp.dot(omega_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    inv = 1.0 / jnp.sqrt(jnp.float32(n_features))
+    lm = lm_ref[...].astype(jnp.float32)  # (2, bk): row 0 = ell, row 1 = mask
+    mask = lm[1:2, :]  # (1, bk); zero on padded sample columns
+    c = jnp.cos(z) * inv * mask
+    s = jnp.sin(z) * inv * mask
+
+    contract = (((1,), (1,)), ((), ()))
+    acc_cc[...] += jax.lax.dot_general(c, c, contract, preferred_element_type=jnp.float32)
+    acc_cs[...] += jax.lax.dot_general(c, s, contract, preferred_element_type=jnp.float32)
+    acc_ss[...] += jax.lax.dot_general(s, s, contract, preferred_element_type=jnp.float32)
+    acc_mc[...] += jax.lax.dot_general(c, lm, contract, preferred_element_type=jnp.float32)
+    acc_ms[...] += jax.lax.dot_general(s, lm, contract, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _write():
+        gcc_ref[...] = acc_cc[...]
+        gcs_ref[...] = acc_cs[...]
+        gss_ref[...] = acc_ss[...]
+        mc_ref[...] = acc_mc[...]
+        ms_ref[...] = acc_ms[...]
+
+
+def rff_gram_stream_pallas(
+    x: jax.Array,  # (p, n)
+    omega: jax.Array,  # (N, p)
+    lm: jax.Array,  # (2, n): stacked [ell; column-mask]
+    *,
+    block_k: int = 128,
+    scale_n: int | None = None,  # true N when omega rows are padded
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (G_cc, G_cs, G_ss, M_c, M_s); see module docstring for shapes."""
+    n_features, p = omega.shape
+    _, n = x.shape
+    bk = min(block_k, n)
+    if n % bk or lm.shape[1] != n:
+        raise ValueError(f"n={n} must tile by {bk} and match lm {lm.shape}")
+    k_steps = n // bk
+
+    kernel = functools.partial(
+        _rff_gram_kernel, n_features=scale_n or n_features, k_steps=k_steps
+    )
+    nf = n_features
+    return pl.pallas_call(
+        kernel,
+        grid=(k_steps,),
+        in_specs=[
+            pl.BlockSpec((nf, p), lambda k: (0, 0)),
+            pl.BlockSpec((p, bk), lambda k: (0, k)),
+            pl.BlockSpec((2, bk), lambda k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nf, nf), lambda k: (0, 0)),
+            pl.BlockSpec((nf, nf), lambda k: (0, 0)),
+            pl.BlockSpec((nf, nf), lambda k: (0, 0)),
+            pl.BlockSpec((nf, 2), lambda k: (0, 0)),
+            pl.BlockSpec((nf, 2), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nf, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nf, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nf, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nf, 2), jnp.float32),
+            jax.ShapeDtypeStruct((nf, 2), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nf, nf), jnp.float32),
+            pltpu.VMEM((nf, nf), jnp.float32),
+            pltpu.VMEM((nf, nf), jnp.float32),
+            pltpu.VMEM((nf, 2), jnp.float32),
+            pltpu.VMEM((nf, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(omega, x, lm)

@@ -39,6 +39,46 @@ def test_centered_gram_sweep(two_n, n, dtype):
 
 
 @pytest.mark.parametrize(
+    "p,n,nf", [(16, 64, 32), (7, 300, 130), (33, 170, 77), (16, 129, 64), (5, 97, 33)]
+)
+def test_rff_gram_stream_sweep(p, n, nf):
+    """Fused streaming Gram kernel vs dense oracle, incl. non-tile shapes."""
+    from repro.core.kernels_math import ell_vector
+
+    key = jax.random.PRNGKey(p + n + nf)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    om = jax.random.normal(jax.random.fold_in(key, 1), (nf, p), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    g, u = ops.rff_gram_stream(x, om, ell, block=64)
+    ge, ue = ref.rff_gram_stream_ref(x, om, ell)
+    scale = float(jnp.abs(ge).max())
+    np.testing.assert_allclose(np.asarray(g) / scale, np.asarray(ge) / scale, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(ue), atol=2e-5)
+
+
+@pytest.mark.parametrize("p,n,nf", [(16, 130, 40), (3, 257, 16)])
+def test_rff_padding_non_multiple_of_block(p, n, nf):
+    """Default-block (128) wrapper padding paths must match the XLA reference."""
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    om = jax.random.normal(jax.random.fold_in(key, 1), (nf, p), jnp.float32)
+    out = ops.rff(x, om)  # block=128 > all dims: every axis takes the pad path
+    exp = ref.rff_ref(x, om)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("two_n,n", [(40, 130), (130, 257)])
+def test_centered_gram_padding_non_multiple_of_block(two_n, n):
+    """Mean-padding of sample columns (the centering-safe pad) at block=128."""
+    key = jax.random.PRNGKey(two_n * n)
+    sig = jax.random.normal(key, (two_n, n), jnp.float32)
+    out = ops.centered_gram(sig)
+    exp = ref.centered_gram_ref(sig)
+    scale = float(jnp.abs(exp).max())
+    np.testing.assert_allclose(np.asarray(out) / scale, np.asarray(exp) / scale, atol=1e-5)
+
+
+@pytest.mark.parametrize(
     "b,h,kv,s,d,dv",
     [(1, 2, 1, 128, 32, 32), (2, 4, 2, 128, 16, 16), (1, 4, 4, 256, 32, 16), (2, 8, 2, 64, 64, 64)],
 )

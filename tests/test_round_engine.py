@@ -1,0 +1,118 @@
+"""Batched (vmap/scan) round engine vs the serial protocol plane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated import network
+from repro.federated.engine import stack_trees, unstack_tree
+from repro.federated.network import RoundPlan
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    return doms[:3], doms[3], cfg
+
+
+def _leaf_err(a, b):
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def test_stack_unstack_roundtrip():
+    trees = [{"a": jnp.arange(3.0) + i, "b": {"c": jnp.ones((2, 2)) * i}} for i in range(4)]
+    stacked = stack_trees(trees)
+    assert stacked["a"].shape == (4, 3)
+    for i in range(4):
+        assert _leaf_err(unstack_tree(stacked, i), trees[i]) == 0.0
+
+
+def test_warmup_matches_serial(small_setup):
+    """The scanned+vmapped warm-up reproduces the serial FedAvg loop exactly."""
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=0, warmup_rounds=3, batch_size=32, seed=0)
+    tr_s = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="serial", **kw))
+    tr_b = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="batched", **kw))
+    assert _leaf_err(tr_s.tgt_params, tr_b.tgt_params) < 1e-5
+    for i in range(len(sources)):
+        assert _leaf_err(tr_s.src_params[i], tr_b._src_param(i)) < 1e-5
+
+
+def test_full_participation_round_matches_serial(small_setup, monkeypatch):
+    """With no drops both planes consume identical batches => identical params."""
+    sources, target, cfg = small_setup
+    k = len(sources)
+    monkeypatch.setattr(
+        network, "plan_round",
+        lambda rng, n, s: RoundPlan(list(range(n)), list(range(n)), list(range(n))),
+    )
+    kw = dict(n_rounds=4, t_c=2, local_steps=2, warmup_rounds=1, batch_size=32, seed=0)
+    tr_s = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="serial", **kw))
+    tr_s.train()
+    tr_b = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="batched", **kw))
+    tr_b.train()
+    assert _leaf_err(tr_s.tgt_params, tr_b.tgt_params) < 1e-4
+    for i in range(k):
+        assert _leaf_err(tr_s.src_params[i], tr_b._src_param(i)) < 1e-4
+    assert tr_s.comm.total == tr_b.comm.total
+    assert abs(tr_s.evaluate() - tr_b.evaluate()) < 1e-6
+
+
+def test_drop_settings_and_comm_accounting_match_serial(small_setup):
+    """Same plan rng => identical host-side communication logs on both planes."""
+    sources, target, cfg = small_setup
+    for setting in ("I", "II", "III"):
+        kw = dict(
+            n_rounds=5, t_c=2, warmup_rounds=1, batch_size=32,
+            drop_setting=setting, seed=3,
+        )
+        tr_s = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="serial", **kw))
+        tr_s.train()
+        tr_b = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="batched", **kw))
+        tr_b.train()
+        assert (tr_s.comm.data_messages, tr_s.comm.w_rf, tr_s.comm.classifier) == (
+            tr_b.comm.data_messages, tr_b.comm.w_rf, tr_b.comm.classifier,
+        )
+
+
+def test_batched_no_message_ablation(small_setup):
+    sources, target, cfg = small_setup
+    proto = ProtocolConfig(
+        n_rounds=3, warmup_rounds=1, batch_size=32, exchange_messages=False,
+        seed=0, engine="batched",
+    )
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    tr.train()
+    assert tr.comm.data_messages == 0
+
+
+def test_batched_hard_voting_eval(small_setup):
+    sources, target, cfg = small_setup
+    proto = ProtocolConfig(
+        n_rounds=3, warmup_rounds=2, batch_size=32, aggregate_classifier=False,
+        seed=0, engine="batched",
+    )
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    acc = tr.train(eval_every=3)
+    assert 0.0 <= acc[-1] <= 1.0
+
+
+def test_unknown_engine_rejected(small_setup):
+    sources, target, cfg = small_setup
+    with pytest.raises(ValueError, match="unknown engine"):
+        FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="turbo"))
+
+
+def test_zero_sources_falls_back_to_serial(small_setup):
+    """stack_trees([]) is impossible — K=0 must degrade to the serial plane."""
+    _, target, cfg = small_setup
+    proto = ProtocolConfig(n_rounds=2, warmup_rounds=1, batch_size=32, engine="batched")
+    tr = FedRFTCATrainer([], target, cfg, proto)
+    tr.train()
+    assert tr.comm.rounds == 2 and tr.comm.total == 0

@@ -1,0 +1,134 @@
+"""Streaming RF-TCA solver: scan/Pallas gram paths, SM whitening, eigh vs LOBPCG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ell_vector,
+    rf_tca_fit,
+    solve_w_rf,
+    solve_w_rf_cholesky,
+    solve_w_rf_gram,
+    streaming_gram,
+)
+from repro.core.rff import draw_omega, rff_features
+
+
+@pytest.fixture(scope="module")
+def data(rng):
+    p, ns, nt = 8, 90, 70
+    xs = jnp.asarray(rng.normal(size=(p, ns)), jnp.float32)
+    xt = jnp.asarray(rng.normal(size=(p, nt)) + 1.0, jnp.float32)
+    return xs, xt
+
+
+def test_streaming_gram_matches_dense(data):
+    """G_H and u from the blocked scan equal the materializing reference."""
+    xs, xt = data
+    x = jnp.concatenate([xs, xt], axis=1)
+    ell = ell_vector(xs.shape[1], xt.shape[1])
+    omega = draw_omega(0, 48, x.shape[0])
+    g_h, u = streaming_gram(x, ell, omega, block=37)  # non-divisor block
+    sig = rff_features(x, omega)
+    mu = jnp.mean(sig, axis=1, keepdims=True)
+    sc = sig - mu
+    g_ref = sc @ sc.T
+    np.testing.assert_allclose(np.asarray(g_h), np.asarray(g_ref), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(sig @ ell), atol=3e-5)
+
+
+def test_sherman_morrison_solver_matches_cholesky(data):
+    """SM-whitened eigh reproduces the Cholesky reference eigenpairs."""
+    xs, xt = data
+    x = jnp.concatenate([xs, xt], axis=1)
+    ell = ell_vector(xs.shape[1], xt.shape[1])
+    omega = draw_omega(0, 64, x.shape[0])
+    sig = rff_features(x, omega)
+    w_ref, v_ref = solve_w_rf_cholesky(sig, ell, 1e-2, 6)
+    w_sm, v_sm = solve_w_rf(sig, ell, 1e-2, 6, solver="eigh")
+    np.testing.assert_allclose(np.asarray(v_sm), np.asarray(v_ref), rtol=1e-4)
+    # both W are B-orthonormal bases of the same eigenspace: compare subspaces
+    qa = np.linalg.qr(np.asarray(w_ref))[0]
+    qb = np.linalg.qr(np.asarray(w_sm))[0]
+    cosines = np.linalg.svd(qa.T @ qb, compute_uv=False)
+    assert cosines.min() > 1 - 1e-4
+
+
+def test_lobpcg_matches_eigh(data):
+    """Acceptance: LOBPCG top-m agrees with eigh within 1e-4 rel tolerance."""
+    xs, xt = data
+    x = jnp.concatenate([xs, xt], axis=1)
+    ell = ell_vector(xs.shape[1], xt.shape[1])
+    omega = draw_omega(0, 64, x.shape[0])  # 2N = 128
+    g_h, u = streaming_gram(x, ell, omega)
+    w_e, v_e = solve_w_rf_gram(g_h, u, 1e-2, 8, solver="eigh")
+    w_l, v_l = solve_w_rf_gram(g_h, u, 1e-2, 8, solver="lobpcg")
+    np.testing.assert_allclose(np.asarray(v_l), np.asarray(v_e), rtol=1e-4)
+    qa = np.linalg.qr(np.asarray(w_e))[0]
+    qb = np.linalg.qr(np.asarray(w_l))[0]
+    cosines = np.linalg.svd(qa.T @ qb, compute_uv=False)
+    assert cosines.min() > 1 - 1e-3
+
+
+@pytest.mark.parametrize("m", [7, 8, 12])  # 5m >= 2N=32 for all of these
+def test_lobpcg_small_problem_falls_back(data, m):
+    """5m >= 2N degenerates LOBPCG (jax rejects it); must fall back to eigh."""
+    xs, xt = data
+    x = jnp.concatenate([xs, xt], axis=1)
+    ell = ell_vector(xs.shape[1], xt.shape[1])
+    omega = draw_omega(0, 16, x.shape[0])  # 2N = 32
+    g_h, u = streaming_gram(x, ell, omega)
+    w, v = solve_w_rf_gram(g_h, u, 1e-2, m, solver="lobpcg")
+    w_e, v_e = solve_w_rf_gram(g_h, u, 1e-2, m, solver="eigh")
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_e), rtol=1e-5)
+
+
+def test_stream_cholesky_rejected_early(data):
+    """cholesky needs the explicit Sigma — stream mode must refuse up front."""
+    xs, xt = data
+    with pytest.raises(ValueError, match="cholesky"):
+        rf_tca_fit(xs, xt, n_features=32, m=4, mode="stream", solver="cholesky")
+
+
+def test_fit_modes_agree(data):
+    """rf_tca_fit stream (xla + pallas) and dense (cholesky) eigenvalues agree."""
+    xs, xt = data
+    kw = dict(n_features=64, m=8, gamma=1e-2, sigma=2.0, seed=0)
+    v_dense = rf_tca_fit(xs, xt, mode="dense", solver="cholesky", **kw).eigvals
+    v_stream = rf_tca_fit(xs, xt, mode="stream", **kw).eigvals
+    v_pallas = rf_tca_fit(xs, xt, mode="stream", use_pallas=True, **kw).eigvals
+    np.testing.assert_allclose(np.asarray(v_stream), np.asarray(v_dense), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_pallas), np.asarray(v_dense), rtol=1e-3)
+
+
+def test_streaming_never_materializes_sigma(data):
+    """The streamed stats pass must not allocate a (2N, n) buffer.
+
+    Checked structurally: every intermediate in the jaxpr of the scan body is
+    bounded by max(block * 2N_block_rows, (2N)^2) — a (2N, n) Sigma would
+    exceed it.
+    """
+    from repro.core.rf_tca import _gram_stream_xla
+
+    xs, xt = data
+    x = jnp.concatenate([xs, xt], axis=1)
+    n = x.shape[1]
+    ell = ell_vector(xs.shape[1], xt.shape[1])
+    omega = draw_omega(0, 64, x.shape[0])
+    two_n, block = 128, 32
+    jaxpr = jax.make_jaxpr(lambda a, e, o: _gram_stream_xla(a, e, o, block=block))(
+        x, ell, omega
+    )
+    limit = max(two_n * two_n, two_n * block, x.size)  # stats, slab, input copies
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                size = int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                assert size <= limit, f"intermediate {v.aval.shape} exceeds streaming bound"
+        for sub in jax.core.subjaxprs(jx):
+            walk(sub)
+
+    walk(jaxpr.jaxpr)
+    assert two_n * n > limit  # the bound would catch a materialized Sigma
