@@ -1,0 +1,104 @@
+"""Wire-format benchmark: exact bytes-on-wire per payload per codec, plus
+accuracy-vs-loss-rate and accuracy-vs-codec curves through the real protocol.
+
+Claims measured (and recorded in ``BENCH_comm.json``):
+
+- Table I/II made literal: serialized byte sizes of the three FedRF-TCA
+  payloads under every codec, at the paper-scale N=512 config — including the
+  headline ``W_RF`` reduction from O(N*m) dense floats to the O(1) seed-replay
+  key (the same row at 4x N shows the dense payload growing 4x while the
+  seed-replay payload does not move);
+- Table III generalized: accuracy under increasing Bernoulli message-loss
+  rates (``netsim.BernoulliScenario``) on the wire transport;
+- accuracy-vs-quantization: identity vs bf16 vs int8 vs int4 vs seed-replay
+  codecs end-to-end, batched engine.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import da_suite, emit
+from repro.comm import BernoulliScenario, get_codec, serialized_size
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_comm.json"
+
+CODECS = ["float32", "float16", "bfloat16", "qint8", "qint4", "topk:0.25"]
+
+
+def payload_bytes_table(cfg: ClientConfig) -> dict:
+    """Exact wire bytes per payload kind per codec (analytic == serialized)."""
+    f32 = np.dtype(np.float32)
+    specs = {
+        "moments": {"msg": ((2 * cfg.n_rff,), f32)},
+        "w_rf": {"w_rf": ((2 * cfg.n_rff, cfg.m), f32)},
+        "classifier": {"w": ((cfg.m, cfg.n_classes), f32), "b": ((cfg.n_classes,), f32)},
+    }
+    table: dict[str, dict[str, int]] = {}
+    for name in CODECS:
+        codec = get_codec(name)
+        table[name] = {k: serialized_size(k, spec, codec) for k, spec in specs.items()}
+    table["seed_replay"] = {
+        "w_rf": serialized_size("w_rf", specs["w_rf"], get_codec("seed_replay"))
+    }
+    return table
+
+
+def _train_acc(sources, target, cfg, **kw) -> tuple[float, dict]:
+    proto = ProtocolConfig(
+        n_rounds=60, t_c=15, warmup_rounds=60, lr=5e-3, batch_size=48, seed=0, **kw
+    )
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    accs = tr.train(eval_every=10)
+    return float(np.mean(accs[-3:])), dict(tr.comm.bytes_by_kind)
+
+
+def run() -> None:
+    paper_cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=512, m=32, lambda_mmd=2.0)
+    record: dict = {"bytes_per_payload": payload_bytes_table(paper_cfg)}
+
+    # headline: W_RF bytes at N and 4N — dense scales, seed-replay does not
+    for scale, n_rff in (("1x", paper_cfg.n_rff), ("4x", 4 * paper_cfg.n_rff)):
+        spec = {"w_rf": ((2 * n_rff, paper_cfg.m), np.dtype(np.float32))}
+        dense = serialized_size("w_rf", spec, get_codec("float32"))
+        seed = serialized_size("w_rf", spec, get_codec("seed_replay"))
+        record[f"w_rf_bytes_{scale}"] = {"float32": dense, "seed_replay": seed}
+        emit(f"comm_wire/w_rf_bytes_{scale}", 0.0,
+             f"float32={dense},seed_replay={seed},ratio={dense/seed:.0f}x")
+
+    # end-to-end curves on a small-but-trained config (batched engine)
+    sources, target = da_suite(n=240)
+    cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
+
+    acc_id, bytes_id = _train_acc(sources, target, cfg)
+    record["identity"] = {"acc": acc_id, "bytes": bytes_id}
+    emit("comm_wire/identity", 0.0, f"acc={acc_id:.3f},bytes={sum(bytes_id.values())}")
+
+    codec_curve = {}
+    for name in ["float32", "bfloat16", "qint8", "qint4", "seed_replay"]:
+        acc, nbytes = _train_acc(sources, target, cfg, transport="wire", codec=name)
+        codec_curve[name] = {"acc": acc, "bytes": nbytes, "gap": acc_id - acc}
+        emit(f"comm_wire/codec_{name}", 0.0,
+             f"acc={acc:.3f},gap={acc_id-acc:+.3f},bytes={sum(nbytes.values())}")
+    record["accuracy_vs_codec"] = codec_curve
+
+    loss_curve = {}
+    for p in (0.0, 0.2, 0.4, 0.6):
+        acc, nbytes = _train_acc(
+            sources, target, cfg, transport="wire",
+            scenario=BernoulliScenario(p_msg=p, p_w=p, p_c=p),
+        )
+        loss_curve[f"{p:.1f}"] = {"acc": acc, "bytes": nbytes}
+        emit(f"comm_wire/loss_rate_{p:.1f}", 0.0,
+             f"acc={acc:.3f},moment_bytes={nbytes['moments']}")
+    record["accuracy_vs_loss_rate"] = loss_curve
+
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("comm_wire/json", 0.0, f"wrote={JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    run()

@@ -8,8 +8,9 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
 
 The ``fig3`` bench additionally writes ``BENCH_rf_tca.json`` at the repo root
 (fit wall-times dense/stream/lobpcg, speedups, peak-memory proxy, round-engine
-per-round times, accuracies) — the machine-readable perf record tracked
-across PRs.
+per-round times, accuracies) and ``wire`` writes ``BENCH_comm.json``
+(bytes-on-wire per payload per codec, accuracy-vs-loss-rate and
+accuracy-vs-codec curves) — the machine-readable records tracked across PRs.
 """
 from __future__ import annotations
 
@@ -22,6 +23,7 @@ from benchmarks import (
     bench_ablation,
     bench_accuracy,
     bench_comm,
+    bench_comm_wire,
     bench_gamma,
     bench_hard_voting,
     bench_kernels,
@@ -35,6 +37,7 @@ BENCHES = {
     "fig3": ("Fig.3 + Tables X-XIII: RF-TCA vs DA baselines", bench_rf_tca.run),
     "theory": ("Thm.1/2 + Cor.1 validation", bench_theory.run),
     "table2": ("Tables I/II: communication accounting", bench_comm.run),
+    "wire": ("Wire format: bytes/payload/codec + loss & codec curves", bench_comm_wire.run),
     "table3": ("Table III + Fig.4: drop/interval robustness", bench_robustness.run),
     "table5": ("Tables IV-VI: federated DA leaderboard", bench_accuracy.run),
     "table8": ("Tables VIII/IX + Fig.5: ablations", bench_ablation.run),

@@ -1,0 +1,46 @@
+"""repro.comm — wire format, codecs, transports, and network simulation.
+
+The communication subsystem behind FedRF-TCA's headline claims:
+
+- ``wire``      typed messages for the three payload kinds + exact byte layout
+- ``codecs``    float casts, stochastic int8/int4 quantization, top-k
+                sparsification, and the O(1) seed-replay codec for W_RF
+- ``transport`` identity (analytic byte accounting) vs wire (real
+                serialize/deserialize) transports + the CommLog record
+- ``netsim``    Table-III-generalizing, trace-replayable network scenarios
+"""
+from repro.comm.codecs import (
+    Codec,
+    codec_names,
+    get_codec,
+    register_replay_generator,
+)
+from repro.comm.netsim import (
+    BernoulliScenario,
+    LinkModel,
+    LinkScenario,
+    Scenario,
+    TableIIIScenario,
+    TraceScenario,
+    load_trace,
+    record_trace,
+    save_trace,
+    table3_trace,
+)
+from repro.comm.transport import (
+    CommLog,
+    IdentityTransport,
+    Transport,
+    WireTransport,
+    build_transport,
+    resolve_codecs,
+)
+from repro.comm.wire import (
+    Message,
+    classifier_message,
+    deserialize,
+    moments_message,
+    serialize,
+    serialized_size,
+    w_rf_message,
+)

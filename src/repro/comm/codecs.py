@@ -1,0 +1,335 @@
+"""Payload codec registry for the FedRF-TCA wire format.
+
+A codec turns one array payload into on-wire bytes and back.  Every codec
+exposes three faces that are kept consistent (and tested against each other):
+
+- ``encode``/``decode`` — host-side numpy serialization, the byte-exact
+  reference path used by ``transport.WireTransport``;
+- ``nbytes(shape, dtype)`` — the *analytic* encoded size.  Exact by
+  construction (``len(encode(x)) == nbytes(x.shape, x.dtype)`` for every
+  codec), which is what lets the identity transport and the batched engine
+  account bytes without serializing anything;
+- ``roundtrip(x, key)`` — a jittable in-graph twin of decode(encode(x)) so
+  the batched round engine can apply the channel distortion inside its one
+  compiled dispatch (see ``kernels.ops.fake_quant`` for the Pallas version).
+
+Codecs (Table I/II mapping — message floats per payload in the paper):
+
+==============  =============================================================
+``float32``     identity cast; 4 bytes/elt — the paper's float accounting
+``float16``     IEEE half cast; 2 bytes/elt
+``bfloat16``    bf16 cast; 2 bytes/elt
+``qint8``       per-tensor absmax scale + int8 stochastic rounding; 1 byte/elt
+``qint4``       same, 4-bit codes packed two per byte; 0.5 byte/elt
+``topk``        magnitude top-k sparsification (``topk:0.25`` keeps 25%,
+                ``topk:64`` keeps 64 entries); for classifier deltas
+``seed_replay`` transmits a PRNG key + generator id instead of the array —
+                O(1) bytes for any seed-derived payload such as the shared
+                ``W_RF`` (sharpens Table I's O(KNm) W-row to O(K))
+==============  =============================================================
+"""
+from __future__ import annotations
+
+import struct
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# dtype wire codes (logical/decoded dtype of a payload)
+# ---------------------------------------------------------------------------
+DTYPE_CODES: dict[int, np.dtype] = {
+    0: np.dtype(np.float32),
+    1: np.dtype(np.float16),
+    2: np.dtype(ml_dtypes.bfloat16),
+    3: np.dtype(np.int8),
+    4: np.dtype(np.uint8),
+    5: np.dtype(np.int32),
+    6: np.dtype(np.uint32),
+}
+DTYPE_IDS = {v: k for k, v in DTYPE_CODES.items()}
+
+
+def dtype_id(dtype) -> int:
+    try:
+        return DTYPE_IDS[np.dtype(dtype)]
+    except KeyError as e:
+        raise ValueError(f"dtype {dtype} has no wire code") from e
+
+
+# ---------------------------------------------------------------------------
+# seed-replay generator registry
+# ---------------------------------------------------------------------------
+REPLAY_GENERATORS: dict[str, Callable] = {}
+_REPLAY_IDS: dict[str, int] = {}
+
+
+def register_replay_generator(name: str, fn: Callable) -> None:
+    """``fn(key_data: uint32[2], shape, dtype) -> np.ndarray``, deterministic."""
+    if name not in _REPLAY_IDS:
+        _REPLAY_IDS[name] = len(_REPLAY_IDS)
+    REPLAY_GENERATORS[name] = fn
+
+
+def _w_rf_init(key_data: np.ndarray, shape, dtype) -> np.ndarray:
+    """Bit-exact replay of ``federated.model.init_params``'s W_RF draw:
+    ``normal(key, (2N, m)) / sqrt(2N)`` from the captured subkey."""
+    key = jax.random.wrap_key_data(jnp.asarray(key_data, jnp.uint32))
+    arr = jax.random.normal(key, shape) / jnp.sqrt(shape[0])
+    return np.asarray(arr, dtype=dtype)
+
+
+register_replay_generator("w_rf_init", _w_rf_init)
+
+
+# ---------------------------------------------------------------------------
+# codec base + registry
+# ---------------------------------------------------------------------------
+class Codec:
+    name: str = ""
+    wire_id: int = -1
+    lossy: bool = False
+
+    def encode(self, arr: np.ndarray, *, rng=None, replay=None) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, data: bytes, shape: tuple[int, ...], dtype) -> np.ndarray:
+        raise NotImplementedError
+
+    def nbytes(self, shape: tuple[int, ...], dtype) -> int:
+        raise NotImplementedError
+
+    def roundtrip(self, x: jax.Array, key: jax.Array | None = None) -> jax.Array:
+        """In-graph decode(encode(x)) twin (identity for lossless codecs)."""
+        return x
+
+
+class _CastCodec(Codec):
+    """Lossless-layout cast: serialize as ``wire_dtype``, decode by casting back."""
+
+    wire_dtype: np.dtype
+
+    def encode(self, arr, *, rng=None, replay=None) -> bytes:
+        return np.ascontiguousarray(arr).astype(self.wire_dtype).tobytes()
+
+    def decode(self, data, shape, dtype):
+        flat = np.frombuffer(data, dtype=self.wire_dtype)
+        return flat.reshape(shape).astype(dtype)
+
+    def nbytes(self, shape, dtype) -> int:
+        return int(np.prod(shape, dtype=np.int64)) * self.wire_dtype.itemsize
+
+
+class Float32Codec(_CastCodec):
+    name, wire_id = "float32", 0
+    wire_dtype = np.dtype(np.float32)
+
+
+class Float16Codec(_CastCodec):
+    name, wire_id, lossy = "float16", 1, True
+    wire_dtype = np.dtype(np.float16)
+
+    def roundtrip(self, x, key=None):
+        return x.astype(jnp.float16).astype(x.dtype)
+
+
+class BFloat16Codec(_CastCodec):
+    name, wire_id, lossy = "bfloat16", 2, True
+    wire_dtype = np.dtype(ml_dtypes.bfloat16)
+
+    def roundtrip(self, x, key=None):
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+
+
+# -- stochastic-rounding quantization ---------------------------------------
+def quant_scale(absmax, qmax: int):
+    """Per-tensor scale; degenerate all-zero tensors quantize through scale 1."""
+    return np.where(absmax > 0, absmax / qmax, 1.0).astype(np.float32)
+
+
+class QuantCodec(Codec):
+    """absmax/qmax per-tensor scale + unbiased stochastic rounding
+    ``q = clip(floor(x/scale + u), -qmax, qmax)`` with ``u ~ U[0,1)``.
+
+    Wire layout: f32 scale, then int8 codes (qint8) or two 4-bit codes per
+    byte, low nibble first (qint4).  The jax ``roundtrip`` twin and the Pallas
+    ``kernels.ops.fake_quant`` kernel implement the identical formula, so all
+    three agree bitwise when fed the same uniforms.
+    """
+
+    lossy = True
+
+    def __init__(self, bits: int):
+        assert bits in (4, 8)
+        self.bits = bits
+        self.qmax = (1 << (bits - 1)) - 1
+        self.name = f"qint{bits}"
+        self.wire_id = 3 if bits == 8 else 4
+
+    def _codes(self, arr, rng) -> tuple[np.ndarray, np.float32]:
+        x = np.ascontiguousarray(arr, dtype=np.float32).ravel()
+        scale = quant_scale(np.max(np.abs(x), initial=0.0), self.qmax)
+        u = rng.random(x.shape, dtype=np.float32) if rng is not None else 0.5
+        q = np.clip(np.floor(x / scale + u), -self.qmax, self.qmax)
+        return q.astype(np.int8), scale
+
+    def encode(self, arr, *, rng=None, replay=None) -> bytes:
+        q, scale = self._codes(arr, rng)
+        if self.bits == 8:
+            packed = q.tobytes()
+        else:
+            v = (q.astype(np.int16) + 8).astype(np.uint8)  # [0, 15]
+            if v.size % 2:
+                v = np.concatenate([v, np.zeros((1,), np.uint8)])
+            packed = ((v[1::2] << 4) | v[0::2]).tobytes()
+        return struct.pack("<f", float(scale)) + packed
+
+    def decode(self, data, shape, dtype):
+        (scale,) = struct.unpack_from("<f", data, 0)
+        size = int(np.prod(shape, dtype=np.int64))
+        if self.bits == 8:
+            q = np.frombuffer(data, np.int8, count=size, offset=4)
+        else:
+            b = np.frombuffer(data, np.uint8, offset=4)
+            v = np.empty((b.size * 2,), np.uint8)
+            v[0::2] = b & 0x0F
+            v[1::2] = b >> 4
+            q = v[:size].astype(np.int16) - 8
+        return (q.astype(np.float32) * scale).reshape(shape).astype(dtype)
+
+    def nbytes(self, shape, dtype) -> int:
+        size = int(np.prod(shape, dtype=np.int64))
+        return 4 + (size if self.bits == 8 else (size + 1) // 2)
+
+    def roundtrip(self, x, key=None):
+        # deferred imports: keep repro.comm importable without the kernel stack
+        from repro.kernels import ops, ref
+
+        u = (
+            jax.random.uniform(key, x.shape, jnp.float32)
+            if key is not None
+            else jnp.full(x.shape, 0.5, jnp.float32)
+        )
+        # fused Pallas quantize/dequantize on TPU; its bitwise-equal XLA twin
+        # elsewhere (interpret-mode Pallas inside the compiled round would
+        # only slow CPU runs — the twins are tested equal)
+        if jax.default_backend() == "tpu":
+            return ops.fake_quant(x, u, bits=self.bits)
+        return ref.fake_quant_ref(x, u, bits=self.bits)
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification: u32 k, k u32 flat indices, k f32 values.
+
+    ``k`` is a kept-fraction when the parameter is <= 1 (``topk:0.25``) and an
+    absolute count otherwise (``topk:64``).  At k == size the round trip is
+    the identity (tested).  Intended for classifier *deltas*, which are
+    near-sparse between T_C syncs.
+    """
+
+    lossy = True
+    wire_id = 5
+
+    def __init__(self, param: float = 0.25):
+        self.param = param
+        self.name = f"topk:{param:g}"
+
+    def k_of(self, size: int) -> int:
+        k = int(round(self.param * size)) if self.param <= 1 else int(self.param)
+        return max(1, min(k, size))
+
+    def encode(self, arr, *, rng=None, replay=None) -> bytes:
+        x = np.ascontiguousarray(arr, dtype=np.float32).ravel()
+        k = self.k_of(x.size)
+        idx = np.sort(np.argpartition(np.abs(x), x.size - k)[x.size - k :])
+        return (
+            struct.pack("<I", k)
+            + idx.astype(np.uint32).tobytes()
+            + x[idx].astype(np.float32).tobytes()
+        )
+
+    def decode(self, data, shape, dtype):
+        (k,) = struct.unpack_from("<I", data, 0)
+        idx = np.frombuffer(data, np.uint32, count=k, offset=4)
+        val = np.frombuffer(data, np.float32, count=k, offset=4 + 4 * k)
+        out = np.zeros(int(np.prod(shape, dtype=np.int64)), np.float32)
+        out[idx] = val
+        return out.reshape(shape).astype(dtype)
+
+    def nbytes(self, shape, dtype) -> int:
+        return 4 + 8 * self.k_of(int(np.prod(shape, dtype=np.int64)))
+
+    def roundtrip(self, x, key=None):
+        flat = x.astype(jnp.float32).ravel()
+        k = self.k_of(flat.size)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return out.reshape(x.shape).astype(x.dtype)
+
+
+class SeedReplayCodec(Codec):
+    """O(1) wire: a generator id + PRNG key replaces the array entirely.
+
+    The sender must supply ``replay=(generator_name, key_data)`` where
+    ``key_data`` is the uint32 raw key; the receiver re-derives the payload
+    bit-exactly through ``REPLAY_GENERATORS[name]``.  This is the paper's own
+    shared-seed trick (Alg. 5's seed S for Omega) promoted to a first-class
+    codec, applied to the shared ``W_RF``: the (2N, m) matrix costs as much
+    on the wire as its 8-byte key.
+    """
+
+    wire_id = 6
+    name = "seed_replay"
+
+    def encode(self, arr, *, rng=None, replay=None) -> bytes:
+        if replay is None:
+            raise ValueError(
+                "seed_replay codec needs replay=(generator, key_data); payload "
+                f"of shape {getattr(arr, 'shape', None)} is not seed-derived"
+            )
+        gen, key_data = replay
+        key = np.ascontiguousarray(key_data, dtype=np.uint32)
+        if key.size != 2:
+            raise ValueError(f"expected a raw (2,) uint32 key, got {key.shape}")
+        return struct.pack("<B", _REPLAY_IDS[gen]) + key.tobytes()
+
+    def decode(self, data, shape, dtype):
+        (gen_id,) = struct.unpack_from("<B", data, 0)
+        key = np.frombuffer(data, np.uint32, count=2, offset=1)
+        name = {v: k for k, v in _REPLAY_IDS.items()}[gen_id]
+        return REPLAY_GENERATORS[name](key, shape, np.dtype(dtype))
+
+    def nbytes(self, shape, dtype) -> int:
+        return 1 + 8  # generator id + raw uint32[2] key — shape-independent
+
+
+_FACTORIES: dict[str, Callable[..., Codec]] = {
+    "float32": Float32Codec,
+    "float16": Float16Codec,
+    "bfloat16": BFloat16Codec,
+    "qint8": lambda: QuantCodec(8),
+    "qint4": lambda: QuantCodec(4),
+    "topk": TopKCodec,
+    "seed_replay": SeedReplayCodec,
+}
+_WIRE_IDS = {0: "float32", 1: "float16", 2: "bfloat16", 3: "qint8", 4: "qint4",
+             5: "topk", 6: "seed_replay"}
+
+
+def get_codec(spec: str) -> Codec:
+    """``get_codec("qint8")``, ``get_codec("topk:0.1")`` — name[:param]."""
+    name, _, param = spec.partition(":")
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown codec {spec!r}; have {sorted(_FACTORIES)}")
+    return _FACTORIES[name](float(param)) if param else _FACTORIES[name]()
+
+
+def codec_names() -> list[str]:
+    return sorted(_FACTORIES)
+
+
+def codec_from_wire_id(wire_id: int) -> Codec:
+    return get_codec(_WIRE_IDS[wire_id])

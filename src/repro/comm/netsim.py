@@ -1,0 +1,176 @@
+"""Trace-driven network simulation for the federated protocol.
+
+Generalizes Table III's three drop settings into arbitrary, replayable
+scenarios.  Every scenario emits the same :class:`federated.network.RoundPlan`
+(nested participant sets A supseteq B supseteq C for moments / W_RF /
+classifier) that both the serial and batched round engines already consume —
+the engines never know which scenario produced the plan.
+
+Scenarios:
+
+- :class:`TableIIIScenario` — the paper's settings (I) A/A/A, (II) A/A/B,
+  (III) A/B/C, bit-compatible with ``network.plan_round`` (the default).
+- :class:`BernoulliScenario` — per-link i.i.d. Bernoulli loss with separate
+  probabilities per payload kind; nesting enforced by intersection.
+- :class:`LinkScenario` — per-client :class:`LinkModel` (latency, jitter,
+  bandwidth, loss) against a round deadline: a client whose simulated
+  delivery time exceeds the deadline is a straggler and counts as dropped.
+  Uses the *exact* wire byte sizes, so heavier codecs genuinely straggle.
+- :class:`TraceScenario` — an explicit list of round plans, replayed
+  deterministically; any scenario can be recorded into one
+  (:func:`record_trace`) and traces round-trip through JSON
+  (:func:`save_trace` / :func:`load_trace`) for shareable experiments.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.federated import network
+from repro.federated.network import RoundPlan, sample_participants
+
+
+class Scenario:
+    """Emits one RoundPlan per round: ``plan(rng, n_clients, t)``."""
+
+    def plan(self, rng: np.random.Generator, n_clients: int, t: int) -> RoundPlan:
+        raise NotImplementedError
+
+
+@dataclass
+class TableIIIScenario(Scenario):
+    """Paper Table III settings as a scenario (delegates to plan_round)."""
+
+    setting: str = "I"
+
+    def plan(self, rng, n_clients, t) -> RoundPlan:
+        # resolved through the module so tests can monkeypatch network.plan_round
+        return network.plan_round(rng, n_clients, self.setting)
+
+
+def _nest(a: list[int], b: list[int], c: list[int]) -> RoundPlan:
+    """Enforce the protocol invariant C ⊆ B ⊆ A by intersection."""
+    b = sorted(set(b) & set(a))
+    c = sorted(set(c) & set(b))
+    return RoundPlan(sorted(a), b, c)
+
+
+@dataclass
+class BernoulliScenario(Scenario):
+    """Independent per-client, per-payload Bernoulli delivery.
+
+    ``p_msg``/``p_w``/``p_c`` are *loss* probabilities for the moments, W_RF
+    and classifier payloads.  ``sample_s_t=True`` additionally draws the
+    paper's participating set S_t first (Section IV-B) so loss composes with
+    client sampling; False exposes the pure-channel ablation.
+    """
+
+    p_msg: float = 0.0
+    p_w: float = 0.0
+    p_c: float = 0.0
+    sample_s_t: bool = True
+
+    def plan(self, rng, n_clients, t) -> RoundPlan:
+        base = (
+            sample_participants(rng, n_clients) if self.sample_s_t else list(range(n_clients))
+        )
+        a = [i for i in base if rng.random() >= self.p_msg]
+        b = [i for i in a if rng.random() >= self.p_w]
+        c = [i for i in b if rng.random() >= self.p_c]
+        return _nest(a, b, c)
+
+
+@dataclass
+class LinkModel:
+    """One client's uplink: Bernoulli loss + latency/jitter/bandwidth."""
+
+    drop: float = 0.0  # Bernoulli loss probability per payload
+    latency_s: float = 0.0  # base one-way latency
+    jitter_s: float = 0.0  # uniform [0, jitter_s) added per payload
+    bandwidth_bps: float = math.inf  # bytes/second on the wire
+
+    def delivery_time(self, rng, nbytes: int) -> float:
+        """Simulated arrival time of an nbytes payload; inf if lost."""
+        if rng.random() < self.drop:
+            return math.inf
+        jitter = rng.random() * self.jitter_s if self.jitter_s else 0.0
+        return self.latency_s + jitter + nbytes / self.bandwidth_bps
+
+
+@dataclass
+class LinkScenario(Scenario):
+    """Per-client links against a straggler deadline.
+
+    ``payload_bytes`` maps kind -> exact wire bytes of that payload (from
+    ``wire.serialized_size``); the transport wires this up so codec choice
+    changes who straggles — e.g. dense float32 W_RF misses a tight deadline
+    that the seed-replay key makes trivially.
+    """
+
+    links: list[LinkModel]
+    deadline_s: float = math.inf
+    payload_bytes: dict[str, int] = field(default_factory=dict)
+
+    def plan(self, rng, n_clients, t) -> RoundPlan:
+        if len(self.links) < n_clients:
+            raise ValueError(f"{len(self.links)} links for {n_clients} clients")
+        sets: dict[str, list[int]] = {"moments": [], "w_rf": [], "classifier": []}
+        for i in range(n_clients):
+            for kind in sets:
+                dt = self.links[i].delivery_time(rng, self.payload_bytes.get(kind, 0))
+                if dt <= self.deadline_s:
+                    sets[kind].append(i)
+        return _nest(sets["moments"], sets["w_rf"], sets["classifier"])
+
+
+@dataclass
+class TraceScenario(Scenario):
+    """Deterministic replay of an explicit plan list (cycled if ``cycle``)."""
+
+    plans: list[RoundPlan]
+    cycle: bool = False
+
+    def plan(self, rng, n_clients, t) -> RoundPlan:
+        # round() is called with t starting at 1 (protocol convention)
+        idx = t - 1
+        if self.cycle:
+            idx %= len(self.plans)
+        if not 0 <= idx < len(self.plans):
+            raise IndexError(f"trace has {len(self.plans)} rounds, asked for t={t}")
+        return self.plans[idx]
+
+
+def record_trace(
+    scenario: Scenario, rng: np.random.Generator, n_clients: int, rounds: int
+) -> TraceScenario:
+    """Materialize any scenario into a replayable trace."""
+    return TraceScenario([scenario.plan(rng, n_clients, t) for t in range(1, rounds + 1)])
+
+
+def save_trace(trace: TraceScenario, path) -> None:
+    with open(path, "w") as f:
+        json.dump(
+            [
+                {"msg": p.msg_clients, "w": p.w_clients, "c": p.c_clients}
+                for p in trace.plans
+            ],
+            f,
+        )
+
+
+def load_trace(path, *, cycle: bool = False) -> TraceScenario:
+    with open(path) as f:
+        raw = json.load(f)
+    return TraceScenario(
+        [RoundPlan(list(p["msg"]), list(p["w"]), list(p["c"])) for p in raw], cycle
+    )
+
+
+def table3_trace(setting: str, n_clients: int, rounds: int, seed: int = 0) -> TraceScenario:
+    """Table III settings (I)/(II)/(III) expressed as deterministic traces."""
+    return record_trace(
+        TableIIIScenario(setting), np.random.default_rng(seed), n_clients, rounds
+    )

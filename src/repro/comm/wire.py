@@ -1,0 +1,164 @@
+"""Wire format for FedRF-TCA federated messages (Table I/II made literal).
+
+The protocol exchanges exactly three payload kinds (paper Alg. 5):
+
+- ``moments``     — the Sigma ell moment vector, 2N floats (eq. 2);
+- ``w_rf``        — the (2N, m) aligner W_RF (Alg. 4 FedAvg);
+- ``classifier``  — classifier params, (m, C) weight + (C,) bias (every T_C).
+
+A :class:`Message` is a typed envelope around one payload (possibly several
+named arrays, e.g. the classifier's w and b); :func:`serialize` produces the
+exact on-wire bytes and :func:`deserialize` recovers the arrays through the
+payload codec.  :func:`serialized_size` computes the same byte count
+analytically — ``len(serialize(msg, codec)) == serialized_size(...)`` is a
+tested invariant, which lets the identity transport and the batched engine
+do *exact* byte accounting without ever serializing.
+
+Layout (little-endian)::
+
+    magic   4s   b"RFTC"
+    version u8
+    kind    u8       moments=0 | w_rf=1 | classifier=2
+    codec   u8       codecs.Codec.wire_id
+    flags   u8       bit0 = downlink
+    sender  i16      client id, -1 = server/target
+    round   u32
+    n_arr   u8
+    per array:
+      name_len u8, name ascii
+      ndim     u8, dims u32 * ndim
+      dtype    u8   (logical/decoded dtype)
+      plen     u32, payload bytes (codec-specific)
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.comm import codecs as codecs_mod
+from repro.comm.codecs import Codec, codec_from_wire_id, dtype_id
+
+MAGIC = b"RFTC"
+VERSION = 1
+
+KINDS = ("moments", "w_rf", "classifier")
+_KIND_IDS = {k: i for i, k in enumerate(KINDS)}
+
+_HEADER = struct.Struct("<4sBBBBhIB")
+
+
+@dataclass
+class Message:
+    """One federated message: a typed payload envelope.
+
+    ``arrays`` maps payload part names to arrays (moments: {"msg"}, w_rf:
+    {"w_rf"}, classifier: {"w", "b"}).  ``replay`` carries the (generator,
+    key_data) pair for seed-derived payloads (see codecs.SeedReplayCodec).
+    """
+
+    kind: str
+    sender: int
+    round: int
+    arrays: dict[str, np.ndarray]
+    downlink: bool = False
+    replay: tuple[str, np.ndarray] | None = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.kind not in _KIND_IDS:
+            raise ValueError(f"unknown payload kind {self.kind!r}; have {KINDS}")
+
+    def nbytes(self, codec: Codec) -> int:
+        return serialized_size(
+            self.kind, {k: (v.shape, v.dtype) for k, v in self.arrays.items()}, codec
+        )
+
+
+def moments_message(msg_vec, *, sender: int, round: int, downlink: bool = False) -> Message:
+    return Message("moments", sender, round, {"msg": np.asarray(msg_vec)}, downlink)
+
+
+def w_rf_message(w, *, sender: int, round: int, downlink: bool = False, replay=None) -> Message:
+    return Message("w_rf", sender, round, {"w_rf": np.asarray(w)}, downlink, replay)
+
+
+def classifier_message(clf, *, sender: int, round: int, downlink: bool = False) -> Message:
+    return Message(
+        "classifier", sender, round,
+        {"w": np.asarray(clf["w"]), "b": np.asarray(clf["b"])}, downlink,
+    )
+
+
+def _array_header(name: str, shape: tuple[int, ...], dtype, plen: int) -> bytes:
+    nm = name.encode("ascii")
+    return (
+        struct.pack("<B", len(nm))
+        + nm
+        + struct.pack("<B", len(shape))
+        + struct.pack(f"<{len(shape)}I", *shape)
+        + struct.pack("<BI", dtype_id(dtype), plen)
+    )
+
+
+def serialize(msg: Message, codec: Codec, *, rng=None) -> bytes:
+    """Exact on-wire bytes of ``msg`` under ``codec``.
+
+    ``rng`` (np.random.Generator) drives stochastic-rounding codecs; pass a
+    generator seeded from (seed, round, sender) for deterministic replay.
+    """
+    out = [
+        _HEADER.pack(
+            MAGIC, VERSION, _KIND_IDS[msg.kind], codec.wire_id,
+            1 if msg.downlink else 0, msg.sender, msg.round, len(msg.arrays),
+        )
+    ]
+    for name, arr in msg.arrays.items():
+        arr = np.asarray(arr)
+        payload = codec.encode(arr, rng=rng, replay=msg.replay)
+        out.append(_array_header(name, arr.shape, arr.dtype, len(payload)))
+        out.append(payload)
+    return b"".join(out)
+
+
+def deserialize(data: bytes) -> tuple[Message, Codec]:
+    """Parse wire bytes -> (Message with decoded arrays, codec used)."""
+    magic, version, kind_id, codec_id, flags, sender, rnd, n_arr = _HEADER.unpack_from(
+        data, 0
+    )
+    if magic != MAGIC:
+        raise ValueError(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise ValueError(f"wire version {version} != {VERSION}")
+    codec = codec_from_wire_id(codec_id)
+    off = _HEADER.size
+    arrays: dict[str, np.ndarray] = {}
+    for _ in range(n_arr):
+        (name_len,) = struct.unpack_from("<B", data, off)
+        off += 1
+        name = data[off : off + name_len].decode("ascii")
+        off += name_len
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        dt_id, plen = struct.unpack_from("<BI", data, off)
+        off += 5
+        arrays[name] = codec.decode(
+            data[off : off + plen], tuple(shape), codecs_mod.DTYPE_CODES[dt_id]
+        )
+        off += plen
+    if off != len(data):
+        raise ValueError(f"trailing bytes: parsed {off} of {len(data)}")
+    msg = Message(KINDS[kind_id], sender, rnd, arrays, bool(flags & 1))
+    return msg, codec
+
+
+def serialized_size(
+    kind: str, specs: dict[str, tuple[tuple[int, ...], np.dtype]], codec: Codec
+) -> int:
+    """Analytic ``len(serialize(...))`` from shapes alone (no data needed)."""
+    total = _HEADER.size
+    for name, (shape, dtype) in specs.items():
+        total += 1 + len(name) + 1 + 4 * len(shape) + 5 + codec.nbytes(shape, dtype)
+    return total

@@ -9,6 +9,7 @@ from repro.federated.model import (
     make_omega,
     source_loss,
     target_loss,
+    w_rf_key,
 )
 from repro.federated.network import LossyChannel, RoundPlan, plan_round, sample_participants
 from repro.federated.protocol import CommLog, FedRFTCATrainer, ProtocolConfig

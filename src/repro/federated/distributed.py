@@ -64,7 +64,13 @@ def build_sharded_round(mesh: Mesh, cfg: ClientConfig, omega: jnp.ndarray, opt):
                 loss, aux = source_loss(p, omega, x, y, msg_t, cfg, with_mmd=False)
                 msg_s = client_message(p, omega, x, +1.0)
                 # >>> THE EXCHANGE: one all-reduce of a 2N-float message <<<
-                msg_sum = jax.lax.psum(msg_s, "clients")
+                # Other clients' messages arrive over the wire and are
+                # constants to this client (psum's VJP would otherwise sum
+                # cotangents across shards): gradient flows through the local
+                # term only, matching the host-side protocol semantics.
+                msg_sum = msg_s + jax.lax.stop_gradient(
+                    jax.lax.psum(msg_s, "clients") - msg_s
+                )
                 l_mmd = mmd_projected(p["w_rf"], msg_sum / mesh.shape["clients"], msg_t)
                 return loss + cfg.lambda_mmd * l_mmd, (aux["l_c"], l_mmd)
 

@@ -15,8 +15,11 @@ expresses the same round body (Alg. 5) as a single jitted program:
   identical every round, so XLA compiles it exactly once.
 
 What stays host-side by design: client sampling, drop-set construction and
-communication accounting (``network.py``) — the part the paper's robustness
-claims are about and XLA cannot express.
+communication accounting (``network.py`` / ``repro.comm``) — the part the
+paper's robustness claims are about and XLA cannot express.  The wire layer
+enters this plane as jittable codec distortion twins (``channel``) and the
+frozen-W invariant behind the O(1) seed-replay codec (``freeze_w_rf``); byte
+accounting stays host-side on the exact analytic sizes.
 
 Semantics vs the serial path: identical when every client participates (the
 equivalence test monkeypatches a full-participation plan and checks parameter
@@ -60,15 +63,35 @@ class BatchedRoundEngine:
         exchange_messages: bool = True,
         aggregate_w_rf: bool = True,
         aggregate_classifier: bool = True,
+        freeze_w_rf: bool = False,
+        channel: dict | None = None,
     ):
+        """``freeze_w_rf`` pins W_RF at its (shared, seed-derived) init:
+        gradients through it are stopped and W-aggregation is skipped, so all
+        clients stay bit-identical — the invariant behind the O(1) seed-replay
+        wire codec.  ``channel`` maps payload kinds ("moments"/"w_rf"/
+        "classifier") to jittable distortion twins ``fn(x, key) -> x``
+        (``comm.Codec.roundtrip``) applied to uplinked values in-graph — the
+        batched plane's equivalent of the serial plane's real
+        serialize/deserialize round trip (stochastic codecs draw from jax
+        keys here vs numpy streams there, so the two planes agree
+        statistically, not bitwise).
+        """
         self.cfg, self.opt, self.omega = cfg, opt, omega
         self.exchange_messages = exchange_messages
         self.aggregate_w_rf = aggregate_w_rf
         self.aggregate_classifier = aggregate_classifier
+        self.freeze_w_rf = freeze_w_rf
+        self.channel = channel or {}
         self._round = jax.jit(self._round_fn)
         self._warmup = jax.jit(self._warmup_fn)
 
     # -- building blocks ----------------------------------------------------
+
+    def _maybe_freeze(self, params):
+        if not self.freeze_w_rf:
+            return params
+        return {**params, "w_rf": jax.lax.stop_gradient(params["w_rf"])}
 
     def _src_local_scan(self, src_p, src_o, xs, ys, mmd_mask, tgt_msg):
         """lax.scan over local steps of a vmapped per-client Adam step.
@@ -79,7 +102,9 @@ class BatchedRoundEngine:
 
         def one_client(p, o, x, y, gate):
             (_, aux), grads = jax.value_and_grad(
-                lambda pp: source_loss(pp, omega, x, y, tgt_msg, cfg, mmd_gate=gate),
+                lambda pp: source_loss(
+                    self._maybe_freeze(pp), omega, x, y, tgt_msg, cfg, mmd_gate=gate
+                ),
                 has_aux=True,
             )(p)
             upd, o = opt.update(grads, o, p)
@@ -111,11 +136,19 @@ class BatchedRoundEngine:
         w_mask,  # (K,) 1.0 iff client in plan.w_clients
         c_mask,  # (K,) 1.0 iff client in plan.c_clients
         do_clf,  # () bool: t % T_C == 0 this round
+        chan_key,  # per-round PRNG key for stochastic channel distortion
     ):
         cfg, omega, opt = self.cfg, self.omega, self.opt
+        k_clients = xs.shape[1]
+        chan_m = self.channel.get("moments")
+        chan_w = self.channel.get("w_rf")
+        chan_c = self.channel.get("classifier")
 
-        # target broadcasts its message to the sources in S_t
+        # target broadcasts its message to the sources in S_t (the one
+        # downlink the protocol accounts; distorted by the wire codec)
         tgt_msg = client_message(tgt_p, omega, xt_msg, -1.0)
+        if chan_m is not None:
+            tgt_msg = chan_m(tgt_msg, jax.random.fold_in(chan_key, 0))
 
         # local source training (Alg. 2), MMD gated by S_t membership
         gates = mmd_mask if self.exchange_messages else jnp.zeros_like(mmd_mask)
@@ -124,12 +157,17 @@ class BatchedRoundEngine:
         # local target training (Alg. 3) on the messages that arrived
         if self.exchange_messages:
             msgs = jax.vmap(lambda p, x: client_message(p, omega, x, +1.0))(src_p, x_msg)
+            if chan_m is not None:
+                keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
+                msgs = jax.vmap(chan_m)(msgs, keys)
             any_msg = jnp.sum(mmd_mask) > 0
 
             def tgt_step(carry, x):
                 p, o = carry
                 (_, _), grads = jax.value_and_grad(
-                    lambda pp: target_loss(pp, omega, x, msgs, cfg, weights=mmd_mask),
+                    lambda pp: target_loss(
+                        self._maybe_freeze(pp), omega, x, msgs, cfg, weights=mmd_mask
+                    ),
                     has_aux=True,
                 )(p)
                 upd, o = opt.update(grads, o, p)
@@ -141,10 +179,17 @@ class BatchedRoundEngine:
             tgt_p = tree_where(any_msg, new_tgt_p, tgt_p)
             tgt_o = tree_where(any_msg, new_tgt_o, tgt_o)
 
-        # global aggregation (Alg. 4): W_RF over plan.w_clients + the target
-        if self.aggregate_w_rf:
+        # global aggregation (Alg. 4): W_RF over plan.w_clients + the target.
+        # Frozen-W mode (seed-replay wire codec) skips it: every client's
+        # W_RF is already bit-identical to the shared init.
+        if self.aggregate_w_rf and not self.freeze_w_rf:
             have_w = jnp.sum(w_mask) > 0
-            w_avg = (jnp.einsum("k,kij->ij", w_mask, src_p["w_rf"]) + tgt_p["w_rf"]) / (
+            w_up, w_tgt_up = src_p["w_rf"], tgt_p["w_rf"]
+            if chan_w is not None:
+                keys = jax.random.split(jax.random.fold_in(chan_key, 2), k_clients + 1)
+                w_up = jax.vmap(chan_w)(w_up, keys[:k_clients])
+                w_tgt_up = chan_w(w_tgt_up, keys[k_clients])
+            w_avg = (jnp.einsum("k,kij->ij", w_mask, w_up) + w_tgt_up) / (
                 jnp.sum(w_mask) + 1.0
             )
             src_p["w_rf"] = jnp.where(
@@ -156,9 +201,22 @@ class BatchedRoundEngine:
         if self.aggregate_classifier:
             have_c = do_clf & (jnp.sum(c_mask) > 0)
             denom = jnp.maximum(jnp.sum(c_mask), 1.0)
+            clf_up = src_p["classifier"]
+            if chan_c is not None:
+                kbase = jax.random.fold_in(chan_key, 3)
+                leaves, treedef = jax.tree_util.tree_flatten(clf_up)
+                clf_up = jax.tree_util.tree_unflatten(
+                    treedef,
+                    [
+                        jax.vmap(chan_c)(
+                            leaf, jax.random.split(jax.random.fold_in(kbase, i), k_clients)
+                        )
+                        for i, leaf in enumerate(leaves)
+                    ],
+                )
             c_avg = jax.tree_util.tree_map(
                 lambda leaf: jnp.tensordot(c_mask, leaf, axes=1) / denom,
-                src_p["classifier"],
+                clf_up,
             )
             assign = (c_mask > 0) & have_c
             src_p["classifier"] = jax.tree_util.tree_map(
@@ -172,8 +230,14 @@ class BatchedRoundEngine:
 
         return src_p, src_o, tgt_p, tgt_o
 
-    def round(self, src_p, src_o, tgt_p, tgt_o, batch, masks):
+    def round(self, src_p, src_o, tgt_p, tgt_o, batch, masks, chan_key=None):
         """One communication round. ``batch``/``masks`` are dicts of arrays."""
+        if chan_key is None:
+            if self.channel:
+                # a fixed default key would replay the identical stochastic
+                # channel noise every round and bias training
+                raise ValueError("channel distortion is set: pass a per-round chan_key")
+            chan_key = jax.random.PRNGKey(0)  # traced but unused: no channel
         return self._round(
             src_p,
             src_o,
@@ -188,6 +252,7 @@ class BatchedRoundEngine:
             masks["w"],
             masks["c"],
             masks["do_clf"],
+            chan_key,
         )
 
     # -- warm-up (emulated pretraining, FedAvg over sources) -----------------

@@ -40,6 +40,13 @@ def make_omega(cfg: ClientConfig) -> jnp.ndarray:
     return draw_omega(cfg.rff_seed, cfg.n_rff, cfg.extractor_widths[-1], sigma=cfg.rff_sigma)
 
 
+def w_rf_key(cfg: ClientConfig, key: jax.Array) -> jax.Array:
+    """The exact subkey :func:`init_params` draws W_RF from.  The comm
+    subsystem's seed-replay codec ships this key (O(1) bytes) instead of the
+    (2N, m) matrix and re-derives W_RF bit-exactly on the receiver."""
+    return jax.random.split(key, len(cfg.extractor_widths) + 2)[-2]
+
+
 def init_params(cfg: ClientConfig, key: jax.Array) -> dict[str, Any]:
     keys = jax.random.split(key, len(cfg.extractor_widths) + 2)
     widths = (cfg.input_dim,) + cfg.extractor_widths

@@ -5,6 +5,12 @@ sampling |S_t| ~ Unif{0, .., K} then sampling that many clients without
 replacement. Table III's drop settings use nested random subsets
 A ⊇ B ⊇ C: messages Sigma*ell flow for i in A, W_RF for j in B, classifiers
 for k in C — settings (I) A/A/A, (II) A/A/B, (III) A/B/C.
+
+This module is the primitive layer; ``repro.comm.netsim`` generalizes it into
+pluggable scenarios (Bernoulli channels, latency/bandwidth links with
+straggler deadlines, deterministic replayable traces — Table III's settings
+become traces via ``comm.table3_trace``), all emitting the same
+:class:`RoundPlan` that both round engines consume.
 """
 from __future__ import annotations
 

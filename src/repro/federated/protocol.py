@@ -21,16 +21,36 @@ Two interchangeable data planes execute the round body:
 The protocol itself (who talks to whom, what gets dropped, what it costs)
 stays host-side Python in both planes — that is the part XLA cannot express
 and the paper's robustness claims are about.
+
+Communication runs through ``repro.comm``:
+
+- ``ProtocolConfig(transport="identity")`` (default) keeps the in-process
+  data path byte-for-byte as before, but the :class:`repro.comm.CommLog`
+  now records *exact wire bytes* per payload (analytically — tested equal to
+  ``len(serialize(...))``) alongside the legacy float counts.
+- ``transport="wire"`` really serializes every message under the configured
+  codecs: the serial plane round-trips host-side bytes (the fidelity plane),
+  the batched plane applies the codecs' jittable distortion twins in-graph.
+- ``codec="seed_replay"`` enables the O(1)-byte W_RF wire: W_RF is pinned at
+  the shared seed-derived init (gradients stopped, aggregation skipped, all
+  clients bit-identical) and its sync costs a PRNG key instead of 2N*m
+  floats.
+- ``scenario=`` swaps Table III's drop settings for any ``comm.netsim``
+  scenario (Bernoulli channels, latency/bandwidth links with straggler
+  deadlines, replayable traces); every scenario emits the same ``RoundPlan``
+  both planes already consume.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import netsim, transport as comm_transport, wire
+from repro.comm.transport import CommLog  # re-export (seed-era import path)
 from repro.data.domains import Domain, batches
 from repro.federated import aggregation, network
 from repro.federated.engine import BatchedRoundEngine, stack_trees, unstack_tree
@@ -43,8 +63,10 @@ from repro.federated.model import (
     make_omega,
     source_loss,
     target_loss,
+    w_rf_key,
 )
 from repro.optim import adam, apply_updates
+from repro.utils.tree import tree_mean
 
 
 @dataclass
@@ -64,22 +86,14 @@ class ProtocolConfig:
     # (CE only, whole-model aggregation) before the adaptation phase starts.
     warmup_rounds: int = 100
     engine: str = "batched"  # "batched" (vmap/scan round engine) | "serial"
+    # -- communication (repro.comm) -----------------------------------------
+    transport: str = "identity"  # "identity" | "wire" (real serialize/parse)
+    codec: str = "float32"  # default payload codec; "seed_replay" = O(1) W_RF
+    codec_moments: str | None = None  # per-kind overrides of ``codec``
+    codec_w_rf: str | None = None
+    codec_classifier: str | None = None
+    scenario: Any = None  # comm.netsim.Scenario; None -> TableIII(drop_setting)
     seed: int = 0
-
-
-@dataclass
-class CommLog:
-    """Uploaded floats, by payload type (Table I / II accounting)."""
-
-    data_messages: int = 0  # Sigma ell vectors
-    w_rf: int = 0
-    classifier: int = 0
-    rounds: int = 0
-    history: list = field(default_factory=list)
-
-    @property
-    def total(self) -> int:
-        return self.data_messages + self.w_rf + self.classifier
 
 
 class FedRFTCATrainer:
@@ -99,10 +113,35 @@ class FedRFTCATrainer:
         self.cfg, self.proto = cfg, proto
         self.k = len(sources)
         self.omega = make_omega(cfg)
+        self.transport = comm_transport.build_transport(
+            proto.transport,
+            proto.codec,
+            seed=proto.seed,
+            codec_moments=proto.codec_moments,
+            codec_w_rf=proto.codec_w_rf,
+            codec_classifier=proto.codec_classifier,
+        )
+        self.scenario = proto.scenario or netsim.TableIIIScenario(proto.drop_setting)
+        self._frozen_w = self.transport.frozen_w
+        # exact wire shapes of the three payload kinds (for analytic accounting
+        # and for byte-aware scenarios like netsim.LinkScenario)
+        f32 = np.dtype(np.float32)
+        self._specs = {
+            "moments": {"msg": ((2 * cfg.n_rff,), f32)},
+            "w_rf": {"w_rf": ((2 * cfg.n_rff, cfg.m), f32)},
+            "classifier": {
+                "w": ((cfg.m, cfg.n_classes), f32),
+                "b": ((cfg.n_classes,), f32),
+            },
+        }
         # Paper Fig. 1: every client fine-tunes the SAME pretrained extractor,
         # so all clients share one initialisation (they diverge during training).
         key = jax.random.PRNGKey(proto.seed)
         shared = init_params(cfg, key)
+        # the W_RF init subkey IS the seed-replay wire payload
+        self._w_key_data = np.asarray(jax.random.key_data(w_rf_key(cfg, key)))
+        self._w_init = shared["w_rf"]
+        self._chan_base = jax.random.PRNGKey(proto.seed ^ 0x5EED)
         src_params = [jax.tree_util.tree_map(jnp.copy, shared) for _ in range(self.k)]
         self.tgt_params = jax.tree_util.tree_map(jnp.copy, shared)
         self.opt = adam(proto.lr)
@@ -113,7 +152,7 @@ class FedRFTCATrainer:
             for i, d in enumerate(sources)
         ]
         self.tgt_iter = batches(target.x, target.y, proto.batch_size, seed=proto.seed + 777)
-        self.comm = CommLog()
+        self.comm = self.transport.log
         # The batched engine stacks message batches across source clients, so
         # all sources must contribute the same count (min over sources; the
         # target's message batch is sized independently); the serial plane
@@ -139,6 +178,8 @@ class FedRFTCATrainer:
                 exchange_messages=proto.exchange_messages,
                 aggregate_w_rf=proto.aggregate_w_rf,
                 aggregate_classifier=proto.aggregate_classifier,
+                freeze_w_rf=self._frozen_w,
+                channel=self.transport.channel_fns(),
             )
             self._src_stack = stack_trees(src_params)
             self._src_opt_stack = jax.vmap(self.opt.init)(self._src_stack)
@@ -150,6 +191,21 @@ class FedRFTCATrainer:
             self._build_steps()
         if proto.warmup_rounds:
             self._warmup(proto.warmup_rounds)
+        if self._frozen_w:
+            self._pin_w_rf()
+
+    def _pin_w_rf(self) -> None:
+        """Frozen-W invariant: every client's W_RF is bit-identical to the
+        shared seed-derived init (warm-up FedAvg of K identical matrices can
+        drift by an ulp for non-power-of-two K — pin it back exactly)."""
+        if self._engine is not None:
+            self._src_stack["w_rf"] = jnp.broadcast_to(
+                self._w_init, self._src_stack["w_rf"].shape
+            )
+        else:
+            for p in self.src_params:
+                p["w_rf"] = self._w_init
+        self.tgt_params["w_rf"] = self._w_init
 
     # ---- views over the per-client state (both engines) ----------------------
     def _src_param(self, i: int):
@@ -223,27 +279,39 @@ class FedRFTCATrainer:
         m[list(ids)] = 1.0
         return jnp.asarray(m)
 
-    # ---- communication accounting (shared by both planes) --------------------
+    # ---- communication accounting (analytic; exact by wire.serialized_size) --
     def _account_comm(self, plan: network.RoundPlan, t: int) -> None:
-        proto, cfg = self.proto, self.cfg
+        """Byte + float accounting for the planes whose exchange is in-graph
+        (identity transport and the batched engine).  The serial wire plane
+        accounts inside ``Transport.transfer`` instead — same message counts,
+        same exact byte sizes."""
+        proto, tr = self.proto, self.transport
         if proto.exchange_messages and plan.msg_clients:
-            self.comm.data_messages += 2 * cfg.n_rff  # one 2N vector downlink
-            self.comm.data_messages += 2 * cfg.n_rff * len(plan.msg_clients)  # uplinks
+            # one 2N downlink broadcast + one uplink per delivering client
+            tr.account_spec(
+                "moments", self._specs["moments"], count=1 + len(plan.msg_clients)
+            )
         if proto.aggregate_w_rf and plan.w_clients:
-            self.comm.w_rf += (len(plan.w_clients) + 1) * 2 * cfg.n_rff * cfg.m
+            tr.account_spec("w_rf", self._specs["w_rf"], count=len(plan.w_clients) + 1)
         if proto.aggregate_classifier and t % proto.t_c == 0 and plan.c_clients:
-            clf_size = cfg.m * cfg.n_classes + cfg.n_classes
-            self.comm.classifier += len(plan.c_clients) * clf_size
-        self.comm.rounds += 1
+            tr.account_spec(
+                "classifier", self._specs["classifier"], count=len(plan.c_clients)
+            )
 
     # ---- jitted local updates (serial plane) ---------------------------------
     def _build_steps(self):
         cfg, omega = self.cfg, self.omega
+        frozen = self._frozen_w
+
+        def maybe_freeze(p):
+            return {**p, "w_rf": jax.lax.stop_gradient(p["w_rf"])} if frozen else p
 
         @jax.jit
         def src_step_mmd(params, opt_state, x, y, tgt_msg):
             (loss, aux), grads = jax.value_and_grad(
-                lambda p: source_loss(p, omega, x, y, tgt_msg, cfg, with_mmd=True),
+                lambda p: source_loss(
+                    maybe_freeze(p), omega, x, y, tgt_msg, cfg, with_mmd=True
+                ),
                 has_aux=True,
             )(params)
             upd, opt_state = self.opt.update(grads, opt_state, params)
@@ -253,7 +321,9 @@ class FedRFTCATrainer:
         def src_step_plain(params, opt_state, x, y):
             zero = jnp.zeros((2 * cfg.n_rff,))
             (loss, aux), grads = jax.value_and_grad(
-                lambda p: source_loss(p, omega, x, y, zero, cfg, with_mmd=False),
+                lambda p: source_loss(
+                    maybe_freeze(p), omega, x, y, zero, cfg, with_mmd=False
+                ),
                 has_aux=True,
             )(params)
             upd, opt_state = self.opt.update(grads, opt_state, params)
@@ -262,7 +332,8 @@ class FedRFTCATrainer:
         @jax.jit
         def tgt_step(params, opt_state, x, src_msgs):
             (loss, aux), grads = jax.value_and_grad(
-                lambda p: target_loss(p, omega, x, src_msgs, cfg), has_aux=True
+                lambda p: target_loss(maybe_freeze(p), omega, x, src_msgs, cfg),
+                has_aux=True,
             )(params)
             upd, opt_state = self.opt.update(grads, opt_state, params)
             return apply_updates(params, upd), opt_state, aux
@@ -276,12 +347,15 @@ class FedRFTCATrainer:
 
     # ---- one communication round (Alg. 5 body) -------------------------------
     def round(self, t: int) -> dict[str, Any]:
-        plan = network.plan_round(self.rng, self.k, self.proto.drop_setting)
+        plan = self.scenario.plan(self.rng, self.k, t)
         if self._engine is not None:
             self._round_batched(t, plan)
+            self._account_comm(plan, t)
         else:
             self._round_serial(t, plan)
-        self._account_comm(plan, t)
+            if not self.transport.applies_values:
+                self._account_comm(plan, t)  # wire serial accounts per transfer
+        self.comm.rounds += 1
         return {"plan": plan}
 
     def _round_batched(self, t: int, plan: network.RoundPlan) -> None:
@@ -299,15 +373,30 @@ class FedRFTCATrainer:
             self.tgt_params,
             self.tgt_opt,
         ) = self._engine.round(
-            self._src_stack, self._src_opt_stack, self.tgt_params, self.tgt_opt, batch, masks
+            self._src_stack,
+            self._src_opt_stack,
+            self.tgt_params,
+            self.tgt_opt,
+            batch,
+            masks,
+            chan_key=jax.random.fold_in(self._chan_base, t),
         )
 
     def _round_serial(self, t: int, plan: network.RoundPlan) -> None:
         proto = self.proto
+        # wiretx: the transport really serializes/parses every message and the
+        # decoded (possibly codec-distorted) arrays flow back into training
+        wiretx = self.transport if self.transport.applies_values else None
 
         # target broadcasts its message to sources in S_t
         xt, _ = next(self._tgt_msg_iter)
         tgt_msg = self._msg_of(self.tgt_params, jnp.asarray(xt), -1.0)
+        if wiretx and proto.exchange_messages and plan.msg_clients:
+            tgt_msg = jnp.asarray(
+                wiretx.transfer(
+                    wire.moments_message(tgt_msg, sender=-1, round=t, downlink=True)
+                )["msg"]
+            )
 
         # local source training (Alg. 2)
         src_msgs = {}
@@ -325,7 +414,12 @@ class FedRFTCATrainer:
                     )
             if proto.exchange_messages and i in plan.msg_clients:
                 xm, _ = next(self._msg_iters[i])
-                src_msgs[i] = self._msg_of(self.src_params[i], jnp.asarray(xm), +1.0)
+                msg = self._msg_of(self.src_params[i], jnp.asarray(xm), +1.0)
+                if wiretx:
+                    msg = jnp.asarray(
+                        wiretx.transfer(wire.moments_message(msg, sender=i, round=t))["msg"]
+                    )
+                src_msgs[i] = msg
 
         # local target training (Alg. 3)
         if proto.exchange_messages and src_msgs:
@@ -338,13 +432,61 @@ class FedRFTCATrainer:
 
         # global aggregation (Alg. 4)
         if proto.aggregate_w_rf and plan.w_clients:
-            w_rf = aggregation.fedavg_w_rf(self.src_params, self.tgt_params, plan.w_clients)
-            for i in plan.w_clients:
-                self.src_params[i]["w_rf"] = w_rf
-            self.tgt_params["w_rf"] = w_rf
+            if self._frozen_w:
+                # seed-replay sync: everyone already holds the identical
+                # seed-derived W_RF; the "upload" is the O(1) key, and the
+                # decode re-derives the matrix bit-exactly
+                if wiretx:
+                    # one real key transfer proves the decode; the remaining
+                    # members' identical key messages are accounted analytically
+                    # (same bytes) instead of re-deriving the matrix K more times
+                    decoded = wiretx.transfer(
+                        wire.w_rf_message(
+                            self._w_init, sender=plan.w_clients[0], round=t,
+                            replay=("w_rf_init", self._w_key_data),
+                        )
+                    )["w_rf"]
+                    wiretx.account_spec(
+                        "w_rf", self._specs["w_rf"], count=len(plan.w_clients)
+                    )
+                    self.tgt_params["w_rf"] = jnp.asarray(decoded)
+            elif wiretx:
+                ws = [
+                    wiretx.transfer(
+                        wire.w_rf_message(self.src_params[i]["w_rf"], sender=i, round=t)
+                    )["w_rf"]
+                    for i in plan.w_clients
+                ] + [
+                    wiretx.transfer(
+                        wire.w_rf_message(self.tgt_params["w_rf"], sender=-1, round=t)
+                    )["w_rf"]
+                ]
+                w_rf = jnp.asarray(tree_mean(ws))
+                for i in plan.w_clients:
+                    self.src_params[i]["w_rf"] = w_rf
+                self.tgt_params["w_rf"] = w_rf
+            else:
+                w_rf = aggregation.fedavg_w_rf(
+                    self.src_params, self.tgt_params, plan.w_clients
+                )
+                for i in plan.w_clients:
+                    self.src_params[i]["w_rf"] = w_rf
+                self.tgt_params["w_rf"] = w_rf
 
         if proto.aggregate_classifier and t % proto.t_c == 0 and plan.c_clients:
-            clf = aggregation.fedavg_classifier(self.src_params, plan.c_clients)
+            if wiretx:
+                clfs = [
+                    wiretx.transfer_delta(
+                        wire.classifier_message(
+                            self.src_params[i]["classifier"], sender=i, round=t
+                        ),
+                        link=f"clf-up-{i}",
+                    )
+                    for i in plan.c_clients
+                ]
+                clf = jax.tree_util.tree_map(jnp.asarray, tree_mean(clfs))
+            else:
+                clf = aggregation.fedavg_classifier(self.src_params, plan.c_clients)
             for i in plan.c_clients:
                 self.src_params[i]["classifier"] = clf
             self.tgt_params["classifier"] = clf

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.centered_gram import centered_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize import fake_quant_pallas
 from repro.kernels.rff import rff_pallas
 from repro.kernels.rff_gram_stream import rff_gram_stream_pallas
 
@@ -102,6 +103,39 @@ def rff_gram_stream(
     col_sum = jnp.concatenate([mc[:n_feat, 1], ms[:n_feat, 1]])
     g_h = g - jnp.outer(col_sum, col_sum) / n  # rank-one centering correction
     return 0.5 * (g_h + g_h.T), u
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def fake_quant(
+    x: jax.Array,
+    u: jax.Array,
+    *,
+    bits: int = 8,
+    block: int = 8,
+    interpret: bool | None = None,
+):
+    """Fused stochastic quantize->dequantize of any-shape ``x`` with uniforms
+    ``u`` (same shape, in [0,1)) — the wire-codec round trip as one kernel.
+
+    The per-tensor absmax scale is a cheap XLA reduction over the *unpadded*
+    values; the elementwise divide/floor/clip/rescale runs in the Pallas
+    kernel over a padded (rows, 128) layout (zero padding quantizes to zero
+    under u=0 padding, then is sliced away).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qmax = (1 << (bits - 1)) - 1
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0).reshape(1, 1)
+    size = xf.size
+    cols = 128
+    rows = -(-size // cols)
+    rows += (-rows) % block
+    pad = rows * cols - size
+    xp = jnp.pad(xf.ravel(), (0, pad)).reshape(rows, cols)
+    up = jnp.pad(u.astype(jnp.float32).ravel(), (0, pad)).reshape(rows, cols)
+    out = fake_quant_pallas(xp, up, scale, qmax=qmax, block_r=block, interpret=interpret)
+    return out.ravel()[:size].reshape(x.shape).astype(x.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))

@@ -27,6 +27,18 @@ def rff_gram_stream_ref(x: jax.Array, omega: jax.Array, ell: jax.Array):
     return 0.5 * (g_h + g_h.T), sigma @ ell.astype(jnp.float32)
 
 
+def fake_quant_ref(x: jax.Array, u: jax.Array, *, bits: int) -> jax.Array:
+    """XLA twin of ops.fake_quant: stochastic-round quantize->dequantize with
+    a per-tensor absmax scale.  Bit-identical to the Pallas kernel (and to
+    comm.codecs.QuantCodec) given the same uniforms ``u``."""
+    qmax = (1 << (bits - 1)) - 1
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.floor(xf / scale + u.astype(jnp.float32)), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
 def attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0
 ) -> jax.Array:

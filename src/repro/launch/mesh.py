@@ -5,10 +5,24 @@ from __future__ import annotations
 import numpy as np
 
 
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across jax versions: ``axis_types`` and
+    ``jax.sharding.AxisType`` only exist on newer jax — fall back to a plain
+    mesh (equivalent to all-Auto axes) when they don't."""
+    import jax
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(
+        shape, axes, devices=devices, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) = 256 chips single pod; (2, 16, 16) = 512 chips across 2 pods."""
     import jax
-    from jax.sharding import AxisType
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -20,24 +34,17 @@ def make_production_mesh(*, multi_pod: bool = False):
             "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE "
             "importing jax (dryrun.py does this)."
         )
-    return jax.make_mesh(
-        shape, axes, devices=devs[:n], axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes, devs[:n])
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (smoke tests, examples)."""
     import jax
-    from jax.sharding import AxisType
 
     n = len(jax.devices())
     model = max(1, min(model, n))
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        devices=jax.devices()[: data * model],
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _make_mesh((data, model), ("data", "model"), jax.devices()[: data * model])
 
 
 def data_axis_size(mesh) -> int:

@@ -1,0 +1,334 @@
+"""repro.comm: wire format, codecs, transports, network scenarios.
+
+Coverage required by the subsystem's contracts:
+- codec round trips: quantize/dequantize relative-error bounds, seed-replay
+  bit-exactness of the reconstructed W_RF, sparsify/densify identity at
+  k=full, byte-count exactness vs len(serialized);
+- wire: serialize/deserialize round trip across kinds and codecs;
+- netsim: nesting invariant, deterministic trace record/replay, JSON round
+  trip, straggler deadlines driven by real payload bytes;
+- transports threaded through the protocol on both engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    BernoulliScenario,
+    LinkModel,
+    LinkScenario,
+    TableIIIScenario,
+    build_transport,
+    classifier_message,
+    deserialize,
+    get_codec,
+    load_trace,
+    moments_message,
+    record_trace,
+    save_trace,
+    serialize,
+    serialized_size,
+    table3_trace,
+    w_rf_message,
+)
+from repro.data import make_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.model import init_params, w_rf_key
+
+ALL_CODECS = ["float32", "float16", "bfloat16", "qint8", "qint4", "topk:0.25", "topk:7"]
+
+
+@pytest.fixture(scope="module")
+def payload(rng):
+    return rng.normal(size=(96,)).astype(np.float32)
+
+
+# ---- codecs ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ALL_CODECS)
+def test_byte_count_exactness(spec, payload):
+    """len(serialize(...)) == analytic serialized_size for every codec."""
+    codec = get_codec(spec)
+    msg = moments_message(payload, sender=3, round=11)
+    data = serialize(msg, codec, rng=np.random.default_rng(0))
+    assert len(data) == msg.nbytes(codec)
+    assert len(data) == serialized_size(
+        "moments", {"msg": (payload.shape, payload.dtype)}, codec
+    )
+
+
+@pytest.mark.parametrize("spec", ALL_CODECS)
+def test_wire_roundtrip_metadata(spec, payload):
+    codec = get_codec(spec)
+    msg = moments_message(payload, sender=5, round=42, downlink=True)
+    out, codec2 = deserialize(serialize(msg, codec, rng=np.random.default_rng(0)))
+    assert (out.kind, out.sender, out.round, out.downlink) == ("moments", 5, 42, True)
+    # the wire id carries the codec family; topk's k rides in the payload
+    assert codec2.name.partition(":")[0] == codec.name.partition(":")[0]
+    assert out.arrays["msg"].shape == payload.shape
+
+
+def test_float32_roundtrip_bitexact(payload):
+    out, _ = deserialize(serialize(moments_message(payload, sender=0, round=0), get_codec("float32")))
+    assert np.array_equal(out.arrays["msg"], payload)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_relative_error_bound(bits, payload):
+    """Stochastic rounding moves each value by at most one quantization step."""
+    codec = get_codec(f"qint{bits}")
+    out, _ = deserialize(
+        serialize(moments_message(payload, sender=0, round=0), codec, rng=np.random.default_rng(1))
+    )
+    qmax = (1 << (bits - 1)) - 1
+    step = np.abs(payload).max() / qmax
+    err = np.abs(out.arrays["msg"] - payload).max()
+    assert err <= step * (1 + 1e-6), (err, step)
+
+
+def test_quant_zero_tensor():
+    z = np.zeros((16,), np.float32)
+    out, _ = deserialize(
+        serialize(moments_message(z, sender=0, round=0), get_codec("qint8"),
+                  rng=np.random.default_rng(0))
+    )
+    assert np.array_equal(out.arrays["msg"], z)
+
+
+def test_topk_identity_at_full(payload):
+    """sparsify/densify is the identity when k == size."""
+    codec = get_codec("topk:1.0")
+    out, _ = deserialize(serialize(moments_message(payload, sender=0, round=0), codec))
+    assert np.array_equal(out.arrays["msg"], payload)
+
+
+def test_topk_keeps_largest(payload):
+    codec = get_codec("topk:4")
+    out, _ = deserialize(serialize(moments_message(payload, sender=0, round=0), codec))
+    got = out.arrays["msg"]
+    keep = np.sort(np.argsort(np.abs(payload))[-4:])
+    assert np.array_equal(np.flatnonzero(got), keep)
+    assert np.array_equal(got[keep], payload[keep])
+
+
+def test_seed_replay_w_rf_bitexact():
+    """The reconstructed W_RF equals init_params' draw bit for bit, from an
+    O(1) payload whose size is independent of (N, m)."""
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=64, m=8)
+    key = jax.random.PRNGKey(123)
+    w = np.asarray(init_params(cfg, key)["w_rf"])
+    key_data = np.asarray(jax.random.key_data(w_rf_key(cfg, key)))
+    codec = get_codec("seed_replay")
+    msg = w_rf_message(w, sender=0, round=0, replay=("w_rf_init", key_data))
+    data = serialize(msg, codec)
+    out, _ = deserialize(data)
+    assert np.array_equal(out.arrays["w_rf"], w)
+    big = ClientConfig(input_dim=8, n_classes=3, n_rff=512, m=64)
+    assert codec.nbytes((2 * big.n_rff, big.m), np.float32) == codec.nbytes(
+        w.shape, np.float32
+    )  # O(1): key + generator id, not O(N m)
+
+
+def test_seed_replay_rejects_data_payloads():
+    with pytest.raises(ValueError):
+        serialize(moments_message(np.ones(4, np.float32), sender=0, round=0),
+                  get_codec("seed_replay"))
+
+
+def test_classifier_multiarray_roundtrip(rng):
+    clf = {"w": rng.normal(size=(8, 3)).astype(np.float32),
+           "b": rng.normal(size=(3,)).astype(np.float32)}
+    out, _ = deserialize(serialize(classifier_message(clf, sender=2, round=9),
+                                   get_codec("float32")))
+    assert np.array_equal(out.arrays["w"], clf["w"])
+    assert np.array_equal(out.arrays["b"], clf["b"])
+
+
+def test_quant_roundtrip_twin_matches_codec_formula(payload):
+    """The jittable roundtrip twin obeys the same one-step error bound and is
+    deterministic per key (the batched engine's in-graph channel)."""
+    codec = get_codec("qint8")
+    x = jnp.asarray(payload)
+    a = codec.roundtrip(x, jax.random.PRNGKey(0))
+    b = codec.roundtrip(x, jax.random.PRNGKey(0))
+    assert jnp.array_equal(a, b)
+    step = float(jnp.abs(x).max()) / 127
+    assert float(jnp.abs(a - x).max()) <= step * (1 + 1e-6)
+
+
+# ---- netsim ----------------------------------------------------------------
+
+
+def test_scenarios_nested_invariant():
+    rng = np.random.default_rng(0)
+    scenarios = [
+        TableIIIScenario("III"),
+        BernoulliScenario(0.3, 0.3, 0.3),
+        LinkScenario([LinkModel(drop=0.4) for _ in range(6)], deadline_s=1.0),
+    ]
+    for sc in scenarios:
+        for t in range(1, 30):
+            p = sc.plan(rng, 6, t)
+            assert set(p.c_clients) <= set(p.w_clients) <= set(p.msg_clients)
+
+
+def test_table3_scenario_matches_plan_round():
+    from repro.federated.network import plan_round
+
+    a = TableIIIScenario("II")
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    for t in range(1, 20):
+        p, q = a.plan(r1, 5, t), plan_round(r2, 5, "II")
+        assert (p.msg_clients, p.w_clients, p.c_clients) == (
+            q.msg_clients, q.w_clients, q.c_clients)
+
+
+def test_trace_record_replay_deterministic(tmp_path):
+    trace = record_trace(BernoulliScenario(0.5, 0.2, 0.2), np.random.default_rng(3), 5, 12)
+    path = tmp_path / "trace.json"
+    save_trace(trace, path)
+    loaded = load_trace(path)
+    rng = np.random.default_rng(999)  # replay must ignore the rng entirely
+    for t in range(1, 13):
+        p, q = trace.plan(rng, 5, t), loaded.plan(rng, 5, t)
+        assert (p.msg_clients, p.w_clients, p.c_clients) == (
+            q.msg_clients, q.w_clients, q.c_clients)
+    with pytest.raises(IndexError):
+        loaded.plan(rng, 5, 13)
+    assert load_trace(path, cycle=True).plan(rng, 5, 13) is not None
+
+
+def test_table3_trace_settings():
+    for setting in ("I", "II", "III"):
+        tr = table3_trace(setting, 4, 8, seed=1)
+        assert len(tr.plans) == 8
+
+
+def test_link_scenario_straggler_bytes():
+    """A tight deadline drops exactly the payloads too big for the pipe."""
+    # 1 KB/s link, 0.5 s deadline -> 400-byte payloads pass, 4000-byte fail
+    links = [LinkModel(bandwidth_bps=1000.0)] * 3
+    sc = LinkScenario(links, deadline_s=0.5,
+                      payload_bytes={"moments": 400, "w_rf": 4000, "classifier": 400})
+    p = sc.plan(np.random.default_rng(0), 3, 1)
+    assert p.msg_clients == [0, 1, 2]
+    assert p.w_clients == []  # stragglers: W_RF can't make the deadline
+    assert p.c_clients == []  # nesting: classifier ⊆ w even though it fits
+
+
+def test_bernoulli_rates_without_sampling():
+    sc = BernoulliScenario(0.5, 0.0, 0.0, sample_s_t=False)
+    rng = np.random.default_rng(0)
+    got = np.mean([len(sc.plan(rng, 10, t).msg_clients) for t in range(1, 400)])
+    assert 4.0 < got < 6.0  # ~Binomial(10, 0.5) mean
+
+
+# ---- transports through the protocol ---------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    doms = make_domains(4, 96, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=16, m=4, extractor_widths=(8, 4))
+    return doms[:3], doms[3], cfg
+
+
+def _train(sources, target, cfg, **kw):
+    proto = ProtocolConfig(n_rounds=4, t_c=2, warmup_rounds=1, batch_size=24, seed=0, **kw)
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    tr.train()
+    return tr
+
+
+def test_identity_accounting_matches_wire_float32(tiny_setup):
+    """Analytic identity-transport bytes == real serialized wire bytes."""
+    s, t, cfg = tiny_setup
+    a = _train(s, t, cfg, engine="serial")
+    b = _train(s, t, cfg, engine="serial", transport="wire")
+    assert a.comm.bytes_by_kind == b.comm.bytes_by_kind
+    assert a.comm.total == b.comm.total  # float accounting unchanged
+    assert a.comm.messages_by_kind == b.comm.messages_by_kind
+
+
+def test_wire_float32_serial_matches_identity_trajectory(tiny_setup):
+    """float32 wire round trips are bit-exact: same final accuracy."""
+    s, t, cfg = tiny_setup
+    a = _train(s, t, cfg, engine="serial")
+    b = _train(s, t, cfg, engine="serial", transport="wire")
+    assert a.evaluate() == b.evaluate()
+
+
+def test_engines_agree_on_byte_accounting(tiny_setup):
+    s, t, cfg = tiny_setup
+    a = _train(s, t, cfg, engine="batched")
+    b = _train(s, t, cfg, engine="serial")
+    assert a.comm.bytes_by_kind == b.comm.bytes_by_kind
+
+
+@pytest.mark.parametrize("engine", ["serial", "batched"])
+def test_wire_seed_replay_end_to_end(tiny_setup, engine):
+    """seed_replay runs on both engines, pins W_RF bit-exactly to the shared
+    init everywhere, and makes W_RF wire bytes shape-independent."""
+    s, t, cfg = tiny_setup
+    tr = _train(s, t, cfg, engine=engine, transport="wire", codec="seed_replay")
+    w0 = np.asarray(tr._w_init)
+    assert np.array_equal(np.asarray(tr.tgt_params["w_rf"]), w0)
+    for i in range(tr.k):
+        assert np.array_equal(np.asarray(tr._src_param(i)["w_rf"]), w0)
+    n_w = tr.comm.messages_by_kind["w_rf"]
+    if n_w:
+        per_msg = tr.comm.bytes_by_kind["w_rf"] / n_w
+        dense = get_codec("float32").nbytes((2 * cfg.n_rff, cfg.m), np.float32)
+        assert per_msg < 64 < dense  # O(1) key vs O(Nm) floats
+    assert tr.comm.w_rf == 0  # no W floats uploaded
+    assert 0.0 <= tr.evaluate() <= 1.0
+
+
+@pytest.mark.parametrize("engine", ["serial", "batched"])
+def test_wire_qint8_end_to_end(tiny_setup, engine):
+    s, t, cfg = tiny_setup
+    tr = _train(s, t, cfg, engine=engine, transport="wire", codec="qint8")
+    assert 0.0 <= tr.evaluate() <= 1.0
+    if tr.comm.messages_by_kind["moments"]:
+        per_msg = tr.comm.bytes_by_kind["moments"] / tr.comm.messages_by_kind["moments"]
+        dense = serialized_size(
+            "moments", {"msg": ((2 * cfg.n_rff,), np.dtype(np.float32))},
+            get_codec("float32"),
+        )
+        # 4 bytes/elt -> 1 byte/elt + scale; headers identical
+        assert per_msg <= dense - 3 * 2 * cfg.n_rff + 4
+
+
+def test_trace_scenario_through_protocol(tiny_setup):
+    """An explicit trace drives the protocol deterministically: same trace,
+    same byte log, on both engines."""
+    s, t, cfg = tiny_setup
+    trace = table3_trace("III", n_clients=3, rounds=4, seed=5)
+    a = _train(s, t, cfg, engine="batched", scenario=trace)
+    b = _train(s, t, cfg, engine="serial", scenario=trace)
+    assert a.comm.bytes_by_kind == b.comm.bytes_by_kind
+    assert a.comm.total == b.comm.total
+
+
+def test_delta_topk_classifier_converges_to_reference(tiny_setup):
+    """Delta-coded top-k classifier sync: error does not accumulate (the
+    reference rolls forward), and k=full deltas reproduce float32 exactly."""
+    s, t, cfg = tiny_setup
+    a = _train(s, t, cfg, engine="serial", transport="wire")
+    b = _train(s, t, cfg, engine="serial", transport="wire", codec_classifier="topk:1.0")
+    aw = np.asarray(a.tgt_params["classifier"]["w"])
+    bw = np.asarray(b.tgt_params["classifier"]["w"])
+    # k=full delta transfers are lossless, but reconstruct as ref+(v-ref):
+    # allow ulp-level drift, nothing structural
+    np.testing.assert_allclose(aw, bw, rtol=0, atol=1e-6)
+
+
+def test_unknown_transport_and_codec_raise():
+    with pytest.raises(ValueError):
+        build_transport("carrier-pigeon")
+    with pytest.raises(ValueError):
+        build_transport("wire", "mp3")
+    with pytest.raises(ValueError):
+        build_transport("wire", "float32", codec_moments="seed_replay")

@@ -117,3 +117,38 @@ def test_rff_kernel_feeds_rf_tca():
     _, _, s1 = rf_tca(xs, xt, n_features=64, m=8, gamma=1e-2, use_pallas=True)
     _, _, s2 = rf_tca(xs, xt, n_features=64, m=8, gamma=1e-2, use_pallas=False)
     np.testing.assert_allclose(np.asarray(s1.eigvals), np.asarray(s2.eigvals), rtol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(512,), (512, 32), (7, 13), (1,), (1024, 5)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_fake_quant_kernel_matches_xla_twin(shape, bits):
+    """Fused Pallas quantize/dequantize == jitted XLA twin, bitwise (the two
+    receive identical uniforms, so stochastic rounding agrees exactly)."""
+    key = jax.random.PRNGKey(sum(shape) + bits)
+    x = jax.random.normal(key, shape)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), shape)
+    got = ops.fake_quant(x, u, bits=bits)
+    exp = jax.jit(lambda a, b: ref.fake_quant_ref(a, b, bits=bits))(x, u)
+    assert jnp.array_equal(got, exp), float(jnp.abs(got - exp).max())
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_fake_quant_roundtrip_error_bound(bits):
+    """Stochastic rounding moves each value by < one quantization step."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (256, 16)) * 5.0
+    u = jax.random.uniform(jax.random.fold_in(key, 1), x.shape)
+    out = ops.fake_quant(x, u, bits=bits)
+    qmax = (1 << (bits - 1)) - 1
+    step = float(jnp.abs(x).max()) / qmax
+    assert float(jnp.abs(out - x).max()) <= step * (1 + 1e-6)
+
+
+def test_fake_quant_zero_and_halfu_deterministic():
+    """All-zero inputs survive exactly; u=0.5 gives round-to-nearest."""
+    z = jnp.zeros((64,))
+    assert jnp.array_equal(ops.fake_quant(z, jnp.full(z.shape, 0.5), bits=8), z)
+    x = jnp.asarray([1.0, -1.0, 0.49, -0.49]) * 0.127
+    u = jnp.full(x.shape, 0.5)
+    out = ops.fake_quant(x, u, bits=8)  # scale = 0.001: nearest code per entry
+    np.testing.assert_allclose(np.asarray(out), [0.127, -0.127, 0.062, -0.062], atol=1e-6)
