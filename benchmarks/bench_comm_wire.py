@@ -47,18 +47,22 @@ def payload_bytes_table(cfg: ClientConfig) -> dict:
     return table
 
 
-def _train_acc(sources, target, cfg, **kw) -> tuple[float, dict]:
+def _train_acc(sources, target, cfg, smoke: bool = False, **kw) -> tuple[float, dict]:
+    rounds = 6 if smoke else 60
     proto = ProtocolConfig(
-        n_rounds=60, t_c=15, warmup_rounds=60, lr=5e-3, batch_size=48, seed=0, **kw
+        n_rounds=rounds, t_c=max(rounds // 4, 1), warmup_rounds=rounds,
+        lr=5e-3, batch_size=48, seed=0, **kw
     )
     tr = FedRFTCATrainer(sources, target, cfg, proto)
-    accs = tr.train(eval_every=10)
+    accs = tr.train(eval_every=max(rounds // 6, 1))
     return float(np.mean(accs[-3:])), dict(tr.comm.bytes_by_kind)
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    """Full bench by default; ``smoke=True`` shrinks every training run so CI
+    can validate the emitted BENCH_comm.json schema in seconds."""
     paper_cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=512, m=32, lambda_mmd=2.0)
-    record: dict = {"bytes_per_payload": payload_bytes_table(paper_cfg)}
+    record: dict = {"smoke": smoke, "bytes_per_payload": payload_bytes_table(paper_cfg)}
 
     # headline: W_RF bytes at N and 4N — dense scales, seed-replay does not
     for scale, n_rff in (("1x", paper_cfg.n_rff), ("4x", 4 * paper_cfg.n_rff)):
@@ -70,25 +74,28 @@ def run() -> None:
              f"float32={dense},seed_replay={seed},ratio={dense/seed:.0f}x")
 
     # end-to-end curves on a small-but-trained config (batched engine)
-    sources, target = da_suite(n=240)
+    sources, target = da_suite(n=80 if smoke else 240)
     cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
 
-    acc_id, bytes_id = _train_acc(sources, target, cfg)
+    acc_id, bytes_id = _train_acc(sources, target, cfg, smoke)
     record["identity"] = {"acc": acc_id, "bytes": bytes_id}
     emit("comm_wire/identity", 0.0, f"acc={acc_id:.3f},bytes={sum(bytes_id.values())}")
 
+    codecs = ["float32", "seed_replay"] if smoke else [
+        "float32", "bfloat16", "qint8", "qint4", "seed_replay"
+    ]
     codec_curve = {}
-    for name in ["float32", "bfloat16", "qint8", "qint4", "seed_replay"]:
-        acc, nbytes = _train_acc(sources, target, cfg, transport="wire", codec=name)
+    for name in codecs:
+        acc, nbytes = _train_acc(sources, target, cfg, smoke, transport="wire", codec=name)
         codec_curve[name] = {"acc": acc, "bytes": nbytes, "gap": acc_id - acc}
         emit(f"comm_wire/codec_{name}", 0.0,
              f"acc={acc:.3f},gap={acc_id-acc:+.3f},bytes={sum(nbytes.values())}")
     record["accuracy_vs_codec"] = codec_curve
 
     loss_curve = {}
-    for p in (0.0, 0.2, 0.4, 0.6):
+    for p in (0.0, 0.4) if smoke else (0.0, 0.2, 0.4, 0.6):
         acc, nbytes = _train_acc(
-            sources, target, cfg, transport="wire",
+            sources, target, cfg, smoke, transport="wire",
             scenario=BernoulliScenario(p_msg=p, p_w=p, p_c=p),
         )
         loss_curve[f"{p:.1f}"] = {"acc": acc, "bytes": nbytes}

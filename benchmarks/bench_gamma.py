@@ -6,8 +6,6 @@ rank-one term is either negligible or dominant and accuracy plateaus.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import da_suite, emit, timed
 from repro.baselines import tca_baseline

@@ -7,7 +7,6 @@ TPU performance. TPU performance is assessed structurally in §Roofline.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed

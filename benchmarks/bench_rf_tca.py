@@ -100,12 +100,62 @@ def fit_perf(n: int = 4096, n_features: int = 256, m: int = 32) -> dict:
     return out
 
 
-def round_engine_perf(rounds: int = 10) -> dict:
+def large_n_perf(n_features: int = 2048, n: int = 512) -> dict:
+    """Tiled streaming-Gram kernel past the untiled VMEM ceiling.
+
+    Times the auto-tiled Pallas path (interpret mode on CPU) against the
+    tiled XLA twin at the same shape, records their relative agreement and
+    the per-instance accumulator footprint the tiling buys (bounded by the
+    tile, not N — the quantity the VMEM-proxy test asserts on).
+    """
+    from repro.core.kernels_math import ell_vector
+    from repro.core.rf_tca import streaming_gram
+    from repro.kernels import ops as kops
+
+    plan = kops.gram_tile_plan(n_features)
+    rng = np.random.default_rng(0)
+    p = 16
+    x = jnp.asarray(rng.normal(size=(p, n)), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    omega = jnp.asarray(rng.normal(size=(n_features, p)), jnp.float32)
+
+    pallas = lambda: kops.rff_gram_stream(x, omega, ell)  # auto-tiled
+    twin = lambda: streaming_gram(x, ell, omega, block=128, tile=plan["tile"])
+    g_p, u_p = jax.block_until_ready(pallas())  # warm both compiles
+    g_t, u_t = jax.block_until_ready(twin())
+    ts: dict = {"pallas": [], "twin": []}
+    for name, fn in (("pallas", pallas), ("twin", twin)):
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts[name].append(time.perf_counter() - t0)
+    scale = float(jnp.abs(g_t).max())
+    rel = float(jnp.abs(g_p - g_t).max()) / scale
+    out = {
+        "shape": {"n": n, "N": n_features, "p": p},
+        "tile": plan["tile"],
+        "tiled_pallas_s": min(ts["pallas"]),
+        "tiled_twin_s": min(ts["twin"]),
+        "rel_err_pallas_vs_twin": rel,
+        "u_abs_err": float(jnp.abs(u_p - u_t).max()),
+        # what the tiling buys: per-instance accumulator bytes vs untiled
+        "acc_bytes_tiled": plan["acc_bytes"],
+        "acc_bytes_untiled": kops.gram_tile_plan(n_features, tile=0)["acc_bytes"],
+    }
+    emit(
+        "fig3/gram_large_N", out["tiled_pallas_s"] * 1e6,
+        f"N={n_features},tile={plan['tile']},rel_err={rel:.1e},"
+        f"acc_mem={plan['acc_bytes']/2**20:.1f}MiB",
+    )
+    return out
+
+
+def round_engine_perf(rounds: int = 10, n_per_domain: int = 400) -> dict:
     """Per-round wall-time of the serial vs batched protocol data plane."""
     from repro.data import make_domains
     from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
 
-    doms = make_domains(5, 400, shift=0.8, seed=0)
+    doms = make_domains(5, n_per_domain, shift=0.8, seed=0)
     cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16)
     res = {}
     for engine in ("serial", "batched"):
@@ -123,12 +173,78 @@ def round_engine_perf(rounds: int = 10) -> dict:
     return res
 
 
-def run() -> None:
-    record: dict = {"bench": "rf_tca"}
-    record["fit"] = fit_perf()
-    record["round_engine"] = round_engine_perf()
+def ragged_round_perf(rounds: int = 6) -> dict:
+    """Ragged-K rounds: unequal per-client datasets through both planes.
 
-    sources, target = da_suite()
+    The batched plane pads each client to the max width and masks — this row
+    tracks its per-round cost on heterogeneous clients plus the max parameter
+    divergence from the serial reference under full participation (should sit
+    at fp32 noise; the seed engine's min-truncation made the planes diverge).
+    """
+    from repro.data import make_domains
+    from repro.data.domains import Domain
+    from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+    from repro.federated import network as fed_network
+    from repro.federated.network import RoundPlan
+
+    doms = make_domains(5, 400, shift=0.8, seed=0)
+    sizes = (400, 250, 120, 40)
+    sources = [
+        Domain(f"rag{i}", d.x[:, :s], d.y[:s]) for i, (d, s) in enumerate(zip(doms, sizes))
+    ]
+    cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16)
+    orig_plan = fed_network.plan_round
+    fed_network.plan_round = lambda rng, n, s: RoundPlan(
+        list(range(n)), list(range(n)), list(range(n))
+    )
+    try:
+        res: dict = {"client_sizes": list(sizes)}
+        trainers = {}
+        for engine in ("serial", "batched"):
+            proto = ProtocolConfig(
+                n_rounds=rounds, t_c=5, warmup_rounds=1, batch_size=64,
+                message_batch_size=256, seed=0, engine=engine,
+            )
+            tr = FedRFTCATrainer(sources, doms[4], cfg, proto)
+            tr.round(0)  # compile
+            t0 = time.perf_counter()
+            tr.train()
+            res[f"{engine}_s"] = (time.perf_counter() - t0) / rounds
+            trainers[engine] = tr
+            emit(f"fig3/ragged_round_{engine}", res[f"{engine}_s"] * 1e6,
+                 f"K=4,n_k={sizes}")
+        err = max(
+            float(np.abs(np.asarray(a) - np.asarray(b)).max())
+            for a, b in zip(
+                jax.tree_util.tree_leaves(trainers["serial"].tgt_params),
+                jax.tree_util.tree_leaves(trainers["batched"].tgt_params),
+            )
+        )
+        res["speedup_batched_vs_serial"] = res["serial_s"] / res["batched_s"]
+        res["max_param_divergence"] = err
+        emit("fig3/ragged_round_equiv", 0.0,
+             f"max_param_div={err:.1e},speedup={res['speedup_batched_vs_serial']:.1f}x")
+        return res
+    finally:
+        fed_network.plan_round = orig_plan
+
+
+def run(smoke: bool = False) -> None:
+    """Full bench by default; ``smoke=True`` runs every row at tiny sizes so
+    CI can validate the emitted BENCH_rf_tca.json schema in seconds."""
+    record: dict = {"bench": "rf_tca", "smoke": smoke}
+    if smoke:
+        record["fit"] = fit_perf(n=256, n_features=64, m=8)
+        record["large_n"] = large_n_perf(n_features=1280, n=128)
+        record["round_engine"] = round_engine_perf(rounds=2, n_per_domain=120)
+        record["ragged_rounds"] = ragged_round_perf(rounds=2)
+    else:
+        record["fit"] = fit_perf()
+        record["large_n"] = large_n_perf()
+        record["round_engine"] = round_engine_perf()
+        record["ragged_rounds"] = ragged_round_perf()
+
+    sources, target = da_suite(n=60 if smoke else 400)
     acc_src, t_src = timed(source_only, sources, target, seed=0)
     emit("fig3/source_only", t_src, f"acc={acc_src:.3f}")
 
@@ -138,8 +254,9 @@ def run() -> None:
     acc_rtca, t_rtca = timed(tca_baseline, sources, target, gamma=1e-3, m=16, variant="r")
     emit("fig3/r_tca", t_rtca, f"acc={acc_rtca:.3f}")
 
+    n_sweep = (50, 100) if smoke else (100, 500, 1000)
     accs = {}
-    for n in (100, 500, 1000):
+    for n in n_sweep:
         acc, t = timed(rf_tca_baseline, sources, target, n_features=n, gamma=1e-3, m=16)
         accs[n] = acc
         emit(f"fig3/rf_tca_N{n}", t, f"acc={acc:.3f},speedup_vs_tca={t_tca/t:.1f}x")
@@ -148,13 +265,13 @@ def run() -> None:
     emit("fig3/coral", t, f"acc={acc_coral:.3f}")
     acc_jda, t = timed(jda_baseline, sources, target, gamma=1e-3, iters=2)
     emit("fig3/jda", t, f"acc={acc_jda:.3f}")
-    acc_dann, t = timed(dann_mmd_baseline, sources, target, steps=300)
+    acc_dann, t = timed(dann_mmd_baseline, sources, target, steps=30 if smoke else 300)
     emit("fig3/dann", t, f"acc={acc_dann:.3f}")
 
     # paper claim: more random features never hurts much (monotone-ish)
     emit(
         "fig3/claim_N_trend", 0.0,
-        f"acc_N100={accs[100]:.3f}<=~acc_N1000={accs[1000]:.3f}",
+        f"acc_N{n_sweep[0]}={accs[n_sweep[0]]:.3f}<=~acc_N{n_sweep[-1]}={accs[n_sweep[-1]]:.3f}",
     )
 
     record["accuracy"] = {

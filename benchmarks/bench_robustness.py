@@ -7,7 +7,6 @@ Claims checked:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import da_suite, emit, timed
 from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig

@@ -5,19 +5,29 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run --only fig3,table2
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny fig3 + wire
 
 The ``fig3`` bench additionally writes ``BENCH_rf_tca.json`` at the repo root
-(fit wall-times dense/stream/lobpcg, speedups, peak-memory proxy, round-engine
-per-round times, accuracies) and ``wire`` writes ``BENCH_comm.json``
-(bytes-on-wire per payload per codec, accuracy-vs-loss-rate and
-accuracy-vs-codec curves) — the machine-readable records tracked across PRs.
+(fit wall-times dense/stream/lobpcg, speedups, peak-memory proxy, tiled
+large-N kernel agreement, round-engine per-round times serial/batched/ragged,
+accuracies) and ``wire`` writes ``BENCH_comm.json`` (bytes-on-wire per payload
+per codec, accuracy-vs-loss-rate and accuracy-vs-codec curves) — the
+machine-readable records tracked across PRs.
+
+``--smoke`` reruns exactly those two record-writing benches at tiny sizes and
+schema-validates the emitted JSON (required keys present, wall-times positive,
+agreement within tolerance) so the perf records cannot silently rot — this is
+the CI ``bench-smoke`` job.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 import time
 import traceback
+from pathlib import Path
 
 from benchmarks import (
     bench_ablation,
@@ -48,12 +58,121 @@ BENCHES = {
 }
 
 
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _is_pos(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0 and math.isfinite(v)
+
+
+class _SchemaErrors(list):
+    """Collects dotted-path schema violations against a bench record."""
+
+    def __init__(self, record: dict):
+        super().__init__()
+        self.record = record
+
+    def need(self, path: str, pred=None) -> None:
+        cur = self.record
+        for part in path.split("."):
+            if not isinstance(cur, dict) or part not in cur:
+                self.append(f"missing key {path}")
+                return
+            cur = cur[part]
+        if pred is not None and not pred(cur):
+            self.append(f"bad value at {path}: {cur!r}")
+
+
+def validate_rf_tca_record(record: dict) -> list[str]:
+    """BENCH_rf_tca.json contract: keys present, wall-times positive, the
+    tiled kernel within tolerance of its twin, ragged planes in agreement."""
+    e = _SchemaErrors(record)
+    acc01 = lambda d: isinstance(d, dict) and d and all(
+        isinstance(v, (int, float)) and 0.0 <= v <= 1.0 for v in d.values()
+    )
+    for k in ("fit.dense_s", "fit.stream_s", "fit.lobpcg_s",
+              "fit.speedup_stream_vs_dense", "fit.memory_proxy_bytes.dense",
+              "fit.memory_proxy_bytes.stream", "large_n.tiled_pallas_s",
+              "large_n.tiled_twin_s", "large_n.tile", "large_n.acc_bytes_tiled",
+              "round_engine.serial", "round_engine.batched",
+              "round_engine.speedup_batched_vs_serial", "ragged_rounds.serial_s",
+              "ragged_rounds.batched_s"):
+        e.need(k, _is_pos)
+    e.need("large_n.rel_err_pallas_vs_twin", lambda v: 0.0 <= v <= 1e-4)
+    e.need("ragged_rounds.max_param_divergence", lambda v: 0.0 <= v <= 1e-3)
+    e.need("ragged_rounds.client_sizes", lambda v: isinstance(v, list) and len(set(v)) > 1)
+    e.need("accuracy", acc01)
+    return list(e)
+
+
+def validate_comm_record(record: dict) -> list[str]:
+    """BENCH_comm.json contract: exact byte tables and accuracy curves."""
+    e = _SchemaErrors(record)
+    bytes_table = lambda d: isinstance(d, dict) and d and all(
+        isinstance(kinds, dict) and kinds and all(_is_pos(b) for b in kinds.values())
+        for kinds in d.values()
+    )
+    e.need("bytes_per_payload", bytes_table)
+    for scale in ("1x", "4x"):
+        e.need(f"w_rf_bytes_{scale}.float32", _is_pos)
+        e.need(f"w_rf_bytes_{scale}.seed_replay", _is_pos)
+    # the headline O(1) claim: seed-replay bytes must not grow with N
+    if not self_consistent_seed_replay(record):
+        e.append("w_rf seed_replay bytes grew between 1x and 4x N")
+    e.need("identity.acc", lambda v: 0.0 <= v <= 1.0)
+    e.need("identity.bytes", lambda d: isinstance(d, dict) and all(_is_pos(v) for v in d.values()))
+    curve = lambda d: isinstance(d, dict) and d and all(
+        isinstance(row, dict) and 0.0 <= row.get("acc", -1.0) <= 1.0 for row in d.values()
+    )
+    e.need("accuracy_vs_codec", curve)
+    e.need("accuracy_vs_loss_rate", curve)
+    return list(e)
+
+
+def self_consistent_seed_replay(record: dict) -> bool:
+    try:
+        return (
+            record["w_rf_bytes_4x"]["seed_replay"] <= record["w_rf_bytes_1x"]["seed_replay"]
+        )
+    except (KeyError, TypeError):
+        return False
+
+
+def run_smoke() -> None:
+    """CI bench-smoke: tiny fig3 + wire runs, then schema-validate the JSONs."""
+    for key, fn in (("fig3", bench_rf_tca.run), ("wire", bench_comm_wire.run)):
+        print(f"# --- smoke {key} ---", flush=True)
+        t0 = time.time()
+        fn(smoke=True)
+        print(f"# smoke {key} done in {time.time()-t0:.1f}s", flush=True)
+    errors = []
+    for name, validate in (
+        ("BENCH_rf_tca.json", validate_rf_tca_record),
+        ("BENCH_comm.json", validate_comm_record),
+    ):
+        path = ROOT / name
+        if not path.exists():
+            errors.append(f"{name}: not written")
+            continue
+        errors += [f"{name}: {msg}" for msg in validate(json.loads(path.read_text()))]
+    if errors:
+        sys.exit("bench record schema violations:\n  " + "\n  ".join(errors))
+    print("# smoke: BENCH_rf_tca.json + BENCH_comm.json schemas OK", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny fig3+wire runs, then schema-validate the emitted JSON records",
+    )
     args = ap.parse_args()
-    selected = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
+    if args.smoke:
+        run_smoke()
+        return
+    selected = args.only.split(",") if args.only else list(BENCHES)
     failed = []
     for key in selected:
         title, fn = BENCHES[key]

@@ -22,7 +22,13 @@ from repro.core.rf_tca import rf_tca
 from repro.core.tca import r_tca, vanilla_tca
 from repro.data.domains import Domain
 from repro.federated.aggregation import fedavg_models
-from repro.federated.model import ClientConfig, accuracy, init_params, logits_of, make_omega, source_loss
+from repro.federated.model import (
+    ClientConfig,
+    accuracy,
+    init_params,
+    make_omega,
+    source_loss,
+)
 from repro.optim import adam, apply_updates
 
 
@@ -111,7 +117,9 @@ def rf_tca_baseline(
         sigma=sigma,
         seed=seed,
     )
-    return _transductive_eval(np.asarray(f_s).T, src.y, np.asarray(f_t).T, target.y, classifier, seed)
+    return _transductive_eval(
+        np.asarray(f_s).T, src.y, np.asarray(f_t).T, target.y, classifier, seed
+    )
 
 
 def coral_baseline(sources: list[Domain], target: Domain, *, classifier="mlp", seed=0) -> float:
@@ -174,11 +182,11 @@ def jda_baseline(
                 e[t_idx] = -1.0 / len(t_idx)
                 m0 += np.outer(e, e)
         b = gamma * np.eye(n) + k @ m0 @ k
-        l = np.linalg.cholesky(b + 1e-8 * np.eye(n))
-        c_mat = np.linalg.solve(l, np.linalg.solve(l, khk).T).T
+        chol = np.linalg.cholesky(b + 1e-8 * np.eye(n))
+        c_mat = np.linalg.solve(chol, np.linalg.solve(chol, khk).T).T
         c_mat = 0.5 * (c_mat + c_mat.T)
         w, v = np.linalg.eigh(c_mat)
-        vecs = np.linalg.solve(l.T, v[:, ::-1][:, :m])
+        vecs = np.linalg.solve(chol.T, v[:, ::-1][:, :m])
         feats = (vecs.T @ k)  # (m, n)
         pred = knn_1(feats[:, :n_s].T, src.y)
         y_t_pseudo = pred(feats[:, n_s:].T)

@@ -17,7 +17,10 @@ import numpy as np
 
 def _flatten_with_paths(tree):
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
-    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp) for kp, _ in leaves_with_paths]
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp)
+        for kp, _ in leaves_with_paths
+    ]
     leaves = [v for _, v in leaves_with_paths]
     return paths, leaves
 
@@ -32,7 +35,7 @@ def save(path: str, tree, step: int | None = None, keep: int = 3) -> str:
         target = path if path.endswith(".npz") else path + ".npz"
     paths, leaves = _flatten_with_paths(tree)
     treedef = jax.tree_util.tree_structure(tree)
-    payload = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    payload = {f"leaf_{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
     payload["__paths__"] = np.array(json.dumps(paths))
     payload["__treedef__"] = np.array(str(treedef))
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(target)), suffix=".tmp")

@@ -1,7 +1,7 @@
 """Model/config schema shared by all assigned architectures + input shapes."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax.numpy as jnp
@@ -96,7 +96,10 @@ class ModelConfig:
             remat=False,
         )
         if self.n_experts:
-            base.update(n_experts=4, top_k=min(self.top_k, 2), n_shared_experts=min(self.n_shared_experts, 1))
+            base.update(
+                n_experts=4, top_k=min(self.top_k, 2),
+                n_shared_experts=min(self.n_shared_experts, 1),
+            )
         if self.kv_lora_rank:
             base.update(kv_lora_rank=64, rope_head_dim=32)
         if self.ssm_state:

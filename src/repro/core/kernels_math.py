@@ -15,7 +15,9 @@ def pairwise_sq_dists(x: jnp.ndarray, y: jnp.ndarray | None = None) -> jnp.ndarr
     return jnp.maximum(d, 0.0)
 
 
-def gaussian_kernel(x: jnp.ndarray, sigma: float = 1.0, y: jnp.ndarray | None = None) -> jnp.ndarray:
+def gaussian_kernel(
+    x: jnp.ndarray, sigma: float = 1.0, y: jnp.ndarray | None = None
+) -> jnp.ndarray:
     """K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)), columns-as-samples."""
     return jnp.exp(-pairwise_sq_dists(x, y) / (2.0 * sigma**2))
 
@@ -43,6 +45,44 @@ def median_sigma(x: jnp.ndarray, max_n: int = 512) -> float:
     d = pairwise_sq_dists(x)
     off = d[jnp.triu_indices(d.shape[0], k=1)]
     return float(jnp.sqrt(jnp.median(off) / 2.0) + 1e-12)
+
+
+def assemble_streamed_gram(
+    gcc: jnp.ndarray,
+    gcs: jnp.ndarray,
+    gss: jnp.ndarray,
+    u_c: jnp.ndarray,
+    u_s: jnp.ndarray,
+    s_c: jnp.ndarray,
+    s_s: jnp.ndarray,
+    *,
+    n: int,
+    fold_n: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(G_H, u) from streamed cos/sin Gram blocks — the single home of the
+    [cos; sin] block assembly + rank-one centering shared by every streaming
+    Gram implementation (untiled scan, tiled twin, and the Pallas wrapper).
+
+    Inputs are the accumulated statistics ``G_cc/G_cs/G_ss`` ((N, N) each),
+    the moment halves ``u_c/u_s`` and the feature column sums ``s_c/s_s``
+    ((N,) each).  ``fold_n``: the true feature count N when the features were
+    accumulated *unscaled* (the 1/sqrt(N) normalization is folded in here,
+    quadratic for G, linear for u and the column sum); None when the producer
+    already normalized (the Pallas kernels fold it into cos/sin).
+    """
+    if fold_n is not None:
+        inv2 = 1.0 / jnp.float32(fold_n)
+        inv = jnp.sqrt(inv2)
+        gcc, gcs, gss = inv2 * gcc, inv2 * gcs, inv2 * gss
+        u_c, u_s, s_c, s_s = inv * u_c, inv * u_s, inv * s_c, inv * s_s
+    g = jnp.concatenate(
+        [jnp.concatenate([gcc, gcs], axis=1), jnp.concatenate([gcs.T, gss], axis=1)],
+        axis=0,
+    )
+    u = jnp.concatenate([u_c, u_s])
+    col_sum = jnp.concatenate([s_c, s_s])
+    g_h = g - jnp.outer(col_sum, col_sum) / n  # rank-one centering (H idempotent)
+    return 0.5 * (g_h + g_h.T), u
 
 
 def ell_vector(n_s: int, n_t: int) -> jnp.ndarray:

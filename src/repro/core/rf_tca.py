@@ -51,7 +51,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels_math import ell_vector
+from repro.core.kernels_math import assemble_streamed_gram, ell_vector
 from repro.core.rff import draw_omega, rff_features
 
 try:  # SciPy is optional: only used for the host-side subset-eigh fast path
@@ -125,18 +125,99 @@ def _gram_stream_body(x: jnp.ndarray, ell: jnp.ndarray, omega: jnp.ndarray, *, b
         jnp.zeros((nf,), jnp.float32),
     )
     (cc, cs, ss, u_c, u_s, s_c, s_s), _ = jax.lax.scan(body, init, (xb, eb, mb))
-    inv2 = 1.0 / jnp.float32(nf)
-    g = inv2 * jnp.concatenate(
-        [jnp.concatenate([cc, cs], axis=1), jnp.concatenate([cs.T, ss], axis=1)], axis=0
-    )
-    inv = jnp.sqrt(inv2)
-    u = inv * jnp.concatenate([u_c, u_s])
-    col_sum = inv * jnp.concatenate([s_c, s_s])
-    g_h = g - jnp.outer(col_sum, col_sum) / n  # rank-one centering (H idempotent)
-    return 0.5 * (g_h + g_h.T), u
+    return assemble_streamed_gram(cc, cs, ss, u_c, u_s, s_c, s_s, n=n, fold_n=nf)
 
 
 _gram_stream_xla = jax.jit(_gram_stream_body, static_argnames=("block",))
+
+
+def _tile_featurize(om_i, xblk, mkb):
+    """Unscaled masked cos/sin slabs of one feature tile on one sample block."""
+    z = (om_i @ xblk.T).astype(jnp.float32)
+    return jnp.cos(z) * mkb[None, :], jnp.sin(z) * mkb[None, :]
+
+
+def _tile_pair_stats(om_i, om_j, xb, mb):
+    """One (i, j) tile pair of the tiled streaming Gram: scan over sample
+    blocks, (tile, tile) accumulators only — module-level so the VMEM-proxy
+    test can bound its jaxpr intermediates by the tile size."""
+    tile = om_i.shape[0]
+
+    def body(carry, inp):
+        cc, cs, ss = carry
+        xblk, mkb = inp
+        c_i, s_i = _tile_featurize(om_i, xblk, mkb)
+        c_j, s_j = _tile_featurize(om_j, xblk, mkb)
+        return (cc + c_i @ c_j.T, cs + c_i @ s_j.T, ss + s_i @ s_j.T), None
+
+    init = tuple(jnp.zeros((tile, tile), jnp.float32) for _ in range(3))
+    (cc, cs, ss), _ = jax.lax.scan(body, init, (xb, mb))
+    return jnp.stack([cc, cs, ss])
+
+
+def _tile_row_moments(om_i, xb, eb, mb):
+    """Row-tile moment accumulators (u and column sums) of the tiled layout."""
+    tile = om_i.shape[0]
+
+    def body(carry, inp):
+        u_c, u_s, s_c, s_s = carry
+        xblk, elb, mkb = inp
+        c_i, s_i = _tile_featurize(om_i, xblk, mkb)
+        return (
+            u_c + c_i @ elb,
+            u_s + s_i @ elb,
+            s_c + jnp.sum(c_i, axis=1),
+            s_s + jnp.sum(s_i, axis=1),
+        ), None
+
+    init = tuple(jnp.zeros((tile,), jnp.float32) for _ in range(4))
+    out, _ = jax.lax.scan(body, init, (xb, eb, mb))
+    return jnp.stack(out)
+
+
+def _gram_stream_tiled_body(
+    x: jnp.ndarray, ell: jnp.ndarray, omega: jnp.ndarray, *, block: int, tile: int
+):
+    """Tiled-layout XLA twin of ``kernels.rff_gram_stream_tiled_pallas``.
+
+    ``lax.map`` over (i, j) feature-tile pairs with the sample-block
+    ``lax.scan`` innermost — exactly the tiled kernel's loop nest, so the live
+    intermediates of one pair are two (tile, block) cos/sin slabs and three
+    (tile, tile) accumulators, never an (N, block) slab (the untiled twin's
+    per-step footprint) let alone the (2N, n) Sigma.  Feature-tile rows
+    recompute their slabs once per (j, k) step, the same flop-for-memory trade
+    the tiled kernel makes.
+    """
+    p, n = x.shape
+    nf = omega.shape[0]
+    pad_n = (-n) % block
+    xp = jnp.pad(x, ((0, 0), (0, pad_n)))
+    ep = jnp.pad(ell.astype(jnp.float32), (0, pad_n))
+    nb = (n + pad_n) // block
+    xb = xp.T.reshape(nb, block, p)
+    eb = ep.reshape(nb, block)
+    mb = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad_n)).reshape(nb, block)
+    pad_f = (-nf) % tile
+    ni = (nf + pad_f) // tile
+    om_t = jnp.pad(omega, ((0, pad_f), (0, 0))).reshape(ni, tile, p)
+
+    def pair_stats(ij):
+        return _tile_pair_stats(om_t[ij // ni], om_t[ij % ni], xb, mb)
+
+    def row_moments(i):
+        return _tile_row_moments(om_t[i], xb, eb, mb)
+
+    blocks = jax.lax.map(pair_stats, jnp.arange(ni * ni))  # (ni^2, 3, t, t)
+    blocks = blocks.reshape(ni, ni, 3, tile, tile).transpose(2, 0, 3, 1, 4)
+    blocks = blocks.reshape(3, ni * tile, ni * tile)[:, :nf, :nf]
+    mom = jax.lax.map(row_moments, jnp.arange(ni))  # (ni, 4, t)
+    mom = mom.transpose(1, 0, 2).reshape(4, ni * tile)[:, :nf]
+    return assemble_streamed_gram(
+        blocks[0], blocks[1], blocks[2], mom[0], mom[1], mom[2], mom[3], n=n, fold_n=nf
+    )
+
+
+_gram_stream_tiled_xla = jax.jit(_gram_stream_tiled_body, static_argnames=("block", "tile"))
 
 
 def streaming_gram(
@@ -146,12 +227,25 @@ def streaming_gram(
     *,
     block: int = 1024,
     use_pallas: bool = False,
+    tile: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(G_H (2N, 2N), u (2N,)) fp32 from X (p, n) in one blocked pass."""
+    """(G_H (2N, 2N), u (2N,)) fp32 from X (p, n) in one blocked pass.
+
+    ``tile`` selects the feature-axis accumulator layout: None auto-selects on
+    the Pallas path (``kernels.ops.gram_tile_plan``) and keeps the untiled
+    scan on the XLA path; an int forces the (tile, tile)-blocked layout on
+    either path (0 forces untiled).
+    """
     if use_pallas:
         from repro.kernels import ops as kops
 
-        return kops.rff_gram_stream(x, omega, ell, block=min(128, max(8, block)))
+        return kops.rff_gram_stream(
+            x, omega, ell, block=min(128, max(8, block)), tile=tile
+        )
+    if tile:
+        return _gram_stream_tiled_xla(
+            x, ell, omega, block=min(block, x.shape[1]), tile=tile
+        )
     return _gram_stream_xla(x, ell, omega, block=min(block, x.shape[1]))
 
 
@@ -313,14 +407,14 @@ def solve_w_rf_cholesky(
     two_n = sigma.shape[0]
     g_h, u = _dense_gram(sigma, ell, use_kernel=use_kernel)
     b = gamma * jnp.eye(two_n) + jnp.outer(u, u)
-    l = jnp.linalg.cholesky(b)
-    li_g = jax.scipy.linalg.solve_triangular(l, g_h, lower=True)
-    c = jax.scipy.linalg.solve_triangular(l, li_g.T, lower=True).T
+    chol = jnp.linalg.cholesky(b)
+    li_g = jax.scipy.linalg.solve_triangular(chol, g_h, lower=True)
+    c = jax.scipy.linalg.solve_triangular(chol, li_g.T, lower=True).T
     c = 0.5 * (c + c.T)
     vals, vecs = jnp.linalg.eigh(c)
     vals = vals[::-1][:m]
     vecs = vecs[:, ::-1][:, :m]
-    w_rf = jax.scipy.linalg.solve_triangular(l.T, vecs, lower=False)
+    w_rf = jax.scipy.linalg.solve_triangular(chol.T, vecs, lower=False)
     return w_rf, vals
 
 

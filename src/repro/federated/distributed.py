@@ -17,11 +17,10 @@ This is also the pattern the backbone integration uses on the production mesh
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 

@@ -21,11 +21,19 @@ enters this plane as jittable codec distortion twins (``channel``) and the
 frozen-W invariant behind the O(1) seed-replay codec (``freeze_w_rf``); byte
 accounting stays host-side on the exact analytic sizes.
 
+Ragged clients: per-client sample counts need not match.  The trainer pads
+each client's training / message batches to the max client width and passes
+0/1 validity masks (``bmask`` (K, b), ``msg_mask`` (K, mb)); every mean and
+moment inside the round is computed over true samples only, so the stacked
+program reproduces the serial plane's unequal per-client batches instead of
+truncating everyone to the min (the seed behavior).
+
 Semantics vs the serial path: identical when every client participates (the
-equivalence test monkeypatches a full-participation plan and checks parameter
-trajectories match).  Under random drops the two paths consume client batch
-streams at different rates (the serial path skips message batches of dropped
-clients), so trajectories are statistically — not bitwise — equal.
+equivalence tests monkeypatch a full-participation plan and check parameter
+trajectories match — including with unequal per-client dataset sizes).  Under
+random drops the two paths consume client batch streams at different rates
+(the serial path skips message batches of dropped clients), so trajectories
+are statistically — not bitwise — equal.
 """
 from __future__ import annotations
 
@@ -93,17 +101,23 @@ class BatchedRoundEngine:
             return params
         return {**params, "w_rf": jax.lax.stop_gradient(params["w_rf"])}
 
-    def _src_local_scan(self, src_p, src_o, xs, ys, mmd_mask, tgt_msg):
+    def _src_local_scan(self, src_p, src_o, xs, ys, mmd_mask, tgt_msg, bmask=None):
         """lax.scan over local steps of a vmapped per-client Adam step.
 
         xs: (L, K, p, b), ys: (L, K, b), mmd_mask: (K,) 0/1 floats.
+        ``bmask`` ((K, b) 0/1 floats or None) marks each client's true batch
+        columns when per-client batch sizes are ragged (padded to the max
+        client width); the CE/MMD math inside ``source_loss`` then averages
+        over true samples only, so each step is identical to the serial
+        plane's unpadded per-client step.
         """
         cfg, omega, opt = self.cfg, self.omega, self.opt
 
-        def one_client(p, o, x, y, gate):
+        def one_client(p, o, x, y, gate, sm):
             (_, aux), grads = jax.value_and_grad(
                 lambda pp: source_loss(
-                    self._maybe_freeze(pp), omega, x, y, tgt_msg, cfg, mmd_gate=gate
+                    self._maybe_freeze(pp), omega, x, y, tgt_msg, cfg,
+                    mmd_gate=gate, sample_mask=sm,
                 ),
                 has_aux=True,
             )(p)
@@ -113,7 +127,10 @@ class BatchedRoundEngine:
         def step(carry, xy):
             ps, os = carry
             x, y = xy
-            ps, os, _ = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0))(ps, os, x, y, mmd_mask)
+            mask_ax = 0 if bmask is not None else None
+            ps, os, _ = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0, mask_ax))(
+                ps, os, x, y, mmd_mask, bmask
+            )
             return (ps, os), None
 
         (src_p, src_o), _ = jax.lax.scan(step, (src_p, src_o), (xs, ys))
@@ -137,6 +154,8 @@ class BatchedRoundEngine:
         c_mask,  # (K,) 1.0 iff client in plan.c_clients
         do_clf,  # () bool: t % T_C == 0 this round
         chan_key,  # per-round PRNG key for stochastic channel distortion
+        bmask,  # (K, b) 0/1 valid-column mask of ragged training batches | None
+        msg_mask,  # (K, mb) 0/1 valid-column mask of ragged message batches | None
     ):
         cfg, omega, opt = self.cfg, self.omega, self.opt
         k_clients = xs.shape[1]
@@ -152,11 +171,14 @@ class BatchedRoundEngine:
 
         # local source training (Alg. 2), MMD gated by S_t membership
         gates = mmd_mask if self.exchange_messages else jnp.zeros_like(mmd_mask)
-        src_p, src_o = self._src_local_scan(src_p, src_o, xs, ys, gates, tgt_msg)
+        src_p, src_o = self._src_local_scan(src_p, src_o, xs, ys, gates, tgt_msg, bmask)
 
         # local target training (Alg. 3) on the messages that arrived
         if self.exchange_messages:
-            msgs = jax.vmap(lambda p, x: client_message(p, omega, x, +1.0))(src_p, x_msg)
+            msgs = jax.vmap(
+                lambda p, x, mk: client_message(p, omega, x, +1.0, mask=mk),
+                in_axes=(0, 0, 0 if msg_mask is not None else None),
+            )(src_p, x_msg, msg_mask)
             if chan_m is not None:
                 keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
                 msgs = jax.vmap(chan_m)(msgs, keys)
@@ -231,7 +253,13 @@ class BatchedRoundEngine:
         return src_p, src_o, tgt_p, tgt_o
 
     def round(self, src_p, src_o, tgt_p, tgt_o, batch, masks, chan_key=None):
-        """One communication round. ``batch``/``masks`` are dicts of arrays."""
+        """One communication round. ``batch``/``masks`` are dicts of arrays.
+
+        Ragged client data enters via the optional ``batch`` keys ``bmask``
+        ((K, b) training-batch column validity) and ``msg_mask`` ((K, mb)
+        message-batch column validity) — both None when every client
+        contributes full-width batches.
+        """
         if chan_key is None:
             if self.channel:
                 # a fixed default key would replay the identical stochastic
@@ -253,14 +281,17 @@ class BatchedRoundEngine:
             masks["c"],
             masks["do_clf"],
             chan_key,
+            batch.get("bmask"),
+            batch.get("msg_mask"),
         )
 
     # -- warm-up (emulated pretraining, FedAvg over sources) -----------------
 
-    def _warmup_fn(self, src_p, src_o, xs, ys):
+    def _warmup_fn(self, src_p, src_o, xs, ys, bmask):
         """Scan over R warm-up rounds: local CE steps then whole-model FedAvg.
 
-        xs: (R, L, K, p, b), ys: (R, L, K, b).  Replaces R*K*L Python-loop
+        xs: (R, L, K, p, b), ys: (R, L, K, b); ``bmask`` ((K, b) or None)
+        marks ragged clients' true batch columns.  Replaces R*K*L Python-loop
         dispatches with a single compiled program.
         """
         zeros = jnp.zeros((self.cfg.n_rff * 2,))
@@ -269,7 +300,7 @@ class BatchedRoundEngine:
             ps, os = carry
             x_r, y_r = inp
             ps, os = self._src_local_scan(
-                ps, os, x_r, y_r, jnp.zeros((x_r.shape[1],)), zeros
+                ps, os, x_r, y_r, jnp.zeros((x_r.shape[1],)), zeros, bmask
             )
             avg = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0, keepdims=True), ps)
             ps = jax.tree_util.tree_map(
@@ -280,5 +311,5 @@ class BatchedRoundEngine:
         (src_p, src_o), _ = jax.lax.scan(round_body, (src_p, src_o), (xs, ys))
         return src_p, src_o
 
-    def warmup(self, src_p, src_o, xs, ys):
-        return self._warmup(src_p, src_o, xs, ys)
+    def warmup(self, src_p, src_o, xs, ys, bmask=None):
+        return self._warmup(src_p, src_o, xs, ys, bmask)

@@ -79,10 +79,21 @@ def rff_of(params, omega, x_cols):
     return rff_features_rows(extract(params, x_cols), omega)
 
 
-def client_message(params, omega, x_cols, sign: float) -> jnp.ndarray:
+def client_message(params, omega, x_cols, sign: float, mask=None) -> jnp.ndarray:
     """Sigma ell = sign * mean of RFF rows (eq. 2) — the only data-dependent
-    message a client ever transmits (2N floats)."""
-    return sign * jnp.mean(rff_of(params, omega, x_cols), axis=0)
+    message a client ever transmits (2N floats).
+
+    ``mask`` ((n,) 0/1 floats) restricts the mean to the valid sample columns:
+    the batched round engine pads ragged per-client message batches to the max
+    client length, and the moment must average the client's *true* samples
+    only (sum of masked rows / mask count).  ``None`` means every column is a
+    real sample (the unpadded path, bit-identical to the seed behavior).
+    """
+    rows = rff_of(params, omega, x_cols)  # (n, 2N)
+    if mask is None:
+        return sign * jnp.mean(rows, axis=0)
+    m = mask.astype(rows.dtype)
+    return sign * (m @ rows) / jnp.sum(m)
 
 
 def logits_of(params, omega, x_cols) -> jnp.ndarray:
@@ -100,6 +111,7 @@ def source_loss(
     *,
     with_mmd: bool = True,
     mmd_gate=None,
+    sample_mask=None,
 ):
     """Alg. 2: L_S = L_C + lambda L_MMD (or L_C alone when i not in S_t).
 
@@ -107,15 +119,23 @@ def source_loss(
     two separate step functions).  ``mmd_gate`` instead is a *traced* 0/1
     scalar multiplying the MMD term, so a single vmapped program can express
     per-client membership in S_t — the batched round engine's drop masks.
+    ``sample_mask`` ((b,) 0/1 floats) marks the valid columns of a ragged
+    batch padded to the stacked batch width: the CE mean and the MMD moment
+    both run over the client's true samples only.
     """
     logits = logits_of(params, omega, x)
     one_hot = jax.nn.one_hot(y, cfg.n_classes)
-    l_c = -jnp.mean(jnp.sum(one_hot * jax.nn.log_softmax(logits), axis=-1))
+    per_sample = jnp.sum(one_hot * jax.nn.log_softmax(logits), axis=-1)
+    if sample_mask is None:
+        l_c = -jnp.mean(per_sample)
+    else:
+        sm = sample_mask.astype(per_sample.dtype)
+        l_c = -(sm @ per_sample) / jnp.sum(sm)
     if mmd_gate is None:
         if not with_mmd:
             return l_c, {"l_c": l_c, "l_mmd": jnp.zeros(())}
         mmd_gate = 1.0
-    msg_s = client_message(params, omega, x, +1.0)
+    msg_s = client_message(params, omega, x, +1.0, mask=sample_mask)
     l_mmd = mmd_gate * mmd_projected(params["w_rf"], msg_s, target_msg)
     return l_c + cfg.lambda_mmd * l_mmd, {"l_c": l_c, "l_mmd": l_mmd}
 

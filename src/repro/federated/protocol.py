@@ -14,9 +14,13 @@ Two interchangeable data planes execute the round body:
   per-client parameters stacked on a leading K axis, local steps run under
   ``jax.vmap``/``lax.scan``, the round's drop plan enters as 0/1 masks, and
   the whole round (plus the entire warm-up phase) is ONE compiled dispatch.
-  Identical math when every client participates; under random drops the two
-  planes consume client batch streams at different offsets, so trajectories
-  agree statistically rather than bitwise.
+  Ragged client data is supported natively: per-client batch sizes are capped
+  at each client's own n_k, padded to the max width, and masked inside the
+  compiled round (see ``ProtocolConfig.batch_size``) — unequal clients are
+  never truncated to the min.  Identical math when every client participates
+  (equal or unequal n_k); under random drops the two planes consume client
+  batch streams at different offsets, so trajectories agree statistically
+  rather than bitwise.
 
 The protocol itself (who talks to whom, what gets dropped, what it costs)
 stays host-side Python in both planes — that is the part XLA cannot express
@@ -50,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import netsim, transport as comm_transport, wire
-from repro.comm.transport import CommLog  # re-export (seed-era import path)
+from repro.comm.transport import CommLog  # noqa: F401  (seed-era import path)
 from repro.data.domains import Domain, batches
 from repro.federated import aggregation, network
 from repro.federated.engine import BatchedRoundEngine, stack_trees, unstack_tree
@@ -74,8 +78,14 @@ class ProtocolConfig:
     n_rounds: int = 200
     t_c: int = 50  # classifier aggregation interval T_C
     local_steps: int = 1
-    batch_size: int = 64
-    message_batch_size: int = 256  # messages are cheap (2N floats): use more data
+    # ``batch_size`` / ``message_batch_size`` accept a scalar (same for every
+    # client) or a length-K sequence (per-source-client, the ragged setting).
+    # Either way each client's effective size is capped at its own dataset
+    # size n_k — unequal clients are padded to the max inside the batched
+    # engine (validity masks), never truncated to the min.  The target client
+    # uses the scalar (or the max of the sequence) capped at its own n.
+    batch_size: int | tuple[int, ...] = 64
+    message_batch_size: int | tuple[int, ...] = 256  # messages are cheap (2N floats)
     lr: float = 1e-2
     drop_setting: str = "I"  # Table III: "I" | "II" | "III"
     aggregate_w_rf: bool = True
@@ -94,6 +104,44 @@ class ProtocolConfig:
     codec_classifier: str | None = None
     scenario: Any = None  # comm.netsim.Scenario; None -> TableIII(drop_setting)
     seed: int = 0
+
+
+def _per_client_sizes(
+    value: int | tuple[int, ...], k: int, caps: list[int], what: str
+) -> list[int]:
+    """Resolve a scalar-or-per-client batch-size config field to K concrete
+    sizes, each capped at the client's own dataset size."""
+    if isinstance(value, int):
+        sizes = [value] * k
+    else:
+        sizes = [int(s) for s in value]
+        if len(sizes) != k:
+            raise ValueError(f"{what} has {len(sizes)} entries for {k} clients")
+    if any(s <= 0 for s in sizes):
+        raise ValueError(f"{what} entries must be positive, got {sizes}")
+    return [min(s, c) for s, c in zip(sizes, caps)]
+
+
+def _cycle_pad(x: np.ndarray, y: np.ndarray | None, width: int):
+    """Pad a (p, b_k) batch to ``width`` columns by cycling its own samples.
+
+    Padding with zeros would feed all-zero columns through the extractor,
+    whose unit-norm layer has a NaN gradient at exactly 0 — and ``0 * NaN``
+    poisons the masked loss.  Cycled real samples keep every gradient finite;
+    their loss/moment contributions are excluded by the validity mask."""
+    idx = np.arange(width) % x.shape[1]
+    return x[:, idx], (None if y is None else y[idx])
+
+
+def _ragged_mask(sizes: list[int], width: int) -> jnp.ndarray | None:
+    """(K, width) 0/1 validity mask, or None when every client is full-width
+    (the unpadded batched path stays bitwise-identical to the seed)."""
+    if not sizes or all(s == width for s in sizes):
+        return None
+    m = np.zeros((len(sizes), width), np.float32)
+    for i, s in enumerate(sizes):
+        m[i, :s] = 1.0
+    return jnp.asarray(m)
 
 
 class FedRFTCATrainer:
@@ -147,29 +195,45 @@ class FedRFTCATrainer:
         self.opt = adam(proto.lr)
         self.tgt_opt = self.opt.init(self.tgt_params)
         self.rng = np.random.default_rng(proto.seed)
+        # Ragged client data: per-client batch sizes capped at each client's
+        # own n_k.  The serial plane consumes them directly; the batched plane
+        # pads every client to the max width and masks the padding (the seed
+        # engine instead truncated all message batches to the min — dropping
+        # data exactly for the heterogeneous clients federated DA is about).
+        client_ns = [d.x.shape[1] for d in sources]
+        self._batch_sizes = _per_client_sizes(
+            proto.batch_size, self.k, client_ns, "batch_size"
+        )
+        self._msg_sizes = _per_client_sizes(
+            proto.message_batch_size, self.k, client_ns, "message_batch_size"
+        )
+        tgt_b = proto.batch_size if isinstance(proto.batch_size, int) else max(proto.batch_size)
+        tgt_mb = (
+            proto.message_batch_size
+            if isinstance(proto.message_batch_size, int)
+            else max(proto.message_batch_size)
+        )
         self.src_iters = [
-            batches(d.x, d.y, proto.batch_size, seed=proto.seed + i)
+            batches(d.x, d.y, self._batch_sizes[i], seed=proto.seed + i)
             for i, d in enumerate(sources)
         ]
-        self.tgt_iter = batches(target.x, target.y, proto.batch_size, seed=proto.seed + 777)
+        self.tgt_iter = batches(
+            target.x, target.y, min(tgt_b, target.x.shape[1]), seed=proto.seed + 777
+        )
         self.comm = self.transport.log
-        # The batched engine stacks message batches across source clients, so
-        # all sources must contribute the same count (min over sources; the
-        # target's message batch is sized independently); the serial plane
-        # keeps the original per-client sizes.
-        self._msg_batch = min([proto.message_batch_size] + [d.x.shape[1] for d in sources])
-        if engine == "batched":
-            msg_sizes = [self._msg_batch] * self.k
-        else:
-            msg_sizes = [min(proto.message_batch_size, d.x.shape[1]) for d in sources]
         self._msg_iters = [
-            batches(d.x, d.y, msg_sizes[i], seed=proto.seed + 500 + i)
+            batches(d.x, d.y, self._msg_sizes[i], seed=proto.seed + 500 + i)
             for i, d in enumerate(sources)
         ]
         self._tgt_msg_iter = batches(
-            target.x, target.y, min(proto.message_batch_size, target.x.shape[1]),
-            seed=proto.seed + 999,
+            target.x, target.y, min(tgt_mb, target.x.shape[1]), seed=proto.seed + 999,
         )
+        # pad-to-max widths + 0/1 validity masks for the batched plane (None
+        # when all clients are full-width: keeps the unpadded path bitwise)
+        self._b_max = max(self._batch_sizes, default=0)
+        self._mb_max = max(self._msg_sizes, default=0)
+        self._bmask = _ragged_mask(self._batch_sizes, self._b_max)
+        self._msg_mask = _ragged_mask(self._msg_sizes, self._mb_max)
         if engine == "batched":
             self._engine = BatchedRoundEngine(
                 cfg,
@@ -221,7 +285,7 @@ class FedRFTCATrainer:
         if self._engine is not None:
             xs, ys = self._draw_source_batches(rounds)
             self._src_stack, self._src_opt_stack = self._engine.warmup(
-                self._src_stack, self._src_opt_stack, xs, ys
+                self._src_stack, self._src_opt_stack, xs, ys, self._bmask
             )
             # after the final FedAvg broadcast every row is the average; the
             # target starts from that shared pretrained model (paper Fig. 1)
@@ -241,29 +305,35 @@ class FedRFTCATrainer:
 
     # ---- host-side batch plumbing --------------------------------------------
     def _draw_source_batches(self, rounds: int):
-        """(R, L, K, p, b) x / (R, L, K, b) y in the serial consumption order
-        (each client's stream yields R*L batches, round-major)."""
+        """(R, L, K, p, b_max) x / (R, L, K, b_max) y in the serial consumption
+        order (each client's stream yields R*L batches, round-major).  Ragged
+        clients are zero-padded to the max width; ``self._bmask`` marks the
+        true columns."""
         L = self.proto.local_steps
-        xs = np.empty((rounds, L, self.k) + (self.sources[0].x.shape[0], self.proto.batch_size),
+        xs = np.zeros((rounds, L, self.k, self.sources[0].x.shape[0], self._b_max),
                       dtype=np.float32)
-        ys = np.empty((rounds, L, self.k, self.proto.batch_size), dtype=np.int32)
+        ys = np.zeros((rounds, L, self.k, self._b_max), dtype=np.int32)
         for r in range(rounds):
             for i in range(self.k):
                 for s in range(L):
                     x, y = next(self.src_iters[i])
-                    xs[r, s, i], ys[r, s, i] = x, y
+                    xs[r, s, i], ys[r, s, i] = _cycle_pad(x, y, self._b_max)
         return jnp.asarray(xs), jnp.asarray(ys)
 
     def _round_batch(self):
-        """Draw one round's worth of batches for the batched engine."""
+        """Draw one round's worth of batches for the batched engine (ragged
+        clients zero-padded to the max width, masks alongside)."""
         L, p = self.proto.local_steps, self.sources[0].x.shape[0]
-        b = self.proto.batch_size
-        xs = np.empty((L, self.k, p, b), np.float32)
-        ys = np.empty((L, self.k, b), np.int32)
+        xs = np.zeros((L, self.k, p, self._b_max), np.float32)
+        ys = np.zeros((L, self.k, self._b_max), np.int32)
         for i in range(self.k):
             for s in range(L):
-                xs[s, i], ys[s, i] = next(self.src_iters[i])
-        x_msg = np.stack([next(self._msg_iters[i])[0] for i in range(self.k)])
+                x, y = next(self.src_iters[i])
+                xs[s, i], ys[s, i] = _cycle_pad(x, y, self._b_max)
+        x_msg = np.zeros((self.k, p, self._mb_max), np.float32)
+        for i in range(self.k):
+            xm = next(self._msg_iters[i])[0]
+            x_msg[i], _ = _cycle_pad(xm, None, self._mb_max)
         xt_steps = np.stack([next(self.tgt_iter)[0] for _ in range(L)])
         xt_msg = next(self._tgt_msg_iter)[0]
         return {
@@ -272,6 +342,8 @@ class FedRFTCATrainer:
             "x_msg": jnp.asarray(x_msg),
             "xt_steps": jnp.asarray(xt_steps),
             "xt_msg": jnp.asarray(xt_msg),
+            "bmask": self._bmask,
+            "msg_mask": self._msg_mask,
         }
 
     def _mask_of(self, ids: list[int]) -> jnp.ndarray:

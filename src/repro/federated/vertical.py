@@ -17,7 +17,6 @@ axis.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.rff import draw_omega

@@ -4,7 +4,9 @@
 - centered_gram:   Sigma H Sigma^T for RF-TCA (Alg. 1) with fused centering
 - rff_gram_stream: one-pass fused featurize + Gram/moment accumulation —
                    Sigma never hits HBM, peak memory O(N^2 + N b) regardless
-                   of the sample count n (the RF-TCA scaling claim)
+                   of the sample count n (the RF-TCA scaling claim); past
+                   N ~ 1k it auto-switches to an (i, j) output-tiled grid
+                   whose per-instance VMEM is bounded by the tile, not N
 - flash_attention: blockwise online-softmax GQA attention (causal / window)
 
 Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py. On this

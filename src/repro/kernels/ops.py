@@ -15,11 +15,55 @@ from repro.kernels.centered_gram import centered_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.quantize import fake_quant_pallas
 from repro.kernels.rff import rff_pallas
-from repro.kernels.rff_gram_stream import rff_gram_stream_pallas
+from repro.kernels.rff_gram_stream import (
+    rff_gram_stream_pallas,
+    rff_gram_stream_tiled_pallas,
+)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Untiled rff_gram_stream holds 3 (N_pad, N_pad) fp32 accumulators in VMEM;
+# past this N the tiled layout takes over.
+GRAM_TILE_THRESHOLD = 1024
+
+
+def gram_tile_plan(n_features: int, *, tile: int | None = None) -> dict:
+    """Resolve the (tile, VMEM-accumulator-bytes) plan ``rff_gram_stream``
+    will execute for a given feature count.
+
+    ``tile=None`` auto-selects: the untiled fast path (``{"tile": None}``)
+    while 3 N_pad^2 fp32 accumulators stay VMEM-friendly (N_pad <=
+    ``GRAM_TILE_THRESHOLD``), else a (t, t) output tiling with t chosen to
+    bound per-instance accumulator memory at 3 t^2 fp32 while keeping the
+    N -> N_pad rounding waste small.  ``tile=0`` forces the untiled path,
+    any other int forces that tile edge — it must be a multiple of 128
+    (TPU lane alignment of the (t, t) blocks; validated here so the mistake
+    cannot pass CPU interpret-mode CI and only surface at Mosaic lowering).
+    Returns ``{"tile", "n_pad", "acc_bytes"}`` — ``acc_bytes`` is the exact
+    per-instance fp32 accumulator footprint, the quantity the VMEM-proxy
+    test bounds.
+    """
+    if tile is None:
+        if n_features <= GRAM_TILE_THRESHOLD:
+            t = None
+        else:
+            # 256 keeps rounding waste <= 12.5% up to 2048; 512 (3 MB of
+            # accumulators) amortizes grid overhead for genuinely large N
+            t = 256 if n_features <= 2048 else 512
+    else:
+        if tile % 128:
+            raise ValueError(f"tile must be a multiple of 128 (TPU lanes), got {tile}")
+        t = tile or None
+    if t is None:
+        n_pad = n_features + (-n_features) % 128
+        acc = 3 * n_pad * n_pad * 4 + 2 * n_pad * 2 * 4
+    else:
+        n_pad = n_features + (-n_features) % t
+        acc = 3 * t * t * 4 + 2 * t * 2 * 4
+    return {"tile": t, "n_pad": n_pad, "acc_bytes": acc}
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
@@ -68,13 +112,14 @@ def centered_gram(sigma: jax.Array, *, block: int = 128, interpret: bool | None 
     return out[:two_n_orig, :two_n_orig]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "tile", "interpret"))
 def rff_gram_stream(
     x: jax.Array,
     omega: jax.Array,
     ell: jax.Array,
     *,
     block: int = 128,
+    tile: int | None = None,
     interpret: bool | None = None,
 ):
     """(G_H (2N, 2N) fp32, u = Sigma ell (2N,) fp32) from X (p, n), Omega (N, p).
@@ -83,26 +128,38 @@ def rff_gram_stream(
     (2N, n) RFF matrix Sigma is never materialized (peak memory O(N^2 + N b)).
     Padded sample columns are masked inside the kernel; padded feature rows
     are sliced off here before assembling the [cos; sin] block structure.
+
+    ``tile`` picks the accumulator layout (see :func:`gram_tile_plan`): None
+    auto-selects the untiled kernel for small N and a (t, t) output tiling —
+    per-instance VMEM bounded by the tile, not N — past
+    ``GRAM_TILE_THRESHOLD``; 0 forces untiled, an int forces that tile edge.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     n = x.shape[1]
+    plan_tile = gram_tile_plan(omega.shape[0], tile=tile)["tile"]
     lm = jnp.stack([ell.astype(x.dtype), jnp.ones((n,), x.dtype)])  # (2, n)
     x, _ = _pad_to(x, 1, block)
     lm, _ = _pad_to(lm, 1, block)  # zero-pads ell AND the column mask
     x, _ = _pad_to(x, 0, block)
     omega, _ = _pad_to(omega, 1, block)
-    omega, n_feat = _pad_to(omega, 0, block)
-    gcc, gcs, gss, mc, ms = rff_gram_stream_pallas(
-        x, omega, lm, block_k=block, scale_n=n_feat, interpret=interpret
+    if plan_tile is None:
+        omega, n_feat = _pad_to(omega, 0, block)
+        gcc, gcs, gss, mc, ms = rff_gram_stream_pallas(
+            x, omega, lm, block_k=block, scale_n=n_feat, interpret=interpret
+        )
+    else:
+        omega, n_feat = _pad_to(omega, 0, plan_tile)
+        gcc, gcs, gss, mc, ms = rff_gram_stream_tiled_pallas(
+            x, omega, lm, tile=plan_tile, block_k=block, scale_n=n_feat,
+            interpret=interpret,
+        )
+    from repro.core.kernels_math import assemble_streamed_gram
+
+    return assemble_streamed_gram(
+        gcc[:n_feat, :n_feat], gcs[:n_feat, :n_feat], gss[:n_feat, :n_feat],
+        mc[:n_feat, 0], ms[:n_feat, 0], mc[:n_feat, 1], ms[:n_feat, 1],
+        n=n,  # fold_n=None: the kernels fold 1/sqrt(N) into cos/sin already
     )
-    gcc, gcs, gss = gcc[:n_feat, :n_feat], gcs[:n_feat, :n_feat], gss[:n_feat, :n_feat]
-    g = jnp.concatenate(
-        [jnp.concatenate([gcc, gcs], axis=1), jnp.concatenate([gcs.T, gss], axis=1)], axis=0
-    )
-    u = jnp.concatenate([mc[:n_feat, 0], ms[:n_feat, 0]])
-    col_sum = jnp.concatenate([mc[:n_feat, 1], ms[:n_feat, 1]])
-    g_h = g - jnp.outer(col_sum, col_sum) / n  # rank-one centering correction
-    return 0.5 * (g_h + g_h.T), u
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))

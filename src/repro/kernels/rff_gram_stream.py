@@ -14,11 +14,20 @@ these; the (2N, n) matrix Sigma itself NEVER exists in HBM, so peak memory is
 O(N^2 + N b) for sample-block size b, independent of n — exactly the scaling
 the paper claims for RF-TCA.
 
-Grid: (n / bk,) — one axis over sample blocks, fp32 VMEM accumulators held
-across the whole pass.  The accumulators are (N_pad, N_pad) fp32, so the
-kernel targets N_pad up to ~1024 per core (3 N^2 fp32 buffers must fit VMEM);
-larger feature counts need an additional (i, j) output tiling, which the
-dense `centered_gram` kernel already provides.
+Two layouts share the kernel math:
+
+- **untiled** (`rff_gram_stream_pallas`): grid (n / bk,) — one axis over
+  sample blocks, (N_pad, N_pad) fp32 VMEM accumulators held across the whole
+  pass.  3 N^2 fp32 buffers must fit VMEM, so this is the fast path up to
+  N_pad ~ 1024 per core.
+- **tiled** (`rff_gram_stream_tiled_pallas`): grid (N/t, N/t, n/bk) — a 2-D
+  output tiling over (i, j) feature-tile pairs with the sample-block loop
+  innermost, so each program instance only holds a (t, t) block of each Gram
+  accumulator in VMEM (3 t^2 fp32, independent of N).  Row tile i recomputes
+  its cos/sin slab once per (j, k) step — the usual flop-for-memory trade of
+  output tiling — which removes the N ceiling entirely.
+
+``kernels.ops.rff_gram_stream`` auto-selects between them from N.
 """
 from __future__ import annotations
 
@@ -79,6 +88,141 @@ def _rff_gram_kernel(
         gss_ref[...] = acc_ss[...]
         mc_ref[...] = acc_mc[...]
         ms_ref[...] = acc_ms[...]
+
+
+def _rff_gram_tiled_kernel(
+    omega_i_ref,
+    omega_j_ref,
+    x_ref,
+    lm_ref,
+    gcc_ref,
+    gcs_ref,
+    gss_ref,
+    mc_ref,
+    ms_ref,
+    acc_cc,
+    acc_cs,
+    acc_ss,
+    acc_mc,
+    acc_ms,
+    *,
+    n_features: int,
+    k_steps: int,
+):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_cc[...] = jnp.zeros_like(acc_cc)
+        acc_cs[...] = jnp.zeros_like(acc_cs)
+        acc_ss[...] = jnp.zeros_like(acc_ss)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init_moments():
+        acc_mc[...] = jnp.zeros_like(acc_mc)
+        acc_ms[...] = jnp.zeros_like(acc_ms)
+
+    inv = 1.0 / jnp.sqrt(jnp.float32(n_features))
+    lm = lm_ref[...].astype(jnp.float32)  # (2, bk): row 0 = ell, row 1 = mask
+    mask = lm[1:2, :]  # (1, bk); zero on padded sample columns
+    z_i = jnp.dot(omega_i_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    z_j = jnp.dot(omega_j_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    c_i = jnp.cos(z_i) * inv * mask
+    s_i = jnp.sin(z_i) * inv * mask
+    c_j = jnp.cos(z_j) * inv * mask
+    s_j = jnp.sin(z_j) * inv * mask
+
+    contract = (((1,), (1,)), ((), ()))
+    acc_cc[...] += jax.lax.dot_general(c_i, c_j, contract, preferred_element_type=jnp.float32)
+    acc_cs[...] += jax.lax.dot_general(c_i, s_j, contract, preferred_element_type=jnp.float32)
+    acc_ss[...] += jax.lax.dot_general(s_i, s_j, contract, preferred_element_type=jnp.float32)
+
+    # the (t, 2) moment blocks only depend on the row tile i: accumulate them
+    # once per i, on the j == 0 sweep
+    @pl.when(j == 0)
+    def _moments():
+        acc_mc[...] += jax.lax.dot_general(
+            c_i, lm, contract, preferred_element_type=jnp.float32
+        )
+        acc_ms[...] += jax.lax.dot_general(
+            s_i, lm, contract, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == k_steps - 1)
+    def _write():
+        gcc_ref[...] = acc_cc[...]
+        gcs_ref[...] = acc_cs[...]
+        gss_ref[...] = acc_ss[...]
+
+    @pl.when((k == k_steps - 1) & (j == 0))
+    def _write_moments():
+        mc_ref[...] = acc_mc[...]
+        ms_ref[...] = acc_ms[...]
+
+
+def rff_gram_stream_tiled_pallas(
+    x: jax.Array,  # (p, n)
+    omega: jax.Array,  # (N, p), N a multiple of ``tile``
+    lm: jax.Array,  # (2, n): stacked [ell; column-mask]
+    *,
+    tile: int = 512,
+    block_k: int = 128,
+    scale_n: int | None = None,  # true N when omega rows are padded
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Tiled layout of :func:`rff_gram_stream_pallas` (same five outputs).
+
+    Grid (N/t, N/t, n/bk): each (i, j) program instance owns the (t, t)
+    output blocks G_cc[i, j], G_cs[i, j], G_ss[i, j] and streams all sample
+    blocks through them before moving on — VMEM per instance is 3 t^2 fp32
+    accumulators plus two (t, bk) slabs, *independent of N*.
+    """
+    n_features, p = omega.shape
+    _, n = x.shape
+    bk = min(block_k, n)
+    if n % bk or lm.shape[1] != n:
+        raise ValueError(f"n={n} must tile by {bk} and match lm {lm.shape}")
+    if n_features % tile:
+        raise ValueError(f"N={n_features} must tile by {tile}")
+    n_tiles = n_features // tile
+    k_steps = n // bk
+
+    kernel = functools.partial(
+        _rff_gram_tiled_kernel, n_features=scale_n or n_features, k_steps=k_steps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles, n_tiles, k_steps),
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((tile, p), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((p, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((2, bk), lambda i, j, k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile, 2), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((tile, 2), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_features, n_features), jnp.float32),
+            jax.ShapeDtypeStruct((n_features, n_features), jnp.float32),
+            jax.ShapeDtypeStruct((n_features, n_features), jnp.float32),
+            jax.ShapeDtypeStruct((n_features, 2), jnp.float32),
+            jax.ShapeDtypeStruct((n_features, 2), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile, tile), jnp.float32),
+            pltpu.VMEM((tile, tile), jnp.float32),
+            pltpu.VMEM((tile, tile), jnp.float32),
+            pltpu.VMEM((tile, 2), jnp.float32),
+            pltpu.VMEM((tile, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(omega, omega, x, lm)
 
 
 def rff_gram_stream_pallas(

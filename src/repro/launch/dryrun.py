@@ -33,7 +33,6 @@ from repro.launch import roofline as rl
 from repro.launch.mesh import data_axis_size, make_production_mesh
 from repro.launch.specs import cache_pspecs, input_pspecs, input_specs
 from repro.models import LM, ShardRules
-from repro.models.param import abstract, is_decl, specs
 from repro.optim import adamw, apply_updates, clip_by_global_norm
 
 

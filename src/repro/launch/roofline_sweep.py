@@ -18,7 +18,6 @@ Usage: PYTHONPATH=src python -m repro.launch.roofline_sweep --arch all --shape a
 """
 
 import argparse
-import dataclasses
 import json
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config

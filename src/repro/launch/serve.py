@@ -36,7 +36,8 @@ def main(argv=None) -> dict:
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
     batch = {"tokens": prompts}
     if cfg.embeddings_in:
-        batch = {"embeddings": jax.random.normal(key, (args.batch, args.prompt_len, cfg.d_model)) * 0.02}
+        emb = jax.random.normal(key, (args.batch, args.prompt_len, cfg.d_model)) * 0.02
+        batch = {"embeddings": emb}
     if cfg.family == "vlm":
         batch["images"] = jnp.zeros((args.batch, cfg.n_image_tokens, cfg.d_image))
 

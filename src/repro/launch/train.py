@@ -16,8 +16,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
 from repro.configs import get_config

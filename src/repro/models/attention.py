@@ -105,7 +105,7 @@ def flash_attention(
 
     def make_kv_block(qx, qp):
         def kv_block(state, ki):
-            acc, m, l = state
+            acc, m, lse = state
             kx, vx, kp = ki  # (b, bk, kv, hd), (b, bk, kv, hd), (bk,)
             sc = jnp.einsum(
                 "bqkgd,bskd->bqkgs", qx, kx, preferred_element_type=jnp.float32
@@ -119,7 +119,7 @@ def flash_attention(
             m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
             p = jnp.exp(sc - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = corr * l + jnp.sum(p, axis=-1)
+            l_new = corr * lse + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(vx.dtype), vx,
                             preferred_element_type=jnp.float32)
             acc_new = corr[..., None] * acc + pv
@@ -146,11 +146,11 @@ def flash_attention(
             hi = min(nk, (qi + 1) * bq // bk + (1 if ((qi + 1) * bq) % bk else 0))
             lo = max(0, (qi * bq - window + 1) // bk) if window else 0
             kv_fn = make_kv_block(qt[qi], q_pos[qi])
-            (acc, m, l), _ = jax.lax.scan(
+            (acc, m, lse), _ = jax.lax.scan(
                 kv_fn, init_state(), (kt[lo:hi], vt[lo:hi], k_pos[lo:hi]),
                 unroll=True if unroll else 1,
             )
-            out = acc / jnp.maximum(l[..., None], 1e-30)
+            out = acc / jnp.maximum(lse[..., None], 1e-30)
             outs.append(out.astype(q.dtype))
         ob = jnp.stack(outs)
         return ob.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, vd)
@@ -158,10 +158,10 @@ def flash_attention(
     def q_block(carry, qi):
         qx, qp = qi  # (b, bq, kv, g, hd), (bq,)
         kv_fn = make_kv_block(qx, qp)
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, lse), _ = jax.lax.scan(
             kv_fn, init_state(), (kt, vt, k_pos), unroll=True if unroll else 1
         )
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lse[..., None], 1e-30)
         return carry, out.astype(q.dtype)
 
     _, ob = jax.lax.scan(
@@ -256,7 +256,8 @@ def mla_forward(params, x, positions, cfg: ModelConfig, *, return_cache: bool = 
     k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
     v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], k_rope.shape[-1]))], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope, (*k_nope.shape[:3], k_rope.shape[-1]))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
     o = flash_attention(q, k, v, causal=True, unroll=cfg.unroll_scan, skip_masked=cfg.causal_skip)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
     if return_cache:
@@ -273,7 +274,9 @@ def mla_decode(params, x, cache_c, cache_kr, pos, cfg: ModelConfig):
     q_rope = jnp.einsum("bsd,dhk->bshk", x, params["wq_rope"])
     q_rope = apply_rope(q_rope, jnp.full((1,), pos), cfg.rope_theta)
     c_new = x @ params["w_dkv"]  # (b, 1, r)
-    kr_new = apply_rope((x @ params["w_krope"])[:, :, None, :], jnp.full((1,), pos), cfg.rope_theta)[:, :, 0, :]
+    kr_new = apply_rope(
+        (x @ params["w_krope"])[:, :, None, :], jnp.full((1,), pos), cfg.rope_theta
+    )[:, :, 0, :]
     cache_c = jax.lax.dynamic_update_slice(cache_c, c_new.astype(cache_c.dtype), (0, pos, 0))
     cache_kr = jax.lax.dynamic_update_slice(cache_kr, kr_new.astype(cache_kr.dtype), (0, pos, 0))
     # absorb W_uk into q: (b,1,h,hd) x (r,h,hd) -> (b,1,h,r)

@@ -6,7 +6,6 @@ non-uniform families (hybrid shared-attention, VLM cross-attention).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -12,7 +12,7 @@ so shapes, shardings, and init can never drift apart.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

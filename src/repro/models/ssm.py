@@ -55,10 +55,10 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 def _segsum(a: jnp.ndarray) -> jnp.ndarray:
     """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum_{j<k<=i} a_k."""
-    l = a.shape[-1]
+    seq = a.shape[-1]
     cs = jnp.cumsum(a, axis=-1)
     diff = cs[..., :, None] - cs[..., None, :]
-    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    mask = jnp.tril(jnp.ones((seq, seq), bool), 0)
     return jnp.where(mask, diff, -jnp.inf)
 
 

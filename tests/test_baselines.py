@@ -1,5 +1,4 @@
 """DA baselines produce sane accuracies and expected orderings."""
-import numpy as np
 import pytest
 
 from repro.baselines import (

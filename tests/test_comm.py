@@ -71,7 +71,9 @@ def test_wire_roundtrip_metadata(spec, payload):
 
 
 def test_float32_roundtrip_bitexact(payload):
-    out, _ = deserialize(serialize(moments_message(payload, sender=0, round=0), get_codec("float32")))
+    out, _ = deserialize(
+        serialize(moments_message(payload, sender=0, round=0), get_codec("float32"))
+    )
     assert np.array_equal(out.arrays["msg"], payload)
 
 

@@ -13,7 +13,6 @@ from repro.core import (
     mmd_rff,
     mmd_rkhs,
     r_tca,
-    rf_tca,
     rf_tca_fit,
     rf_tca_transform,
     solve_w_rf,

@@ -20,7 +20,13 @@ SCRIPT = textwrap.dedent(
     from repro.federated.distributed import (
         build_sharded_round, make_client_mesh, stack_clients, unstack_clients,
     )
-    from repro.federated.model import ClientConfig, init_params, make_omega, client_message, source_loss
+    from repro.federated.model import (
+        ClientConfig,
+        client_message,
+        init_params,
+        make_omega,
+        source_loss,
+    )
     from repro.core.mmd import mmd_projected
     from repro.optim import adam, apply_updates
 

@@ -1,5 +1,4 @@
 """FedRF-TCA protocol: rounds, drop settings, communication accounting, voting."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,7 +11,7 @@ from repro.federated import (
     plan_round,
     sample_participants,
 )
-from repro.federated.model import accuracy, client_message, init_params, make_omega
+from repro.federated.model import make_omega
 
 
 @pytest.fixture(scope="module")

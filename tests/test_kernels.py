@@ -56,6 +56,84 @@ def test_rff_gram_stream_sweep(p, n, nf):
     np.testing.assert_allclose(np.asarray(u), np.asarray(ue), atol=2e-5)
 
 
+@pytest.mark.parametrize(
+    "p,n,nf,tile", [(16, 64, 32, 128), (7, 300, 130, 128), (16, 129, 300, 256), (5, 97, 33, 128)]
+)
+def test_rff_gram_stream_tiled_sweep(p, n, nf, tile):
+    """(i, j)-tiled kernel vs untiled kernel vs dense oracle, incl. N that is
+    not a multiple of the tile (feature-row padding path)."""
+    from repro.core.kernels_math import ell_vector
+
+    key = jax.random.PRNGKey(p + n + nf)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    om = jax.random.normal(jax.random.fold_in(key, 1), (nf, p), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    g_t, u_t = ops.rff_gram_stream(x, om, ell, block=64, tile=tile)
+    g_u, u_u = ops.rff_gram_stream(x, om, ell, block=64, tile=0)
+    ge, ue = ref.rff_gram_stream_ref(x, om, ell)
+    scale = float(jnp.abs(ge).max())
+    np.testing.assert_allclose(np.asarray(g_t) / scale, np.asarray(g_u) / scale, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u_t), np.asarray(u_u), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(g_t) / scale, np.asarray(ge) / scale, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(u_t), np.asarray(ue), atol=2e-5)
+
+
+def test_gram_tile_plan_auto_selection():
+    """tile=None keeps the untiled fast path up to the VMEM threshold, then
+    switches to a tile whose accumulator bytes are independent of N."""
+    assert ops.gram_tile_plan(256)["tile"] is None
+    assert ops.gram_tile_plan(ops.GRAM_TILE_THRESHOLD)["tile"] is None
+    t_mid = ops.gram_tile_plan(1300)
+    t_big = ops.gram_tile_plan(8192)
+    assert t_mid["tile"] == 256 and t_mid["n_pad"] % 256 == 0
+    assert t_big["tile"] == 512
+    # per-instance accumulator memory is set by the tile, not N
+    assert t_big["acc_bytes"] == 3 * 512 * 512 * 4 + 2 * 512 * 2 * 4
+    assert t_big["acc_bytes"] < 3 * 8192 * 8192 * 4
+    # explicit overrides: 0 forces untiled, an int forces that tile edge
+    assert ops.gram_tile_plan(4096, tile=0)["tile"] is None
+    assert ops.gram_tile_plan(300, tile=128)["tile"] == 128
+    # lane-misaligned forced tiles must fail here, not at Mosaic lowering
+    with pytest.raises(ValueError, match="multiple of 128"):
+        ops.gram_tile_plan(4096, tile=200)
+
+
+def test_tiled_kernel_vmem_accumulators_bounded_by_tile():
+    """The pallas_call's scratch accumulators (the VMEM proxy) must be (t, t)
+    blocks, not (N_pad, N_pad) — checked on the traced kernel jaxpr."""
+    from repro.core.kernels_math import ell_vector
+
+    p, n, nf, tile = 8, 128, 1536, 256
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    om = jax.random.normal(jax.random.fold_in(key, 1), (nf, p), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    jaxpr = jax.make_jaxpr(
+        lambda a, o, e: ops.rff_gram_stream(a, o, e, tile=tile)
+    )(x, om, ell)
+
+    def find_pallas(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                yield eqn
+        for sub in jax.core.subjaxprs(jx):
+            yield from find_pallas(sub)
+
+    eqns = list(find_pallas(jaxpr.jaxpr))
+    assert eqns, "tiled path must lower through pallas_call"
+    kernel_jaxpr = eqns[0].params["jaxpr"]
+    limit = tile * tile  # largest per-instance buffer the tiled layout allows
+    for v in list(kernel_jaxpr.invars) + [
+        o for eqn in kernel_jaxpr.eqns for o in eqn.outvars
+    ]:
+        shape = getattr(getattr(v, "aval", None), "shape", None)
+        if shape is None:
+            continue
+        size = int(np.prod(shape)) if shape else 1
+        assert size <= limit, f"kernel buffer {shape} exceeds tile bound"
+    assert nf * nf > limit and nf * n > limit  # bound would catch untiled accs
+
+
 @pytest.mark.parametrize("p,n,nf", [(16, 130, 40), (3, 257, 16)])
 def test_rff_padding_non_multiple_of_block(p, n, nf):
     """Default-block (128) wrapper padding paths must match the XLA reference."""

@@ -1,8 +1,5 @@
 """Launch-layer units: input specs, cache pspecs, shape registry, drivers."""
-import jax
-import jax.numpy as jnp
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch.specs import cache_pspecs, input_pspecs, input_specs

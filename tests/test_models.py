@@ -152,7 +152,9 @@ def test_prefill_handoff_dense():
         lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, extra)] + [(0, 0)] * (a.ndim - 3)), cache
     )
     for t in range(s, s + extra):
-        logits, cache = model.decode_step(params, cache, {"tokens": toks[:, t : t + 1]}, jnp.int32(t))
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": toks[:, t : t + 1]}, jnp.int32(t)
+        )
         assert float(jnp.abs(logits - full[:, t]).max()) < 1e-3
 
 
@@ -168,7 +170,9 @@ def test_sliding_window_ring_buffer_decode():
     cache = model.init_cache(b, 8)  # ring of size window
     errs = []
     for t in range(s):
-        logits, cache = model.decode_step(params, cache, {"tokens": toks[:, t : t + 1]}, jnp.int32(t))
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": toks[:, t : t + 1]}, jnp.int32(t)
+        )
         errs.append(float(jnp.abs(logits - full[:, t]).max()))
     assert max(errs) < 1e-3, max(errs)
 

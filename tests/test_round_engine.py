@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.data import make_domains
+from repro.data.domains import Domain
 from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
 from repro.federated import network
 from repro.federated.engine import stack_trees, unstack_tree
@@ -16,6 +17,20 @@ def small_setup():
     doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
     cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
     return doms[:3], doms[3], cfg
+
+
+@pytest.fixture(scope="module")
+def ragged_setup():
+    """Unequal per-client datasets: 120 / 70 / 20 samples (client 2 is shorter
+    than both the training batch and the message batch)."""
+    doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    sources = [
+        doms[0],
+        Domain("s1", doms[1].x[:, :70], doms[1].y[:70]),
+        Domain("s2", doms[2].x[:, :20], doms[2].y[:20]),
+    ]
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    return sources, doms[3], cfg
 
 
 def _leaf_err(a, b):
@@ -79,6 +94,91 @@ def test_drop_settings_and_comm_accounting_match_serial(small_setup):
         assert (tr_s.comm.data_messages, tr_s.comm.w_rf, tr_s.comm.classifier) == (
             tr_b.comm.data_messages, tr_b.comm.w_rf, tr_b.comm.classifier,
         )
+
+
+def test_ragged_full_participation_matches_serial(ragged_setup, monkeypatch):
+    """Unequal per-client n_k, full participation: the batched plane pads to
+    the max width + masks, and must match the serial plane exactly (the seed
+    engine truncated every message batch to the min instead)."""
+    sources, target, cfg = ragged_setup
+    monkeypatch.setattr(
+        network, "plan_round",
+        lambda rng, n, s: RoundPlan(list(range(n)), list(range(n)), list(range(n))),
+    )
+    kw = dict(
+        n_rounds=4, t_c=2, local_steps=2, warmup_rounds=2, batch_size=32,
+        message_batch_size=64, seed=0,
+    )
+    tr_s = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="serial", **kw))
+    tr_s.train()
+    tr_b = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="batched", **kw))
+    tr_b.train()
+    # per-client sizes are capped at n_k, not truncated to the min
+    assert tr_b._batch_sizes == [32, 32, 20]
+    assert tr_b._msg_sizes == [64, 64, 20]
+    assert tr_b._bmask is not None and tr_b._msg_mask is not None
+    assert tr_b._bmask.shape == (3, 32) and tr_b._msg_mask.shape == (3, 64)
+    assert _leaf_err(tr_s.tgt_params, tr_b.tgt_params) < 1e-4
+    for i in range(len(sources)):
+        assert _leaf_err(tr_s.src_params[i], tr_b._src_param(i)) < 1e-4
+    assert tr_s.comm.total == tr_b.comm.total
+    assert abs(tr_s.evaluate() - tr_b.evaluate()) < 1e-6
+
+
+def test_ragged_drop_short_client_matches_serial(ragged_setup, monkeypatch):
+    """Drop-mask correctness: with the short client dropped from S_t every
+    round, its padded message batch must carry zero weight on both planes —
+    masked moments + drop masks compose, trajectories still match."""
+    sources, target, cfg = ragged_setup
+    k = len(sources)
+    monkeypatch.setattr(
+        network, "plan_round",
+        lambda rng, n, s: RoundPlan([0, 1], list(range(n)), list(range(n))),
+    )
+    kw = dict(
+        n_rounds=3, t_c=2, local_steps=1, warmup_rounds=1, batch_size=32,
+        message_batch_size=64, seed=0,
+    )
+    tr_s = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="serial", **kw))
+    tr_s.train()
+    tr_b = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(engine="batched", **kw))
+    tr_b.train()
+    assert _leaf_err(tr_s.tgt_params, tr_b.tgt_params) < 1e-4
+    for i in range(k):
+        assert _leaf_err(tr_s.src_params[i], tr_b._src_param(i)) < 1e-4
+    for leaf in jax.tree_util.tree_leaves(tr_b._src_stack):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert (tr_s.comm.data_messages, tr_s.comm.w_rf, tr_s.comm.classifier) == (
+        tr_b.comm.data_messages, tr_b.comm.w_rf, tr_b.comm.classifier,
+    )
+
+
+def test_per_client_batch_size_sequences(ragged_setup):
+    """ProtocolConfig accepts per-client batch-size sequences, capped at n_k."""
+    sources, target, cfg = ragged_setup
+    proto = ProtocolConfig(
+        n_rounds=2, warmup_rounds=1, batch_size=(16, 24, 64),
+        message_batch_size=(80, 40, 64), seed=0, engine="batched",
+    )
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    assert tr._batch_sizes == [16, 24, 20] and tr._msg_sizes == [80, 40, 20]
+    tr.train()
+    for leaf in jax.tree_util.tree_leaves(tr.tgt_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    with pytest.raises(ValueError, match="entries for"):
+        FedRFTCATrainer(
+            sources, target, cfg,
+            ProtocolConfig(batch_size=(16, 24), engine="batched"),
+        )
+
+
+def test_equal_clients_keep_unmasked_path(small_setup):
+    """Full-width clients must not pay the masked path: masks stay None so the
+    compiled round is the seed program, bit-for-bit."""
+    sources, target, cfg = small_setup
+    proto = ProtocolConfig(n_rounds=1, warmup_rounds=0, batch_size=32, engine="batched")
+    tr = FedRFTCATrainer(sources, target, cfg, proto)
+    assert tr._bmask is None and tr._msg_mask is None
 
 
 def test_batched_no_message_ablation(small_setup):

@@ -102,6 +102,69 @@ def test_fit_modes_agree(data):
     np.testing.assert_allclose(np.asarray(v_pallas), np.asarray(v_dense), rtol=1e-3)
 
 
+def test_tiled_twin_matches_untiled_and_pallas(data):
+    """Tiled XLA twin == untiled scan == tiled Pallas kernel, non-tile N."""
+    from repro.kernels import ops as kops
+
+    xs, xt = data
+    x = jnp.concatenate([xs, xt], axis=1)
+    ell = ell_vector(xs.shape[1], xt.shape[1])
+    omega = draw_omega(0, 200, x.shape[0])  # N=200: pads to 256 under tile=128
+    g_u, u_u = streaming_gram(x, ell, omega, block=37)
+    g_t, u_t = streaming_gram(x, ell, omega, block=37, tile=128)
+    g_p, u_p = kops.rff_gram_stream(x, omega, ell, block=64, tile=128)
+    scale = float(jnp.abs(g_u).max())
+    np.testing.assert_allclose(np.asarray(g_t) / scale, np.asarray(g_u) / scale, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(u_t), np.asarray(u_u), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(g_p) / scale, np.asarray(g_t) / scale, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(u_p), np.asarray(u_t), atol=2e-6)
+
+
+def test_tiled_kernel_matches_twin_at_n4096():
+    """Acceptance: the tiled Pallas kernel agrees with the tiled XLA twin to
+    <= 1e-4 relative at N = 4096 (auto tile selection on the kernel path)."""
+    from repro.kernels import ops as kops
+
+    p, n, nf = 16, 256, 4096
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    omega = jax.random.normal(jax.random.fold_in(key, 2), (nf, p), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    assert kops.gram_tile_plan(nf)["tile"] == 512  # auto-tiled past the ceiling
+    g_p, u_p = kops.rff_gram_stream(x, omega, ell)  # tile=None -> auto
+    g_t, u_t = streaming_gram(x, ell, omega, block=128, tile=512)
+    scale = float(jnp.abs(g_t).max())
+    assert float(jnp.abs(g_p - g_t).max()) / scale <= 1e-4
+    assert float(jnp.abs(u_p - u_t).max()) <= 1e-4 * max(1.0, float(jnp.abs(u_t).max()))
+
+
+def test_tiled_twin_per_pair_memory_bounded_by_tile():
+    """Jaxpr proxy: one (i, j) tile pair of the tiled layout only ever holds
+    (tile, tile) accumulators and (tile, block) slabs — an (N, block) slab or
+    (N, N) accumulator (the untiled layout) would blow the bound."""
+    from repro.core.rf_tca import _tile_pair_stats
+
+    p, n, nf, tile, block = 8, 128, 2048, 128, 64
+    key = jax.random.PRNGKey(0)
+    om_i = jax.random.normal(key, (tile, p), jnp.float32)
+    om_j = jax.random.normal(jax.random.fold_in(key, 1), (tile, p), jnp.float32)
+    xb = jax.random.normal(jax.random.fold_in(key, 2), (n // block, block, p), jnp.float32)
+    mb = jnp.ones((n // block, block), jnp.float32)
+    jaxpr = jax.make_jaxpr(_tile_pair_stats)(om_i, om_j, xb, mb)
+    limit = max(3 * tile * tile, xb.size)  # stacked accumulators, input copies
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                size = int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                assert size <= limit, f"intermediate {v.aval.shape} exceeds tile bound"
+        for sub in jax.core.subjaxprs(jx):
+            walk(sub)
+
+    walk(jaxpr.jaxpr)
+    assert nf * block > limit and nf * nf > limit  # the bound has teeth vs untiled
+
+
 def test_streaming_never_materializes_sigma(data):
     """The streamed stats pass must not allocate a (2N, n) buffer.
 
