@@ -1,0 +1,200 @@
+"""Async federated runtime benchmark — the fedsim robustness record.
+
+Claims measured (and recorded in ``BENCH_async.json``):
+
+- **degeneracy** — an AsyncScheduler run with uniform latencies, no churn and
+  ``buffer_size = K`` reproduces the batched sync engine's parameters (the
+  recorded ``max_param_divergence`` is gated at <= 1e-3 by the CI smoke; the
+  unit test pins it at <= 1e-6);
+- **accuracy vs churn rate** — Markov on/off client churn at increasing
+  offline fractions: staleness-weighted buffered aggregation
+  (:class:`AsyncScheduler`, polynomial discount) against the naive
+  drop-the-stragglers baseline (:class:`SyncScheduler`, offline clients
+  simply lost from each round's plan), same aggregation budget;
+- **accuracy vs buffer size** — FedBuff's knob under fixed churn;
+- **virtual time to target accuracy** — sync waits for the slowest link
+  every round, async flushes as updates land: wall-clock-to-quality on the
+  same heterogeneous links.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import da_suite, emit
+from repro.comm.netsim import LinkModel, LinkScenario, TraceScenario
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.network import RoundPlan
+from repro.fedsim import AsyncConfig, AsyncScheduler, SyncScheduler, markov_trace
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_async.json"
+
+
+def _leaf_div(a, b) -> float:
+    import jax
+
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _trainer(sources, target, cfg, rounds, *, seed=0):
+    k = len(sources)
+    ids = list(range(k))
+    proto = ProtocolConfig(
+        n_rounds=rounds, t_c=max(rounds // 4, 1), warmup_rounds=rounds, lr=5e-3,
+        batch_size=48, seed=seed,
+        scenario=TraceScenario([RoundPlan(ids, ids, ids)] * rounds, cycle=True),
+    )
+    return FedRFTCATrainer(sources, target, cfg, proto)
+
+
+def _acc_of(history, trainer) -> float:
+    accs = [h["acc"] for h in history if "acc" in h]
+    return float(np.mean(accs[-3:])) if accs else float(trainer.evaluate())
+
+
+def run(smoke: bool = False) -> None:
+    """Full bench by default; ``smoke=True`` shrinks every run so CI can
+    validate the emitted BENCH_async.json schema in seconds."""
+    rounds = 8 if smoke else 60
+    sources, target = da_suite(n=80 if smoke else 240)
+    k = len(sources)
+    cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
+    record: dict = {"smoke": smoke, "n_clients": k, "rounds": rounds}
+    eval_every = max(rounds // 6, 1)
+
+    # -- degeneracy: uniform latency, no churn, buffer=K == the sync engine --
+    tr_sync = _trainer(sources, target, cfg, rounds)
+    s_sched = SyncScheduler(tr_sync)
+    s_sched.run(rounds, eval_every=eval_every)
+    tr_async = _trainer(sources, target, cfg, rounds)
+    a_sched = AsyncScheduler(
+        tr_async,
+        AsyncConfig(buffer_size=k, staleness="polynomial"),
+        links=LinkScenario(links=[LinkModel(latency_s=0.25) for _ in range(k)]),
+    )
+    a_hist = a_sched.run(rounds, eval_every=eval_every)
+    div = max(
+        _leaf_div(tr_sync.tgt_params, tr_async.tgt_params),
+        _leaf_div(tr_sync._src_stack, tr_async._src_stack),
+    )
+    record["degeneracy"] = {
+        "max_param_divergence": div,
+        "virtual_time_sync": s_sched.clock.now,
+        "virtual_time_async": a_sched.clock.now,
+        "flushes": a_sched.flushes,
+        "staleness_max": int(max(s for h in a_hist for s in h["staleness"])),
+    }
+    emit("async/degeneracy", 0.0, f"divergence={div:.2e},flushes={a_sched.flushes}")
+
+    # -- accuracy vs churn: buffered-staleness async vs drop-the-stragglers --
+    churn_fracs = (0.3,) if smoke else (0.0, 0.2, 0.4, 0.6)
+    churn_curve: dict[str, dict] = {}
+    for frac in churn_fracs:
+        row: dict = {"churn_fraction": frac}
+        mean_on = 10.0
+        for name, make in (
+            ("naive_sync", lambda tr, av: SyncScheduler(tr, availability=av)),
+            (
+                "async_buffered",
+                lambda tr, av: AsyncScheduler(
+                    tr,
+                    AsyncConfig(buffer_size=max(k // 2, 1), staleness="polynomial"),
+                    availability=av,
+                ),
+            ),
+        ):
+            avail = (
+                None
+                if frac == 0.0
+                else markov_trace(
+                    k, horizon=200.0 * rounds,
+                    mean_on=mean_on, mean_off=mean_on * frac / (1.0 - frac),
+                    seed=17,
+                )
+            )
+            tr = _trainer(sources, target, cfg, rounds)
+            sched = make(tr, avail)
+            hist = sched.run(rounds, eval_every=eval_every)
+            row[name] = {
+                "acc": _acc_of(hist, tr),
+                "virtual_time": sched.clock.now,
+                "aggregations": len(hist),
+            }
+        row["async_minus_naive"] = row["async_buffered"]["acc"] - row["naive_sync"]["acc"]
+        churn_curve[f"{frac:.1f}"] = row
+        emit(
+            f"async/churn_{frac:.1f}", 0.0,
+            f"naive={row['naive_sync']['acc']:.3f},"
+            f"async={row['async_buffered']['acc']:.3f},"
+            f"delta={row['async_minus_naive']:+.3f}",
+        )
+    record["accuracy_vs_churn"] = churn_curve
+    wins = [r for r in churn_curve.values() if r["async_minus_naive"] > 0]
+    record["async_beats_naive_at"] = [r["churn_fraction"] for r in wins]
+
+    # -- accuracy vs buffer size under fixed churn ---------------------------
+    buffer_curve: dict[str, dict] = {}
+    frac = 0.3
+    avail = markov_trace(
+        k, horizon=200.0 * rounds, mean_on=10.0, mean_off=10.0 * frac / (1.0 - frac),
+        seed=23,
+    )
+    sizes = (1, k) if smoke else sorted({1, 2, max(k // 2, 1), k})
+    for b in sizes:
+        tr = _trainer(sources, target, cfg, rounds)
+        sched = AsyncScheduler(
+            tr, AsyncConfig(buffer_size=b, staleness="polynomial"), availability=avail
+        )
+        hist = sched.run(rounds, eval_every=eval_every)
+        buffer_curve[str(b)] = {
+            "acc": _acc_of(hist, tr),
+            "virtual_time": sched.clock.now,
+            "staleness_mean": float(
+                np.mean([s for h in hist for s in h["staleness"]] or [0.0])
+            ),
+        }
+        emit(f"async/buffer_{b}", 0.0, f"acc={buffer_curve[str(b)]['acc']:.3f}")
+    record["accuracy_vs_buffer_size"] = buffer_curve
+
+    # -- virtual time to target accuracy on heterogeneous links --------------
+    # one slow straggler: the sync barrier waits for it every round, the
+    # buffered server does not
+    links = [LinkModel(latency_s=0.1, bandwidth_bps=1e6) for _ in range(k)]
+    links[-1] = LinkModel(latency_s=8.0, bandwidth_bps=2e4)
+    tr_s = _trainer(sources, target, cfg, rounds)
+    ss = SyncScheduler(tr_s, links=LinkScenario(links=list(links)))
+    hs = ss.run(rounds, eval_every=1)
+    tr_a = _trainer(sources, target, cfg, rounds)
+    sa = AsyncScheduler(
+        tr_a,
+        AsyncConfig(buffer_size=max(k // 2, 1), staleness="polynomial"),
+        links=LinkScenario(links=list(links)),
+    )
+    ha = sa.run(rounds, eval_every=1)
+    curve_s = [(h["t"], h["acc"]) for h in hs if "acc" in h]
+    curve_a = [(h["t"], h["acc"]) for h in ha if "acc" in h]
+    target_acc = 0.95 * min(max(a for _, a in curve_s), max(a for _, a in curve_a))
+    t_sync = next(t for t, a in curve_s if a >= target_acc)
+    t_async = next(t for t, a in curve_a if a >= target_acc)
+    record["time_to_target"] = {
+        "target_acc": target_acc,
+        "virtual_time_sync": t_sync,
+        "virtual_time_async": t_async,
+        "speedup_async_vs_sync": t_sync / max(t_async, 1e-9),
+    }
+    emit(
+        "async/time_to_target", 0.0,
+        f"target={target_acc:.3f},sync={t_sync:.1f}s,async={t_async:.1f}s",
+    )
+
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("async/json", 0.0, f"wrote={JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    run()

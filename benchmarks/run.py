@@ -7,14 +7,17 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
     PYTHONPATH=src python -m benchmarks.run --only fig3,table2
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny fig3 + wire
 
-The ``fig3`` bench additionally writes ``BENCH_rf_tca.json`` at the repo root
-(fit wall-times dense/stream/lobpcg, speedups, peak-memory proxy, tiled
-large-N kernel agreement, round-engine per-round times serial/batched/ragged,
-accuracies) and ``wire`` writes ``BENCH_comm.json`` (bytes-on-wire per payload
-per codec, accuracy-vs-loss-rate and accuracy-vs-codec curves) — the
-machine-readable records tracked across PRs.
+Three benches write machine-readable records at the repo root, tracked across
+PRs: ``fig3`` -> ``BENCH_rf_tca.json`` (fit wall-times dense/stream/lobpcg,
+speedups, peak-memory proxy, tiled large-N kernel agreement, round-engine
+per-round times serial/batched/ragged, accuracies), ``wire`` ->
+``BENCH_comm.json`` (bytes-on-wire per payload per codec, accuracy-vs-loss-rate
+and accuracy-vs-codec curves), and ``async`` -> ``BENCH_async.json`` (fedsim
+runtime: sync-vs-async degeneracy divergence, accuracy-vs-churn-rate with
+staleness-weighted buffering vs drop-the-stragglers, accuracy-vs-buffer-size,
+virtual time to target accuracy).
 
-``--smoke`` reruns exactly those two record-writing benches at tiny sizes and
+``--smoke`` reruns exactly those record-writing benches at tiny sizes and
 schema-validates the emitted JSON (required keys present, wall-times positive,
 agreement within tolerance) so the perf records cannot silently rot — this is
 the CI ``bench-smoke`` job.
@@ -32,6 +35,7 @@ from pathlib import Path
 from benchmarks import (
     bench_ablation,
     bench_accuracy,
+    bench_async,
     bench_comm,
     bench_comm_wire,
     bench_gamma,
@@ -48,6 +52,7 @@ BENCHES = {
     "theory": ("Thm.1/2 + Cor.1 validation", bench_theory.run),
     "table2": ("Tables I/II: communication accounting", bench_comm.run),
     "wire": ("Wire format: bytes/payload/codec + loss & codec curves", bench_comm_wire.run),
+    "async": ("Fedsim runtime: churn/staleness/buffer curves + degeneracy", bench_async.run),
     "table3": ("Table III + Fig.4: drop/interval robustness", bench_robustness.run),
     "table5": ("Tables IV-VI: federated DA leaderboard", bench_accuracy.run),
     "table8": ("Tables VIII/IX + Fig.5: ablations", bench_ablation.run),
@@ -129,6 +134,30 @@ def validate_comm_record(record: dict) -> list[str]:
     return list(e)
 
 
+def validate_async_record(record: dict) -> list[str]:
+    """BENCH_async.json contract: degeneracy within tolerance, virtual times
+    positive, churn/buffer accuracy curves well-formed."""
+    e = _SchemaErrors(record)
+    e.need("degeneracy.max_param_divergence", lambda v: 0.0 <= v <= 1e-3)
+    for k in ("degeneracy.virtual_time_sync", "degeneracy.virtual_time_async",
+              "degeneracy.flushes", "time_to_target.virtual_time_sync",
+              "time_to_target.virtual_time_async", "time_to_target.target_acc"):
+        e.need(k, _is_pos)
+    e.need("degeneracy.staleness_max", lambda v: v == 0)  # full fresh buffers only
+    acc_row = lambda r: isinstance(r, dict) and 0.0 <= r.get("acc", -1.0) <= 1.0 and _is_pos(
+        r.get("virtual_time")
+    )
+    e.need("accuracy_vs_churn", lambda d: isinstance(d, dict) and d and all(
+        acc_row(r.get("naive_sync")) and acc_row(r.get("async_buffered"))
+        for r in d.values()
+    ))
+    e.need("accuracy_vs_buffer_size", lambda d: isinstance(d, dict) and d and all(
+        acc_row(r) for r in d.values()
+    ))
+    e.need("async_beats_naive_at", lambda v: isinstance(v, list))
+    return list(e)
+
+
 def self_consistent_seed_replay(record: dict) -> bool:
     try:
         return (
@@ -139,8 +168,12 @@ def self_consistent_seed_replay(record: dict) -> bool:
 
 
 def run_smoke() -> None:
-    """CI bench-smoke: tiny fig3 + wire runs, then schema-validate the JSONs."""
-    for key, fn in (("fig3", bench_rf_tca.run), ("wire", bench_comm_wire.run)):
+    """CI bench-smoke: tiny fig3 + wire + async runs, then schema-validate."""
+    for key, fn in (
+        ("fig3", bench_rf_tca.run),
+        ("wire", bench_comm_wire.run),
+        ("async", bench_async.run),
+    ):
         print(f"# --- smoke {key} ---", flush=True)
         t0 = time.time()
         fn(smoke=True)
@@ -149,6 +182,7 @@ def run_smoke() -> None:
     for name, validate in (
         ("BENCH_rf_tca.json", validate_rf_tca_record),
         ("BENCH_comm.json", validate_comm_record),
+        ("BENCH_async.json", validate_async_record),
     ):
         path = ROOT / name
         if not path.exists():
@@ -157,7 +191,10 @@ def run_smoke() -> None:
         errors += [f"{name}: {msg}" for msg in validate(json.loads(path.read_text()))]
     if errors:
         sys.exit("bench record schema violations:\n  " + "\n  ".join(errors))
-    print("# smoke: BENCH_rf_tca.json + BENCH_comm.json schemas OK", flush=True)
+    print(
+        "# smoke: BENCH_rf_tca.json + BENCH_comm.json + BENCH_async.json schemas OK",
+        flush=True,
+    )
 
 
 def main() -> None:

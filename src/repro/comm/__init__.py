@@ -7,8 +7,14 @@ The communication subsystem behind FedRF-TCA's headline claims:
                 sparsification, and the O(1) seed-replay codec for W_RF
 - ``transport`` identity (analytic byte accounting) vs wire (real
                 serialize/deserialize) transports + the CommLog record
-- ``netsim``    Table-III-generalizing, trace-replayable network scenarios
+- ``netsim``    Table-III-generalizing, trace-replayable network scenarios,
+                shared-backhaul queueing, and the async runtime's per-client
+                completion-time queries
+- ``autocodec`` one-shot picker: cheapest codec meeting an accuracy budget,
+                from the measured BENCH_comm.json curves
+                (``ProtocolConfig(codec="auto:<budget>")``)
 """
+from repro.comm.autocodec import codec_table, pick_codec, resolve as resolve_auto_codec
 from repro.comm.codecs import (
     Codec,
     codec_names,

@@ -92,12 +92,30 @@ class LinkModel:
     jitter_s: float = 0.0  # uniform [0, jitter_s) added per payload
     bandwidth_bps: float = math.inf  # bytes/second on the wire
 
-    def delivery_time(self, rng, nbytes: int) -> float:
-        """Simulated arrival time of an nbytes payload; inf if lost."""
+    def delivery_time(
+        self,
+        rng,
+        nbytes: int,
+        *,
+        contended_bytes: float | None = None,
+        backhaul_bps: float = math.inf,
+    ) -> float:
+        """Simulated arrival time of an nbytes payload; inf if lost.
+
+        With a finite shared ``backhaul_bps``, ``contended_bytes`` is the sum
+        of ALL bytes concurrently on the backhaul (this payload included): the
+        wire term becomes ``max(own/bandwidth, contended/backhaul)`` — the
+        transfer is pinned by whichever is slower, its own last-mile link or
+        its fair share of the serialized backhaul.  The defaults reproduce
+        the uncontended per-payload time bit-for-bit.
+        """
         if rng.random() < self.drop:
             return math.inf
         jitter = rng.random() * self.jitter_s if self.jitter_s else 0.0
-        return self.latency_s + jitter + nbytes / self.bandwidth_bps
+        wire = nbytes / self.bandwidth_bps
+        if contended_bytes is not None:
+            wire = max(wire, contended_bytes / backhaul_bps)
+        return self.latency_s + jitter + wire
 
 
 @dataclass
@@ -108,22 +126,83 @@ class LinkScenario(Scenario):
     ``wire.serialized_size``); the transport wires this up so codec choice
     changes who straggles — e.g. dense float32 W_RF misses a tight deadline
     that the seed-replay key makes trivially.
+
+    A finite ``backhaul_bps`` models a shared uplink (cell tower / institute
+    egress): every payload of a round contends with all the others attempting
+    the same kind concurrently, so each client's wire time is driven by the
+    *sum* of in-flight bytes, not its own payload alone — K clients on a
+    shared pipe straggle together even when each last-mile link is fast.
+    ``backhaul_bps = inf`` (default) keeps the seed's per-payload behavior
+    bit-for-bit, rng stream included.
+
+    The fedsim async runtime does not use round plans; it queries
+    :meth:`uplink_time` per dispatched client instead (lost payloads retried
+    after ``retry_s``, contention from the bytes currently in flight), so a
+    client's arrival time — and therefore its staleness at consumption —
+    follows from the exact wire bytes of the configured codec.
     """
 
     links: list[LinkModel]
     deadline_s: float = math.inf
     payload_bytes: dict[str, int] = field(default_factory=dict)
+    backhaul_bps: float = math.inf  # shared-uplink capacity (queueing)
+    retry_s: float = 1.0  # client retransmit backoff for lost async uplinks
 
     def plan(self, rng, n_clients, t) -> RoundPlan:
         if len(self.links) < n_clients:
             raise ValueError(f"{len(self.links)} links for {n_clients} clients")
+        contended = math.isfinite(self.backhaul_bps)
         sets: dict[str, list[int]] = {"moments": [], "w_rf": [], "classifier": []}
         for i in range(n_clients):
             for kind in sets:
-                dt = self.links[i].delivery_time(rng, self.payload_bytes.get(kind, 0))
+                nbytes = self.payload_bytes.get(kind, 0)
+                # all n_clients attempt this kind's payload concurrently; lost
+                # ones still occupied airtime, so contention counts them all
+                dt = self.links[i].delivery_time(
+                    rng,
+                    nbytes,
+                    contended_bytes=(n_clients * nbytes) if contended else None,
+                    backhaul_bps=self.backhaul_bps,
+                )
                 if dt <= self.deadline_s:
                     sets[kind].append(i)
         return _nest(sets["moments"], sets["w_rf"], sets["classifier"])
+
+    def total_uplink_bytes(self, kinds: tuple[str, ...] = ("moments", "w_rf")) -> int:
+        """Exact wire bytes of one client uplink carrying ``kinds``."""
+        return sum(self.payload_bytes.get(kind, 0) for kind in kinds)
+
+    def uplink_time(
+        self,
+        rng,
+        client: int,
+        nbytes: int,
+        *,
+        inflight_bytes: float = 0.0,
+        max_retries: int = 10_000,
+    ) -> float:
+        """Virtual seconds until a client's nbytes uplink lands at the server
+        (the async runtime's completion-time query).  Bernoulli losses are
+        retried after ``retry_s`` each (always finite, unlike the deadline
+        path — in the async protocol a lost update is *late*, not gone);
+        a finite backhaul adds contention from ``inflight_bytes``, the sum of
+        bytes concurrently on the wire when this uplink starts."""
+        link = self.links[client]
+        t = 0.0
+        if link.drop:
+            if link.drop >= 1.0:
+                raise ValueError("drop=1.0 link can never deliver an uplink")
+            retries = 0
+            while rng.random() < link.drop:
+                t += self.retry_s
+                retries += 1
+                if retries >= max_retries:
+                    raise RuntimeError(f"uplink exceeded {max_retries} retries")
+        jitter = rng.random() * link.jitter_s if link.jitter_s else 0.0
+        wire = nbytes / link.bandwidth_bps
+        if math.isfinite(self.backhaul_bps):
+            wire = max(wire, (nbytes + inflight_bytes) / self.backhaul_bps)
+        return t + link.latency_s + jitter + wire
 
 
 @dataclass

@@ -1,9 +1,62 @@
-"""Global parameter aggregation (paper Algorithm 4) + one-shot hard voting (App. D)."""
+"""Global parameter aggregation (paper Algorithm 4) + one-shot hard voting (App. D).
+
+Staleness-aware buffered aggregation (the fedsim async runtime): the server
+merges a *buffer* of client updates, each tagged with how many server model
+versions elapsed since its dispatch.  :func:`staleness_weights` turns those
+tags into merge weights — ``constant`` (FedBuff's unweighted mean),
+``polynomial`` (the standard ``(1+s)^-a`` staleness discount), and ``auto``
+(sample-count-proportional importance in the spirit of auto-weighted FDA
+aggregation, discounted polynomially by staleness).  The weighted merges
+themselves run in-graph — ``BatchedRoundEngine._flush_fn`` applies the
+weights to the Sigma-ell moment, W_RF, and classifier merges.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.utils.tree import tree_mean, tree_weighted_mean
+
+STALENESS_MODES = ("constant", "polynomial", "auto")
+
+
+def staleness_weights(
+    staleness,
+    mode: str = "constant",
+    *,
+    n_samples=None,
+    alpha: float = 0.5,
+) -> np.ndarray:
+    """Merge weights for a buffer of updates with integer ``staleness`` tags.
+
+    ``staleness[k]`` counts server model versions between update k's dispatch
+    and its consumption (0 = trained on the current model).  Modes:
+
+    - ``constant``            w_k = 1                      (FedBuff mean)
+    - ``polynomial[:alpha]``  w_k = (1 + s_k)^-alpha       (staleness discount)
+    - ``auto``                w_k = n_k * (1 + s_k)^-alpha (importance x freshness;
+                              n_k from ``n_samples``, uniform when omitted)
+
+    Weights are returned unnormalized (consumers divide by their own mass so
+    a weight composes with 0/1 buffer masks); all modes reduce to the uniform
+    weight 1.0 at staleness 0 with uniform ``n_samples``, which is what makes
+    a no-churn uniform-latency async run degenerate to the sync engine.
+    """
+    s = np.asarray(staleness, dtype=np.float64)
+    if (s < 0).any():
+        raise ValueError(f"negative staleness: {s}")
+    base = mode.split(":", 1)[0]
+    if base not in STALENESS_MODES:
+        raise ValueError(f"unknown staleness mode {mode!r} (want {STALENESS_MODES})")
+    if ":" in mode:
+        alpha = float(mode.split(":", 1)[1])
+    if base == "constant":
+        w = np.ones_like(s)
+    else:
+        w = (1.0 + s) ** (-alpha)
+        if base == "auto":
+            n = np.ones_like(s) if n_samples is None else np.asarray(n_samples, np.float64)
+            w = w * (n / n.mean())
+    return w.astype(np.float32)
 
 
 def fedavg_w_rf(source_params: list, target_params, participating: list[int]):

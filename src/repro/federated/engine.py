@@ -34,6 +34,14 @@ trajectories match — including with unequal per-client dataset sizes).  Under
 random drops the two paths consume client batch streams at different rates
 (the serial path skips message batches of dropped clients), so trajectories
 are statistically — not bitwise — equal.
+
+Besides the synchronous round, the engine compiles the asynchronous runtime's
+data plane (``_flush_fn``): a FedBuff-style buffered aggregation in which only
+the clients whose updates sit in the server buffer materialize local steps,
+each against the target broadcast of its own dispatch version, and every merge
+is staleness-weighted.  With a full fresh buffer and unit weights the flush
+reduces term-by-term to the sync round — the degeneracy
+``repro.fedsim``'s tests pin down.
 """
 from __future__ import annotations
 
@@ -93,6 +101,7 @@ class BatchedRoundEngine:
         self.channel = channel or {}
         self._round = jax.jit(self._round_fn)
         self._warmup = jax.jit(self._warmup_fn)
+        self._flush = jax.jit(self._flush_fn)
 
     # -- building blocks ----------------------------------------------------
 
@@ -110,13 +119,19 @@ class BatchedRoundEngine:
         client width); the CE/MMD math inside ``source_loss`` then averages
         over true samples only, so each step is identical to the serial
         plane's unpadded per-client step.
+
+        ``tgt_msg`` is either one (2N,) message shared by every client (the
+        sync round: the target broadcast of this round) or a (K, 2N) stack of
+        per-client messages (the async flush: each client trained against the
+        broadcast it was handed at *its* dispatch time, which may be several
+        model versions old).
         """
         cfg, omega, opt = self.cfg, self.omega, self.opt
 
-        def one_client(p, o, x, y, gate, sm):
+        def one_client(p, o, x, y, gate, sm, tm):
             (_, aux), grads = jax.value_and_grad(
                 lambda pp: source_loss(
-                    self._maybe_freeze(pp), omega, x, y, tgt_msg, cfg,
+                    self._maybe_freeze(pp), omega, x, y, tm, cfg,
                     mmd_gate=gate, sample_mask=sm,
                 ),
                 has_aux=True,
@@ -124,12 +139,14 @@ class BatchedRoundEngine:
             upd, o = opt.update(grads, o, p)
             return apply_updates(p, upd), o, aux
 
+        tm_ax = 0 if tgt_msg.ndim == 2 else None
+
         def step(carry, xy):
             ps, os = carry
             x, y = xy
             mask_ax = 0 if bmask is not None else None
-            ps, os, _ = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0, mask_ax))(
-                ps, os, x, y, mmd_mask, bmask
+            ps, os, _ = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0, mask_ax, tm_ax))(
+                ps, os, x, y, mmd_mask, bmask, tgt_msg
             )
             return (ps, os), None
 
@@ -279,6 +296,165 @@ class BatchedRoundEngine:
             masks["mmd"],
             masks["w"],
             masks["c"],
+            masks["do_clf"],
+            chan_key,
+            batch.get("bmask"),
+            batch.get("msg_mask"),
+        )
+
+    # -- async buffered flush (fedsim.AsyncScheduler's data plane) ----------
+
+    @staticmethod
+    def _select_clients(mask, new, old):
+        """Leafwise per-client where: row k of ``new`` iff mask[k] > 0."""
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
+            new,
+            old,
+        )
+
+    def _flush_fn(
+        self,
+        src_p,
+        src_o,
+        tgt_p,
+        tgt_o,
+        xs,  # (L, K, p, b) dispatch-time source batches (rows outside the buffer are dummies)
+        ys,  # (L, K, b)
+        x_msg,  # (K, p, mb) dispatch-time source message batches
+        xt_steps,  # (L, p, b) target training batches drawn at this flush
+        tgt_msgs,  # (K, 2N) the target broadcast each client received at ITS dispatch
+        buf_mask,  # (K,) 1.0 iff this client's update is consumed by this flush
+        weights,  # (K,) staleness weights of the buffered updates (1.0 at staleness 0)
+        do_clf,  # () bool: classifier-merge flush (every T_C-th flush)
+        chan_key,  # per-flush PRNG key for stochastic uplink channel distortion
+        bmask,  # (K, b) ragged training-batch validity | None
+        msg_mask,  # (K, mb) ragged message-batch validity | None
+    ):
+        """One FedBuff-style buffered aggregation, as a single compiled program.
+
+        The async semantics relative to ``_round_fn``: only the clients whose
+        updates sit in the buffer materialize local steps (the others are
+        mid-flight or offline — their rows are computed and discarded by the
+        ``buf_mask`` select); each buffered client trained against the target
+        broadcast of its *own* dispatch version (``tgt_msgs`` row), and every
+        merge — Sigma-ell moments into the target steps, W_RF, classifier —
+        is weighted by ``buf_mask * weights``, the staleness weighting of
+        ``federated.aggregation.staleness_weights``.  With a full buffer, all
+        rows at staleness 0 and unit weights, every expression below reduces
+        term-by-term to ``_round_fn``'s — that is the sync/async degeneracy
+        the fedsim tests pin at <= 1e-6.
+        """
+        cfg, omega, opt = self.cfg, self.omega, self.opt
+        k_clients = xs.shape[1]
+        chan_m = self.channel.get("moments")
+        chan_w = self.channel.get("w_rf")
+        chan_c = self.channel.get("classifier")
+        wsel = buf_mask * weights
+
+        # local source training at dispatch inputs; keep only buffered rows
+        gates = buf_mask if self.exchange_messages else jnp.zeros_like(buf_mask)
+        new_p, new_o = self._src_local_scan(src_p, src_o, xs, ys, gates, tgt_msgs, bmask)
+        src_p = self._select_clients(buf_mask, new_p, src_p)
+        src_o = self._select_clients(buf_mask, new_o, src_o)
+
+        # target trains on the buffered Sigma-ell moments, staleness-weighted
+        if self.exchange_messages:
+            msgs = jax.vmap(
+                lambda p, x, mk: client_message(p, omega, x, +1.0, mask=mk),
+                in_axes=(0, 0, 0 if msg_mask is not None else None),
+            )(src_p, x_msg, msg_mask)
+            if chan_m is not None:
+                keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
+                msgs = jax.vmap(chan_m)(msgs, keys)
+            any_msg = jnp.sum(buf_mask) > 0
+
+            def tgt_step(carry, x):
+                p, o = carry
+                (_, _), grads = jax.value_and_grad(
+                    lambda pp: target_loss(
+                        self._maybe_freeze(pp), omega, x, msgs, cfg, weights=wsel
+                    ),
+                    has_aux=True,
+                )(p)
+                upd, o = opt.update(grads, o, p)
+                return (apply_updates(p, upd), o), None
+
+            (new_tgt_p, new_tgt_o), _ = jax.lax.scan(tgt_step, (tgt_p, tgt_o), xt_steps)
+            tgt_p = tree_where(any_msg, new_tgt_p, tgt_p)
+            tgt_o = tree_where(any_msg, new_tgt_o, tgt_o)
+
+        # staleness-weighted W_RF merge over the buffer + the server copy
+        if self.aggregate_w_rf and not self.freeze_w_rf:
+            have_w = jnp.sum(buf_mask) > 0
+            w_up, w_tgt_up = src_p["w_rf"], tgt_p["w_rf"]
+            if chan_w is not None:
+                keys = jax.random.split(jax.random.fold_in(chan_key, 2), k_clients + 1)
+                w_up = jax.vmap(chan_w)(w_up, keys[:k_clients])
+                w_tgt_up = chan_w(w_tgt_up, keys[k_clients])
+            w_avg = (jnp.einsum("k,kij->ij", wsel, w_up) + w_tgt_up) / (
+                jnp.sum(wsel) + 1.0
+            )
+            src_p["w_rf"] = jnp.where(
+                (buf_mask > 0)[:, None, None] & have_w, w_avg[None], src_p["w_rf"]
+            )
+            tgt_p["w_rf"] = jnp.where(have_w, w_avg, tgt_p["w_rf"])
+
+        # staleness-weighted classifier merge on T_C-interval flushes
+        if self.aggregate_classifier:
+            have_c = do_clf & (jnp.sum(buf_mask) > 0)
+            denom = jnp.maximum(jnp.sum(wsel), 1e-9)
+            clf_up = src_p["classifier"]
+            if chan_c is not None:
+                kbase = jax.random.fold_in(chan_key, 3)
+                leaves, treedef = jax.tree_util.tree_flatten(clf_up)
+                clf_up = jax.tree_util.tree_unflatten(
+                    treedef,
+                    [
+                        jax.vmap(chan_c)(
+                            leaf, jax.random.split(jax.random.fold_in(kbase, i), k_clients)
+                        )
+                        for i, leaf in enumerate(leaves)
+                    ],
+                )
+            c_avg = jax.tree_util.tree_map(
+                lambda leaf: jnp.tensordot(wsel, leaf, axes=1) / denom,
+                clf_up,
+            )
+            assign = (buf_mask > 0) & have_c
+            src_p["classifier"] = jax.tree_util.tree_map(
+                lambda avg, old: jnp.where(
+                    assign.reshape((-1,) + (1,) * (old.ndim - 1)), avg[None], old
+                ),
+                c_avg,
+                src_p["classifier"],
+            )
+            tgt_p["classifier"] = tree_where(have_c, c_avg, tgt_p["classifier"])
+
+        return src_p, src_o, tgt_p, tgt_o
+
+    def flush(self, src_p, src_o, tgt_p, tgt_o, batch, masks, chan_key=None):
+        """One buffered aggregation (async plane).  ``batch`` carries the
+        dispatch-time draws (``xs``/``ys``/``x_msg``), the flush-time target
+        batches (``xt_steps``), the per-client dispatch broadcasts
+        (``tgt_msgs`` (K, 2N)), and the ragged masks; ``masks`` carries
+        ``buf``/``weights``/``do_clf``."""
+        if chan_key is None:
+            if self.channel:
+                raise ValueError("channel distortion is set: pass a per-flush chan_key")
+            chan_key = jax.random.PRNGKey(0)  # traced but unused: no channel
+        return self._flush(
+            src_p,
+            src_o,
+            tgt_p,
+            tgt_o,
+            batch["xs"],
+            batch["ys"],
+            batch["x_msg"],
+            batch["xt_steps"],
+            batch["tgt_msgs"],
+            masks["buf"],
+            masks["weights"],
             masks["do_clf"],
             chan_key,
             batch.get("bmask"),

@@ -43,6 +43,17 @@ Communication runs through ``repro.comm``:
   scenario (Bernoulli channels, latency/bandwidth links with straggler
   deadlines, replayable traces); every scenario emits the same ``RoundPlan``
   both planes already consume.
+- ``codec="auto:<budget>"`` resolves to the cheapest codec whose measured
+  accuracy gap (BENCH_comm.json curves) fits the budget before the transport
+  is built; ``trainer.resolved_codec`` records the pick.
+
+The ``repro.fedsim`` event-driven runtime drives this trainer on a virtual
+clock: ``run_round(t, plan)`` is the synchronous scheduler's hook (plan
+computed externally, e.g. intersected with a churn trace), while the
+asynchronous scheduler bypasses the round loop entirely — it draws per-client
+batches at dispatch time (``draw_client_dispatch`` / ``draw_target_steps`` /
+``target_message``) and executes buffered flushes through the batched
+engine, maintaining the per-client ``client_versions`` staleness tags.
 """
 from __future__ import annotations
 
@@ -53,7 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import netsim, transport as comm_transport, wire
+from repro.comm import autocodec, netsim, transport as comm_transport, wire
 from repro.comm.transport import CommLog  # noqa: F401  (seed-era import path)
 from repro.data.domains import Domain, batches
 from repro.federated import aggregation, network
@@ -161,9 +172,15 @@ class FedRFTCATrainer:
         self.cfg, self.proto = cfg, proto
         self.k = len(sources)
         self.omega = make_omega(cfg)
+        # codec="auto:<budget>" resolves against the measured BENCH_comm.json
+        # accuracy-vs-codec curves: cheapest codec whose accuracy gap fits
+        codec = proto.codec
+        if isinstance(codec, str) and codec.startswith("auto:"):
+            codec = autocodec.resolve(codec)
+        self.resolved_codec = codec
         self.transport = comm_transport.build_transport(
             proto.transport,
-            proto.codec,
+            codec,
             seed=proto.seed,
             codec_moments=proto.codec_moments,
             codec_w_rf=proto.codec_w_rf,
@@ -190,11 +207,19 @@ class FedRFTCATrainer:
         self._w_key_data = np.asarray(jax.random.key_data(w_rf_key(cfg, key)))
         self._w_init = shared["w_rf"]
         self._chan_base = jax.random.PRNGKey(proto.seed ^ 0x5EED)
+        self._tgt_msg_fn = None  # lazily jitted by target_message (async plane)
         src_params = [jax.tree_util.tree_map(jnp.copy, shared) for _ in range(self.k)]
         self.tgt_params = jax.tree_util.tree_map(jnp.copy, shared)
         self.opt = adam(proto.lr)
         self.tgt_opt = self.opt.init(self.tgt_params)
         self.rng = np.random.default_rng(proto.seed)
+        # per-client model-version tags: the server model version each client
+        # last synced from.  The sync plane bumps them in ``run_round``; the
+        # fedsim AsyncScheduler bumps them per buffered flush, and their lag
+        # behind ``model_version`` is exactly the staleness that weights the
+        # buffered merges.
+        self.model_version = 0
+        self.client_versions = np.zeros(self.k, dtype=np.int64)
         # Ragged client data: per-client batch sizes capped at each client's
         # own n_k.  The serial plane consumes them directly; the batched plane
         # pads every client to the max width and masks the padding (the seed
@@ -346,6 +371,46 @@ class FedRFTCATrainer:
             "msg_mask": self._msg_mask,
         }
 
+    # ---- async-plane plumbing (repro.fedsim.AsyncScheduler) ------------------
+    # The async runtime draws each client's batches at its *dispatch* time and
+    # the target's at each flush.  Per iterator the draw order is identical to
+    # the sync plane's per-round order, which is what lets a no-churn
+    # uniform-latency async run consume bit-identical batch streams.
+
+    def draw_client_dispatch(self, i: int):
+        """Client i's dispatch draws: (L, p, b_max) / (L, b_max) training
+        batches + (p, mb_max) message batch, cycle-padded like the sync plane."""
+        L, p = self.proto.local_steps, self.sources[0].x.shape[0]
+        xs = np.zeros((L, p, self._b_max), np.float32)
+        ys = np.zeros((L, self._b_max), np.int32)
+        for s in range(L):
+            x, y = next(self.src_iters[i])
+            xs[s], ys[s] = _cycle_pad(x, y, self._b_max)
+        x_msg, _ = _cycle_pad(next(self._msg_iters[i])[0], None, self._mb_max)
+        return xs, ys, x_msg
+
+    def draw_target_steps(self) -> np.ndarray:
+        """(L, p, b) target training batches for one flush."""
+        return np.stack([next(self.tgt_iter)[0] for _ in range(self.proto.local_steps)])
+
+    def target_message(self, chan_key=None) -> jnp.ndarray:
+        """The target's Sigma-ell broadcast at the current parameters — what
+        the server hands a client at dispatch.  Applies the wire codec's
+        moments distortion twin when one is configured (the downlink leg)."""
+        xt_msg = jnp.asarray(next(self._tgt_msg_iter)[0])
+        if self._tgt_msg_fn is None:
+            omega = self.omega
+            self._tgt_msg_fn = jax.jit(
+                lambda params, x: client_message(params, omega, x, -1.0)
+            )
+        msg = self._tgt_msg_fn(self.tgt_params, xt_msg)
+        chan = (self._engine.channel if self._engine is not None else {}).get("moments")
+        if chan is not None:
+            if chan_key is None:
+                raise ValueError("channel distortion is set: pass a chan_key")
+            msg = chan(msg, chan_key)
+        return msg
+
     def _mask_of(self, ids: list[int]) -> jnp.ndarray:
         m = np.zeros((self.k,), np.float32)
         m[list(ids)] = 1.0
@@ -420,6 +485,14 @@ class FedRFTCATrainer:
     # ---- one communication round (Alg. 5 body) -------------------------------
     def round(self, t: int) -> dict[str, Any]:
         plan = self.scenario.plan(self.rng, self.k, t)
+        return self.run_round(t, plan)
+
+    def run_round(self, t: int, plan: network.RoundPlan) -> dict[str, Any]:
+        """Execute one round under an externally supplied plan — the scheduler
+        hook: ``repro.fedsim.SyncScheduler`` computes the plan itself (scenario
+        intersected with the availability trace at the barrier's virtual time)
+        and drives the round through here, so with no churn it reproduces
+        ``train()`` exactly (same scenario rng stream, same round body)."""
         if self._engine is not None:
             self._round_batched(t, plan)
             self._account_comm(plan, t)
@@ -428,6 +501,9 @@ class FedRFTCATrainer:
             if not self.transport.applies_values:
                 self._account_comm(plan, t)  # wire serial accounts per transfer
         self.comm.rounds += 1
+        self.model_version += 1
+        if plan.w_clients:  # clients whose aggregated W_RF was assigned back
+            self.client_versions[list(plan.w_clients)] = self.model_version
         return {"plan": plan}
 
     def _round_batched(self, t: int, plan: network.RoundPlan) -> None:

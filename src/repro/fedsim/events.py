@@ -1,0 +1,50 @@
+"""Typed events driving the fedsim runtime.
+
+Four event kinds cover the whole asynchronous protocol:
+
+- :class:`ClientJoined` / :class:`ClientDeparted` — churn edges from an
+  :mod:`repro.fedsim.availability` trace.  A departure cancels the client's
+  in-flight work (its ``epoch`` counter bumps, orphaning any scheduled
+  arrival); a (re)join dispatches the client fresh from its *retained* local
+  parameters — a returning client carries a stale aligner by construction.
+- :class:`ClientUpdateArrived` — the client's uplink (Sigma-ell moments +
+  W_RF, classifier piggybacked on T_C flushes) lands at the server at the
+  virtual time ``comm.netsim`` computed from its exact wire bytes.  Carries
+  the server model version the client was dispatched from, so the consumer
+  can compute staleness = version_now - version_at_dispatch.
+- :class:`SyncBarrier` — the synchronous scheduler's per-round rendezvous.
+
+Events hold only host-side bookkeeping (ints/floats); array payloads stay in
+the scheduler's pending tables so the heap never compares jax values.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Event:
+    """Marker base class (events are ordered by the queue, never by value)."""
+
+
+@dataclass(frozen=True)
+class ClientJoined(Event):
+    client: int
+
+
+@dataclass(frozen=True)
+class ClientDeparted(Event):
+    client: int
+
+
+@dataclass(frozen=True)
+class ClientUpdateArrived(Event):
+    client: int
+    version: int  # server model version the client was dispatched from
+    epoch: int  # client availability epoch at dispatch (stale if it departed)
+    dispatched_at: float  # virtual dispatch time (for latency bookkeeping)
+
+
+@dataclass(frozen=True)
+class SyncBarrier(Event):
+    round: int

@@ -1,0 +1,415 @@
+"""Event-driven federated runtime: virtual-time schedulers over the trainer.
+
+The fixed round loop of ``FedRFTCATrainer.train`` advances in lockstep — the
+only "network" it ever sees is which uplinks a round plan drops.  This module
+replaces the loop with a discrete-event simulation (``fedsim.clock``) in
+which *time itself* comes from the communication subsystem: a client's update
+lands when ``comm.netsim`` says its exact wire bytes have crossed its link,
+clients churn on an ``fedsim.availability`` trace, and the server either
+waits for everyone (:class:`SyncScheduler`) or aggregates a buffer of
+whatever arrived (:class:`AsyncScheduler`).
+
+Two schedulers, one API (``run(n, eval_every) -> history``):
+
+- :class:`SyncScheduler` — barrier per round.  The plan comes from the
+  trainer's scenario intersected with the availability trace at the barrier's
+  virtual time (offline clients are dropped — the "naive drop-the-stragglers"
+  baseline), and the round executes through the ``run_round`` hook, so with
+  no churn the trajectory is exactly ``trainer.train()``'s.
+- :class:`AsyncScheduler` — FedBuff-style buffered aggregation.  Clients are
+  dispatched with the target's current Sigma-ell broadcast, train at their
+  own pace, and their uplinks land whenever the link model delivers them; the
+  server flushes the buffer every ``buffer_size`` arrivals, weighting each
+  update's moment / W_RF / classifier contribution by its staleness
+  (``federated.aggregation.staleness_weights``: constant | polynomial |
+  auto).  With uniform latencies, no churn and ``buffer_size = K`` every
+  flush is a full buffer at staleness 0 and the trajectory degenerates to
+  the sync engine's (pinned <= 1e-6 by tests and the bench smoke gate).
+
+Because arrival times follow from exact wire bytes, the *codec* choice
+changes arrival order and therefore staleness — the comm subsystem feeds
+back into the learning dynamics instead of only into byte accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.netsim import LinkScenario
+from repro.federated import aggregation
+from repro.federated.network import RoundPlan
+from repro.fedsim.availability import AvailabilityTrace
+from repro.fedsim.clock import EventQueue, VirtualClock
+from repro.fedsim.events import (
+    ClientDeparted,
+    ClientJoined,
+    ClientUpdateArrived,
+    SyncBarrier,
+)
+
+
+def _per_client(value, k: int, what: str) -> np.ndarray:
+    arr = np.full((k,), float(value)) if np.ndim(value) == 0 else np.asarray(value, float)
+    if arr.shape != (k,):
+        raise ValueError(f"{what} must be a scalar or length-{k} sequence")
+    if (arr < 0).any():
+        raise ValueError(f"{what} must be >= 0")
+    return arr
+
+
+class _SchedulerBase:
+    """Shared plumbing: virtual clock, per-client compute times, link wiring."""
+
+    def __init__(self, trainer, *, availability, links, compute_s, seed):
+        self.trainer = trainer
+        self.clock = VirtualClock()
+        self.queue = EventQueue()
+        self.availability = availability
+        self.links = links
+        self.compute_s = _per_client(compute_s, trainer.k, "compute_s")
+        # wire/compute randomness is a separate stream from the trainer's plan
+        # rng — the schedulers must not perturb the scenario draws that make a
+        # no-churn SyncScheduler reproduce trainer.train() exactly
+        self.rng = np.random.default_rng((trainer.proto.seed, seed, 0xF5ED))
+        self.history: list[dict[str, Any]] = []
+        if availability is not None and availability.n_clients < trainer.k:
+            raise ValueError(
+                f"availability trace covers {availability.n_clients} clients, "
+                f"trainer has {trainer.k}"
+            )
+        self.payload_bytes: dict[str, int] = {}
+        if links is not None:
+            if len(links.links) < trainer.k:
+                raise ValueError(f"{len(links.links)} links for {trainer.k} clients")
+            # the loop-closing default: arrival times follow the exact wire
+            # bytes of THIS trainer's configured codecs.  Kept scheduler-local
+            # (the caller's scenario object is never mutated, so one
+            # LinkScenario can serve trainers with different codecs).
+            self.payload_bytes = dict(links.payload_bytes) or trainer.transport.payload_sizes(
+                trainer._specs
+            )
+
+    def _uplink_kinds(self) -> tuple[str, ...]:
+        proto, kinds = self.trainer.proto, []
+        if proto.exchange_messages:
+            kinds.append("moments")
+        if proto.aggregate_w_rf and not self.trainer._frozen_w:
+            kinds.append("w_rf")
+        return tuple(kinds)
+
+    def _uplink_nbytes(self) -> int:
+        return sum(self.payload_bytes.get(kind, 0) for kind in self._uplink_kinds())
+
+
+@dataclass
+class AsyncConfig:
+    """Knobs of the buffered-asynchronous server."""
+
+    buffer_size: int = 2
+    staleness: str = "constant"  # constant | polynomial[:alpha] | auto
+    compute_s: Any = 1.0  # per-client local-training seconds (scalar or (K,))
+    seed: int = 0
+
+
+class SyncScheduler(_SchedulerBase):
+    """Barrier-per-round scheduler: the existing protocol on a virtual clock.
+
+    Each round: draw the plan from the trainer's scenario (same rng stream as
+    ``trainer.train()``), drop clients the availability trace says are offline
+    at the barrier — stragglers and churned clients are simply *lost* for the
+    round, the paper's Table III worldview — execute via the ``run_round``
+    hook, then advance the clock to the barrier: the deadline if a link
+    scenario enforces one, else the slowest participant's completion, else
+    ``round_s``.
+    """
+
+    def __init__(
+        self,
+        trainer,
+        *,
+        availability: AvailabilityTrace | None = None,
+        links: LinkScenario | None = None,
+        round_s: float = 1.0,
+        compute_s: Any = 1.0,
+        seed: int = 0,
+    ):
+        super().__init__(
+            trainer, availability=availability, links=links, compute_s=compute_s, seed=seed
+        )
+        self.round_s = float(round_s)
+
+    def _round_duration(self, plan: RoundPlan) -> float:
+        if self.links is None:
+            return self.round_s
+        if np.isfinite(self.links.deadline_s):
+            return float(self.links.deadline_s)  # the barrier waits out the deadline
+        nbytes = self._uplink_nbytes()
+        times = [
+            self.compute_s[i] + self.links.uplink_time(self.rng, i, nbytes)
+            for i in plan.msg_clients
+        ]
+        return max(times, default=self.round_s)
+
+    def run(self, n_rounds: int, eval_every: int = 0) -> list[dict[str, Any]]:
+        tr = self.trainer
+        for t in range(1, n_rounds + 1):
+            plan = tr.scenario.plan(tr.rng, tr.k, t)
+            if self.availability is not None:
+                online = set(self.availability.available_at(self.clock.now))
+                plan = RoundPlan(
+                    [i for i in plan.msg_clients if i in online],
+                    [i for i in plan.w_clients if i in online],
+                    [i for i in plan.c_clients if i in online],
+                )
+            tr.run_round(t, plan)
+            self.queue.push(self.clock.now + self._round_duration(plan), SyncBarrier(t))
+            barrier_t, _ = self.queue.pop()
+            self.clock.advance_to(barrier_t)
+            row = {
+                "t": self.clock.now,
+                "round": t,
+                "participants": len(plan.msg_clients),
+            }
+            if eval_every and t % eval_every == 0:
+                row["acc"] = tr.evaluate()
+            self.history.append(row)
+        return self.history
+
+
+class AsyncScheduler(_SchedulerBase):
+    """FedBuff-style buffered-asynchronous scheduler (see module docstring).
+
+    Lifecycle per client: *dispatch* (draw batches, hand over the target's
+    current broadcast, tag with the server model version) -> local compute
+    (``compute_s`` virtual seconds) -> uplink (``links.uplink_time`` over the
+    exact wire bytes, shared-backhaul contention included) ->
+    :class:`ClientUpdateArrived`.  Every ``buffer_size`` arrivals the server
+    flushes: one compiled ``engine.flush`` call materializes the buffered
+    clients' local steps, trains the target on their staleness-weighted
+    moments, and merges W_RF (+ classifier every ``t_c``-th flush), then the
+    consumed clients are re-dispatched.  Churn edges from the availability
+    trace cancel in-flight work (departure bumps the client's epoch, orphaning
+    its arrival event) and re-dispatch on rejoin from the client's *retained*
+    — now stale — local parameters.
+    """
+
+    def __init__(
+        self,
+        trainer,
+        cfg: AsyncConfig | None = None,
+        *,
+        availability: AvailabilityTrace | None = None,
+        links: LinkScenario | None = None,
+    ):
+        cfg = cfg or AsyncConfig()
+        if trainer._engine is None:
+            raise ValueError("AsyncScheduler needs the batched engine (engine='batched')")
+        if not 1 <= cfg.buffer_size <= max(trainer.k, 1):
+            raise ValueError(f"buffer_size must be in [1, K={trainer.k}]")
+        aggregation.staleness_weights(np.zeros(1), cfg.staleness)  # validate mode early
+        super().__init__(
+            trainer,
+            availability=availability,
+            links=links,
+            compute_s=cfg.compute_s,
+            seed=cfg.seed,
+        )
+        self.cfg = cfg
+        self.version = 0  # server model version (== completed flushes)
+        self.flushes = 0
+        self.dispatches = 0
+        self.live: set[int] = set()
+        self.epoch = np.zeros(trainer.k, dtype=np.int64)
+        self.pending: dict[int, dict] = {}  # client -> dispatch record (in flight)
+        self.buffer: list[dict] = []  # arrived updates awaiting a flush
+        self._inflight: list[tuple[float, int]] = []  # (finish_time, bytes) uplinks
+        self._n_k = np.array([d.x.shape[1] for d in trainer.sources], dtype=np.int64)
+
+    # -- client lifecycle ---------------------------------------------------
+
+    def _dispatch(self, clients, t: float) -> None:
+        """Start one local-training task per client, sharing a single target
+        broadcast (one downlink per dispatch instant, like the sync round)."""
+        tr = self.trainer
+        clients = sorted(c for c in clients if c in self.live)
+        if not clients:
+            return
+        self.dispatches += 1
+        chan_key = None
+        if tr._engine.channel:
+            chan_key = jax.random.fold_in(
+                jax.random.fold_in(tr._chan_base, 0x00A5), self.dispatches
+            )
+        tgt_msg = np.asarray(tr.target_message(chan_key=chan_key))
+        if tr.proto.exchange_messages:
+            tr.transport.account_spec("moments", tr._specs["moments"], count=1)
+        for i in clients:
+            xs, ys, x_msg = tr.draw_client_dispatch(i)
+            self.pending[i] = {
+                "client": i,
+                "version": self.version,
+                "xs": xs,
+                "ys": ys,
+                "x_msg": x_msg,
+                "tgt_msg": tgt_msg,
+            }
+            arrival = t + self._completion_delay(i, t)
+            self.queue.push(
+                arrival, ClientUpdateArrived(i, self.version, int(self.epoch[i]), t)
+            )
+
+    def _completion_delay(self, i: int, t: float) -> float:
+        compute = float(self.compute_s[i])
+        if self.links is None:
+            return compute
+        start = t + compute
+        self._inflight = [(fin, b) for fin, b in self._inflight if fin > start]
+        inflight_bytes = sum(b for _, b in self._inflight)
+        nbytes = self._uplink_nbytes()
+        wire = self.links.uplink_time(self.rng, i, nbytes, inflight_bytes=inflight_bytes)
+        self._inflight.append((start + wire, nbytes))
+        return compute + wire
+
+    def _on_arrival(self, t: float, ev: ClientUpdateArrived) -> bool:
+        if ev.epoch != self.epoch[ev.client] or ev.client not in self.live:
+            return False  # churned away mid-flight: the update is lost
+        entry = self.pending.pop(ev.client, None)
+        if entry is None or entry["version"] != ev.version:
+            return False  # superseded dispatch (defensive; churn covers this)
+        if self.trainer.proto.exchange_messages:
+            self.trainer.transport.account_spec(
+                "moments", self.trainer._specs["moments"], count=1
+            )
+        # a rejoin can race an unconsumed buffered update: newest wins
+        self.buffer = [e for e in self.buffer if e["client"] != ev.client]
+        self.buffer.append(entry)
+        return len(self.buffer) >= self.cfg.buffer_size
+
+    # -- the buffered flush -------------------------------------------------
+
+    def _flush(self, t: float) -> None:
+        tr = self.trainer
+        entries, self.buffer = self.buffer, []
+        members = [e["client"] for e in entries]
+        staleness = np.array([self.version - e["version"] for e in entries])
+        w_members = aggregation.staleness_weights(
+            staleness, self.cfg.staleness, n_samples=self._n_k[members]
+        )
+        k = tr.k
+        buf = np.zeros((k,), np.float32)
+        wts = np.zeros((k,), np.float32)
+        buf[members] = 1.0
+        wts[members] = w_members
+        # assemble the stacked batch: buffered rows carry their dispatch-time
+        # draws; the rest are finite dummies (computed then discarded by the
+        # buffer mask — zeros would hit the unit-norm NaN gradient at 0)
+        filler = entries[0]
+        L, p = tr.proto.local_steps, tr.sources[0].x.shape[0]
+        xs = np.empty((L, k, p, tr._b_max), np.float32)
+        ys = np.empty((L, k, tr._b_max), np.int32)
+        x_msg = np.empty((k, p, tr._mb_max), np.float32)
+        tgt_msgs = np.empty((k, 2 * tr.cfg.n_rff), np.float32)
+        by_client = {e["client"]: e for e in entries}
+        for i in range(k):
+            e = by_client.get(i, filler)
+            xs[:, i], ys[:, i], x_msg[i] = e["xs"], e["ys"], e["x_msg"]
+            tgt_msgs[i] = e["tgt_msg"]
+        batch = {
+            "xs": jnp.asarray(xs),
+            "ys": jnp.asarray(ys),
+            "x_msg": jnp.asarray(x_msg),
+            "xt_steps": jnp.asarray(tr.draw_target_steps()),
+            "tgt_msgs": jnp.asarray(tgt_msgs),
+            "bmask": tr._bmask,
+            "msg_mask": tr._msg_mask,
+        }
+        f = self.flushes + 1
+        masks = {
+            "buf": jnp.asarray(buf),
+            "weights": jnp.asarray(wts),
+            "do_clf": jnp.asarray(f % tr.proto.t_c == 0),
+        }
+        (tr._src_stack, tr._src_opt_stack, tr.tgt_params, tr.tgt_opt) = tr._engine.flush(
+            tr._src_stack,
+            tr._src_opt_stack,
+            tr.tgt_params,
+            tr.tgt_opt,
+            batch,
+            masks,
+            chan_key=jax.random.fold_in(tr._chan_base, f),
+        )
+        # host-side accounting, same message counts as the sync round body
+        if tr.proto.aggregate_w_rf and members:
+            tr.transport.account_spec("w_rf", tr._specs["w_rf"], count=len(members) + 1)
+        if tr.proto.aggregate_classifier and f % tr.proto.t_c == 0 and members:
+            tr.transport.account_spec(
+                "classifier", tr._specs["classifier"], count=len(members)
+            )
+        tr.comm.rounds += 1
+        self.flushes = f
+        self.version += 1
+        tr.model_version = self.version
+        tr.client_versions[members] = self.version
+        self.history.append(
+            {
+                "t": t,
+                "flush": f,
+                "version": self.version,
+                "members": sorted(members),
+                "staleness": staleness.tolist(),
+                "weights": w_members.tolist(),
+            }
+        )
+
+    # -- event loop ---------------------------------------------------------
+
+    def _seed_events(self) -> None:
+        tr = self.trainer
+        if self.availability is None:
+            for i in range(tr.k):
+                self.queue.push(0.0, ClientJoined(i))
+            return
+        for i in range(tr.k):
+            for time, is_join in self.availability.edges(i):
+                self.queue.push(time, ClientJoined(i) if is_join else ClientDeparted(i))
+
+    def run(self, n_flushes: int, eval_every: int = 0) -> list[dict[str, Any]]:
+        """Run until ``n_flushes`` buffered aggregations completed (or the
+        event queue drains — e.g. every client churned away for good)."""
+        tr = self.trainer
+        if tr.k == 0:
+            raise ValueError("async runtime needs at least one source client")
+        self._seed_events()
+        while self.queue and self.flushes < n_flushes:
+            # same-instant events pop in push order; joins are grouped so
+            # simultaneous (re)joins share one dispatch broadcast
+            t = self.queue.peek_time()
+            self.clock.advance_to(t)
+            batch_events = []
+            while self.queue and self.queue.peek_time() == t:
+                batch_events.append(self.queue.pop()[1])
+            joined: list[int] = []
+            for ev in batch_events:
+                if isinstance(ev, ClientDeparted):
+                    self.live.discard(ev.client)
+                    self.epoch[ev.client] += 1
+                    self.pending.pop(ev.client, None)
+                elif isinstance(ev, ClientJoined):
+                    self.live.add(ev.client)
+                    self.epoch[ev.client] += 1
+                    joined.append(ev.client)
+            if joined:
+                self._dispatch(joined, t)
+            for ev in batch_events:
+                if isinstance(ev, ClientUpdateArrived) and self._on_arrival(t, ev):
+                    self._flush(t)
+                    if eval_every and self.flushes % eval_every == 0:
+                        self.history[-1]["acc"] = tr.evaluate()
+                    if self.flushes >= n_flushes:
+                        break
+                    self._dispatch(self.history[-1]["members"], t)
+        return self.history

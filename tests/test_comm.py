@@ -334,3 +334,117 @@ def test_unknown_transport_and_codec_raise():
         build_transport("wire", "mp3")
     with pytest.raises(ValueError):
         build_transport("wire", "float32", codec_moments="seed_replay")
+
+
+# ---- shared-backhaul queueing ----------------------------------------------
+
+
+def test_backhaul_default_is_bitwise_uncontended():
+    """backhaul=inf must keep per-payload delivery math bit-for-bit."""
+    link = LinkModel(latency_s=0.25, bandwidth_bps=1000.0)
+    dt = link.delivery_time(np.random.default_rng(0), 500)
+    assert dt == 0.25 + 500 / 1000.0
+    # scenario plans: same rng stream, same sets with and without the field
+    links = [LinkModel(bandwidth_bps=1000.0, jitter_s=0.1, drop=0.2)] * 3
+    pb = {"moments": 400, "w_rf": 4000, "classifier": 400}
+    a = LinkScenario(links, deadline_s=0.5, payload_bytes=pb)
+    b = LinkScenario(links, deadline_s=0.5, payload_bytes=pb, backhaul_bps=float("inf"))
+    for t in range(1, 6):
+        pa = a.plan(np.random.default_rng(t), 3, t)
+        pb_ = b.plan(np.random.default_rng(t), 3, t)
+        assert (pa.msg_clients, pa.w_clients, pa.c_clients) == (
+            pb_.msg_clients, pb_.w_clients, pb_.c_clients,
+        )
+
+
+def test_backhaul_contention_drops_concurrent_clients():
+    """Payloads that fit each last-mile link miss the deadline once K clients
+    share a backhaul: the wire term is the *sum* of in-flight bytes."""
+    links = [LinkModel(bandwidth_bps=1e6)] * 4
+    pb = {"moments": 400, "w_rf": 400, "classifier": 400}
+    fast = LinkScenario(links, deadline_s=0.5, payload_bytes=pb)
+    assert fast.plan(np.random.default_rng(0), 4, 1).msg_clients == [0, 1, 2, 3]
+    # 4 * 400 B on a 2 kB/s backhaul = 0.8 s > the 0.5 s deadline
+    jammed = LinkScenario(links, deadline_s=0.5, payload_bytes=pb, backhaul_bps=2000.0)
+    p = jammed.plan(np.random.default_rng(0), 4, 1)
+    assert p.msg_clients == [] and p.w_clients == [] and p.c_clients == []
+
+
+def test_uplink_time_retries_and_contention():
+    sc = LinkScenario(
+        [LinkModel(latency_s=0.1, bandwidth_bps=1000.0)],
+        backhaul_bps=1000.0, retry_s=2.0,
+    )
+    # no loss, no contention: latency + bytes/bw exactly
+    assert sc.uplink_time(np.random.default_rng(0), 0, 500) == 0.1 + 0.5
+    # contention: (500 + 1500) / 1000 beats the last-mile 0.5 s
+    assert sc.uplink_time(
+        np.random.default_rng(0), 0, 500, inflight_bytes=1500
+    ) == 0.1 + 2.0
+    # losses retry (finite, monotonically later), never inf
+    lossy = LinkScenario([LinkModel(latency_s=0.1, drop=0.7)], retry_s=2.0)
+    times = [lossy.uplink_time(np.random.default_rng(s), 0, 100) for s in range(30)]
+    assert all(np.isfinite(times)) and max(times) > 2.0
+    with pytest.raises(ValueError, match="drop=1.0"):
+        LinkScenario([LinkModel(drop=1.0)]).uplink_time(np.random.default_rng(0), 0, 1)
+    assert sc.total_uplink_bytes(("moments", "w_rf")) == 0  # no payload table yet
+
+
+# ---- auto-codec picker ------------------------------------------------------
+
+FAKE_RECORD = {
+    "identity": {"acc": 0.80},
+    "accuracy_vs_codec": {
+        "float32": {"acc": 0.80, "bytes": {"moments": 100, "w_rf": 1000, "classifier": 10}},
+        "bfloat16": {"acc": 0.795, "bytes": {"moments": 50, "w_rf": 500, "classifier": 5}},
+        "qint4": {"acc": 0.70, "bytes": {"moments": 13, "w_rf": 125, "classifier": 2}},
+        "seed_replay": {"acc": 0.79, "bytes": {"moments": 100, "w_rf": 43, "classifier": 10}},
+    },
+}
+
+
+def test_pick_codec_cheapest_within_budget():
+    from repro.comm import autocodec
+
+    # generous budget: the qint4 run is cheapest and within 10 points
+    assert autocodec.pick_codec(0.12, record=FAKE_RECORD) == "qint4"
+    # 2-point budget: qint4's 10-point gap disqualifies it; seed_replay wins
+    assert autocodec.pick_codec(0.02, record=FAKE_RECORD) == "seed_replay"
+    # zero budget: only the gap-free float32 run qualifies
+    assert autocodec.pick_codec(0.0, record=FAKE_RECORD) == "float32"
+    with pytest.raises(ValueError, match="budget must be >= 0"):
+        autocodec.pick_codec(-0.1, record=FAKE_RECORD)
+    with pytest.raises(ValueError, match="bad auto-codec spec"):
+        autocodec.resolve("auto:cheap", record=FAKE_RECORD)
+    assert autocodec.resolve("qint8", record=FAKE_RECORD) == "qint8"  # passthrough
+
+
+def test_pick_codec_no_fit_raises_and_missing_record(tmp_path):
+    from repro.comm import autocodec
+
+    rec = {
+        "identity": {"acc": 0.9},
+        "accuracy_vs_codec": {"qint4": {"acc": 0.5, "bytes": {"moments": 1}}},
+    }
+    with pytest.raises(ValueError, match="no measured codec"):
+        autocodec.pick_codec(0.01, record=rec)
+    with pytest.raises(FileNotFoundError, match="benchmarks.run"):
+        autocodec.load_record(tmp_path / "nope.json")
+
+
+def test_protocol_resolves_auto_codec(tiny_setup, tmp_path, monkeypatch):
+    """ProtocolConfig(codec='auto:<budget>') trains with the concrete codec
+    the measured curves pick."""
+    import json
+
+    from repro.comm import autocodec
+
+    path = tmp_path / "BENCH_comm.json"
+    path.write_text(json.dumps(FAKE_RECORD))
+    monkeypatch.setattr(autocodec, "DEFAULT_RECORD_PATH", path)
+    s, t, cfg = tiny_setup
+    tr = _train(s, t, cfg, transport="wire", codec="auto:0.02")
+    assert tr.resolved_codec == "seed_replay"
+    assert tr._frozen_w  # the pick really flowed into the transport
+    tr2 = _train(s, t, cfg, codec="auto:0.12")
+    assert tr2.resolved_codec == "qint4"

@@ -1,0 +1,335 @@
+"""Event-driven fedsim runtime: clock/queue determinism, availability-trace
+replay, sync/async degeneracy against the batched engine, churn + staleness."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.comm.netsim import LinkModel, LinkScenario, TraceScenario
+from repro.data import make_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig, aggregation
+from repro.federated.engine import unstack_tree
+from repro.federated.network import RoundPlan
+from repro.fedsim import (
+    AsyncConfig,
+    AsyncScheduler,
+    ClientDeparted,
+    ClientJoined,
+    EventQueue,
+    SyncScheduler,
+    VirtualClock,
+    always_on_trace,
+    duty_cycle_trace,
+    load_trace,
+    markov_trace,
+    save_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    return doms[:3], doms[3], cfg
+
+
+def _leaf_err(a, b):
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _full_trace(k, rounds):
+    ids = list(range(k))
+    return TraceScenario([RoundPlan(ids, ids, ids)] * rounds, cycle=True)
+
+
+# ---- clock + queue ---------------------------------------------------------
+
+
+def test_event_queue_fifo_at_equal_times():
+    q = EventQueue()
+    q.push(2.0, "late")
+    q.push(1.0, "a")
+    q.push(1.0, "b")
+    q.push(1.0, "c")
+    assert [q.pop() for _ in range(4)] == [(1.0, "a"), (1.0, "b"), (1.0, "c"), (2.0, "late")]
+    with pytest.raises(ValueError, match="NaN"):
+        q.push(float("nan"), "bad")
+
+
+def test_virtual_clock_monotone():
+    c = VirtualClock()
+    c.advance_to(3.5)
+    with pytest.raises(ValueError, match="backwards"):
+        c.advance_to(3.0)
+    assert c.now == 3.5
+
+
+# ---- availability traces ---------------------------------------------------
+
+
+def test_availability_semantics():
+    tr = duty_cycle_trace(2, 10.0, period=4.0, on_fraction=0.5, stagger=False)
+    assert tr.available(0, 0.0) and tr.available(0, 1.9)
+    assert not tr.available(0, 2.5) and tr.available(0, 4.5)
+    on = always_on_trace(3, 5.0)
+    assert on.available_at(4.999) == [0, 1, 2]
+    assert on.edges(0) == [(0.0, True)]  # no depart edge at the horizon
+
+
+def test_markov_trace_churn_fraction_scales():
+    calm = markov_trace(8, 2000.0, mean_on=30.0, mean_off=3.0, seed=0)
+    churny = markov_trace(8, 2000.0, mean_on=5.0, mean_off=20.0, seed=0)
+    up_calm = np.mean([calm.uptime(i) for i in range(8)]) / 2000.0
+    up_churny = np.mean([churny.uptime(i) for i in range(8)]) / 2000.0
+    assert up_calm > 0.8 > 0.5 > up_churny
+
+
+def test_trace_json_roundtrip_bit_identical(tmp_path):
+    tr = markov_trace(4, 321.5, mean_on=7.3, mean_off=2.1, seed=42)
+    path = tmp_path / "churn.json"
+    save_trace(tr, path)
+    back = load_trace(path)
+    assert back.horizon == tr.horizon
+    assert back.intervals == tr.intervals  # exact float equality, not approx
+    assert back.meta == tr.meta
+    for i in range(4):
+        assert back.edges(i) == tr.edges(i)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="bad interval"):
+        always_on_trace(1, 5.0).__class__(5.0, [[(3.0, 2.0)]])
+    with pytest.raises(ValueError, match="overlapping"):
+        always_on_trace(1, 5.0).__class__(5.0, [[(0.0, 3.0), (2.0, 4.0)]])
+
+
+def test_touching_intervals_coalesce_no_phantom_churn():
+    """A client online across an interval boundary must not emit a
+    depart/join edge pair there (that would cancel its in-flight work)."""
+    tr = duty_cycle_trace(2, 30.0, period=10.0, on_fraction=1.0)
+    assert tr.intervals[0] == [(0.0, 30.0)]
+    assert tr.edges(0) == [(0.0, True)]
+    kls = always_on_trace(1, 20.0).__class__
+    t2 = kls(20.0, [[(0.0, 5.0), (5.0, 8.0), (9.0, 20.0)]])
+    assert t2.intervals[0] == [(0.0, 8.0), (9.0, 20.0)]
+    assert t2.edges(0) == [(0.0, True), (8.0, False), (9.0, True)]
+
+
+# ---- staleness weights -----------------------------------------------------
+
+
+def test_staleness_weights_modes():
+    s = np.array([0, 1, 3])
+    assert np.allclose(aggregation.staleness_weights(s, "constant"), 1.0)
+    poly = aggregation.staleness_weights(s, "polynomial")
+    assert np.allclose(poly, (1.0 + s) ** -0.5)
+    assert poly[0] == 1.0  # staleness 0 is exactly unit weight (degeneracy)
+    steep = aggregation.staleness_weights(s, "polynomial:2.0")
+    assert np.allclose(steep, (1.0 + s) ** -2.0)
+    auto = aggregation.staleness_weights(s, "auto", n_samples=[100, 200, 300])
+    assert np.allclose(auto, (1.0 + s) ** -0.5 * np.array([100, 200, 300]) / 200.0)
+    with pytest.raises(ValueError, match="unknown staleness"):
+        aggregation.staleness_weights(s, "exponential")
+    with pytest.raises(ValueError, match="negative"):
+        aggregation.staleness_weights([-1], "constant")
+
+
+# ---- sync scheduler --------------------------------------------------------
+
+
+def test_sync_scheduler_no_churn_matches_train(small_setup):
+    sources, target, cfg = small_setup
+    kw = dict(
+        n_rounds=5, t_c=2, warmup_rounds=1, batch_size=32, seed=0,
+        scenario=_full_trace(3, 5),
+    )
+    tr_a = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    tr_a.train()
+    tr_b = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    hist = SyncScheduler(tr_b).run(5)
+    assert _leaf_err(tr_a.tgt_params, tr_b.tgt_params) == 0.0
+    assert _leaf_err(tr_a._src_stack, tr_b._src_stack) == 0.0
+    assert tr_a.comm.total == tr_b.comm.total
+    assert [h["t"] for h in hist] == [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert tr_b.model_version == 5 and (tr_b.client_versions == 5).all()
+
+
+def test_sync_scheduler_drops_offline_clients(small_setup):
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=4, warmup_rounds=1, batch_size=32, seed=0, scenario=_full_trace(3, 4))
+    tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    # client i online only during [i, i+1) of each 3s period: exactly one
+    # client is online at each integer barrier time
+    avail = duty_cycle_trace(3, 100.0, period=3.0, on_fraction=1 / 3)
+    hist = SyncScheduler(tr, availability=avail).run(4)
+    assert [h["participants"] for h in hist] == [1, 1, 1, 1]
+    for leaf in jax.tree_util.tree_leaves(tr.tgt_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ---- async scheduler: degeneracy ------------------------------------------
+
+
+def test_async_degenerate_matches_batched_engine(small_setup):
+    """The acceptance gate: uniform latencies, no churn, buffer_size=K must
+    reproduce the batched sync engine's per-round parameters to <= 1e-6."""
+    sources, target, cfg = small_setup
+    k, rounds = 3, 6
+    kw = dict(
+        n_rounds=rounds, t_c=2, local_steps=2, warmup_rounds=2, batch_size=32,
+        seed=0, scenario=_full_trace(k, rounds),
+    )
+    tr_sync = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    tr_sync.train()
+    tr_async = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    links = LinkScenario(links=[LinkModel(latency_s=0.25) for _ in range(k)])
+    sched = AsyncScheduler(
+        tr_async, AsyncConfig(buffer_size=k, staleness="polynomial"), links=links
+    )
+    hist = sched.run(rounds)
+    assert _leaf_err(tr_sync.tgt_params, tr_async.tgt_params) <= 1e-6
+    for i in range(k):
+        assert (
+            _leaf_err(
+                unstack_tree(tr_sync._src_stack, i), unstack_tree(tr_async._src_stack, i)
+            )
+            <= 1e-6
+        )
+    # every flush consumed a full fresh buffer, and the comm logs agree
+    assert all(h["staleness"] == [0] * k for h in hist)
+    assert all(h["weights"] == [1.0] * k for h in hist)
+    assert (tr_sync.comm.data_messages, tr_sync.comm.w_rf, tr_sync.comm.classifier) == (
+        tr_async.comm.data_messages, tr_async.comm.w_rf, tr_async.comm.classifier,
+    )
+    assert tr_sync.comm.bytes_by_kind == tr_async.comm.bytes_by_kind
+    assert tr_async.model_version == rounds and (tr_async.client_versions == rounds).all()
+
+
+def test_async_degenerate_matches_ragged_engine(small_setup):
+    """Degeneracy must survive ragged per-client batch masks."""
+    sources, target, cfg = small_setup
+    from repro.data.domains import Domain
+
+    ragged = [sources[0], Domain("s1", sources[1].x[:, :70], sources[1].y[:70]),
+              Domain("s2", sources[2].x[:, :20], sources[2].y[:20])]
+    kw = dict(
+        n_rounds=4, t_c=2, warmup_rounds=1, batch_size=32, message_batch_size=64,
+        seed=0, scenario=_full_trace(3, 4),
+    )
+    tr_sync = FedRFTCATrainer(ragged, target, cfg, ProtocolConfig(**kw))
+    tr_sync.train()
+    tr_async = FedRFTCATrainer(ragged, target, cfg, ProtocolConfig(**kw))
+    AsyncScheduler(tr_async, AsyncConfig(buffer_size=3)).run(4)
+    assert _leaf_err(tr_sync.tgt_params, tr_async.tgt_params) <= 1e-6
+    assert _leaf_err(tr_sync._src_stack, tr_async._src_stack) <= 1e-6
+
+
+# ---- async scheduler: genuinely asynchronous behavior ----------------------
+
+
+def test_async_staleness_appears_with_heterogeneous_latency(small_setup):
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=0, t_c=3, warmup_rounds=1, batch_size=32, seed=0)
+    tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    # client 2 is 5x slower: buffer-of-2 flushes consume its update late
+    links = LinkScenario(links=[LinkModel(latency_s=1.0), LinkModel(latency_s=1.0),
+                                LinkModel(latency_s=5.0)])
+    sched = AsyncScheduler(tr, AsyncConfig(buffer_size=2, staleness="polynomial"), links=links)
+    hist = sched.run(8)
+    stale = [s for h in hist for s in h["staleness"]]
+    assert max(stale) >= 1  # the slow client's updates really are stale
+    slow_flushes = [h for h in hist if 2 in h["members"]]
+    assert slow_flushes, "slow client's update must eventually be consumed"
+    for h in slow_flushes[1:]:
+        idx = h["members"].index(2)
+        if h["staleness"][idx] > 0:
+            assert h["weights"][idx] < 1.0  # polynomial discount really applied
+    for leaf in jax.tree_util.tree_leaves(tr.tgt_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_async_churn_cancels_inflight_and_resumes(small_setup):
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=0, t_c=4, warmup_rounds=1, batch_size=32, seed=0)
+    tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    avail = markov_trace(3, horizon=4000.0, mean_on=12.0, mean_off=6.0, seed=5)
+    links = LinkScenario(
+        links=[LinkModel(latency_s=0.5, jitter_s=0.2, drop=0.2) for _ in range(3)],
+        backhaul_bps=1e4,
+    )
+    sched = AsyncScheduler(
+        tr, AsyncConfig(buffer_size=2, staleness="auto"), availability=avail, links=links
+    )
+    hist = sched.run(12, eval_every=6)
+    assert sched.flushes == 12
+    assert sched.clock.now > 0 and math.isfinite(sched.clock.now)
+    assert any("acc" in h for h in hist)
+    for leaf in jax.tree_util.tree_leaves(tr.tgt_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # the scheduler wires itself with the exact wire byte sizes of THIS
+    # trainer's codecs without mutating the caller's scenario object
+    assert sched.payload_bytes["moments"] == 2 * cfg.n_rff * 4 + 29
+    assert links.payload_bytes == {}
+
+
+def test_async_replay_from_saved_trace_is_identical(small_setup, tmp_path):
+    """An availability trace loaded back from JSON must reproduce the run
+    bit-for-bit: same flush schedule, same staleness, same parameters."""
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=0, t_c=3, warmup_rounds=1, batch_size=32, seed=0)
+    avail = markov_trace(3, horizon=3000.0, mean_on=10.0, mean_off=4.0, seed=11)
+    path = tmp_path / "trace.json"
+    save_trace(avail, path)
+
+    def run(trace):
+        tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+        links = LinkScenario(links=[LinkModel(latency_s=0.3 * (i + 1)) for i in range(3)])
+        sched = AsyncScheduler(
+            tr, AsyncConfig(buffer_size=2, staleness="polynomial"),
+            availability=trace, links=links,
+        )
+        hist = sched.run(8)
+        return tr, hist
+
+    tr_a, hist_a = run(avail)
+    tr_b, hist_b = run(load_trace(path))
+    assert hist_a == hist_b
+    assert _leaf_err(tr_a.tgt_params, tr_b.tgt_params) == 0.0
+    assert _leaf_err(tr_a._src_stack, tr_b._src_stack) == 0.0
+
+
+def test_async_buffer_size_one(small_setup):
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=0, warmup_rounds=1, batch_size=32, seed=0)
+    tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    links = LinkScenario(links=[LinkModel(latency_s=float(i + 1)) for i in range(3)])
+    sched = AsyncScheduler(tr, AsyncConfig(buffer_size=1), links=links)
+    hist = sched.run(5)
+    assert len(hist) == 5
+    assert all(len(h["members"]) == 1 for h in hist)
+
+
+def test_async_event_objects_are_well_typed():
+    assert ClientJoined(2).client == 2
+    assert ClientDeparted(1) != ClientJoined(1)
+
+
+def test_async_validation(small_setup):
+    sources, target, cfg = small_setup
+    kw = dict(n_rounds=0, warmup_rounds=0, batch_size=32, seed=0)
+    tr_serial = FedRFTCATrainer(
+        sources, target, cfg, ProtocolConfig(engine="serial", **kw)
+    )
+    with pytest.raises(ValueError, match="batched engine"):
+        AsyncScheduler(tr_serial, AsyncConfig(buffer_size=1))
+    tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncScheduler(tr, AsyncConfig(buffer_size=7))
+    with pytest.raises(ValueError, match="unknown staleness"):
+        AsyncScheduler(tr, AsyncConfig(buffer_size=1, staleness="bogus"))
+    with pytest.raises(ValueError, match="availability trace covers"):
+        AsyncScheduler(tr, AsyncConfig(buffer_size=1), availability=always_on_trace(2, 10.0))
