@@ -1,0 +1,223 @@
+"""Fleet-scale federation benchmark — the ``repro.fleet`` scaling record.
+
+Claims measured (and recorded in ``BENCH_fleet.json``):
+
+- **scaling** — rounds/sec of the batched + chunked (sharded) plane at
+  K in {8, 64, 256, 1024} simulated clients (smoke: {8, 64}), with the
+  per-device working-set proxy of the local-step stage under the
+  ``client_chunk`` scan vs the unchunked vmap — the O(chunk)-not-O(K) claim,
+  measured from the jaxpr exactly like the kernel VMEM proxies of PR 3;
+- **server ingress, flat vs two-tier** — exact wire bytes entering the
+  server per round: K per-client uplinks (flat, analytic — identity
+  accounting is analytic by construction) against the measured E merged edge
+  uplinks (two-tier), per payload kind.  The CI gate requires two-tier
+  strictly below flat from K = 64 up;
+- **two-tier exactness** — max parameter divergence of an E=K identity-codec
+  two-tier run (every merge through the hierarchy: segment sums, pooled
+  moments, masses) from the flat batched engine, gated <= 1e-3 by the smoke
+  schema (the unit tests pin <= 1e-6);
+- **accuracy vs edge codec** — the tier-2 (edge -> server backhaul) codec
+  swept at fixed tier-1 float32: what edge compression costs end-to-end.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.comm import wire
+from repro.comm.netsim import TraceScenario
+from repro.data import make_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.model import make_omega, source_loss
+from repro.federated.network import RoundPlan
+from repro.fleet import Topology, chunked_vmap, working_set_proxy
+from repro.optim import adam, apply_updates
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
+
+
+def _leaf_div(a, b) -> float:
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _full_trace(k: int, rounds: int) -> TraceScenario:
+    ids = list(range(k))
+    return TraceScenario([RoundPlan(ids, ids, ids)] * rounds, cycle=True)
+
+
+def _fleet(k: int, n: int, dim: int, n_classes: int, seed: int = 0):
+    doms = make_domains(k + 1, n, dim=dim, n_classes=n_classes, shift=0.6, seed=seed)
+    return doms[:k], doms[k]
+
+
+def _local_step_proxies(cfg, k: int, chunk: int, batch: int) -> tuple[int, int]:
+    """Working-set proxy (bytes) of the per-client local-step stage, chunked
+    vs unchunked — traced on the same grad+Adam body the engine scans."""
+    omega = make_omega(cfg)
+    opt = adam(1e-2)
+    from repro.federated.model import init_params
+
+    one = init_params(cfg, jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(
+        lambda x: np.broadcast_to(np.asarray(x)[None], (k,) + x.shape), one
+    )
+    opt_state = jax.vmap(opt.init)(jax.tree_util.tree_map(np.asarray, params))
+    x = np.zeros((k, cfg.input_dim, batch), np.float32) + 0.1
+    y = np.zeros((k, batch), np.int32)
+    gates = np.ones((k,), np.float32)
+    tmsg = np.zeros((2 * cfg.n_rff,), np.float32)
+
+    def one_client(p, o, xi, yi, gate):
+        grads = jax.grad(
+            lambda pp: source_loss(pp, omega, xi, yi, tmsg, cfg, mmd_gate=gate)[0]
+        )(p)
+        upd, o = opt.update(grads, o, p)
+        return apply_updates(p, upd), o
+
+    args = (params, opt_state, x, y, gates)
+    axes = (0, 0, 0, 0, 0)
+    ws_chunk = working_set_proxy(chunked_vmap(one_client, axes, chunk=chunk), *args)
+    ws_full = working_set_proxy(chunked_vmap(one_client, axes, chunk=None), *args)
+    return ws_chunk, ws_full
+
+
+def _flat_ingress_per_round(trainer, k: int) -> dict[str, int]:
+    """Analytic flat server ingress of one full-participation round (what the
+    identity transport would account): one uplink per client per kind."""
+    return {
+        kind: k * wire.serialized_size(kind, spec, trainer.transport.codecs[kind])
+        for kind, spec in trainer._specs.items()
+    }
+
+
+def run(smoke: bool = False) -> None:
+    """Full bench by default; ``smoke=True`` shrinks K and the run lengths so
+    CI can validate the emitted BENCH_fleet.json schema in seconds."""
+    record: dict = {"smoke": smoke}
+    cfg_small = ClientConfig(
+        input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8)
+    )
+
+    # -- scaling: rounds/sec + working-set proxy vs K ------------------------
+    ks = (8, 64) if smoke else (8, 64, 256, 1024)
+    n_per = 16 if smoke else 24
+    batch = 8
+    timed_rounds = 2
+    scaling: dict[str, dict] = {}
+    ingress: dict[str, dict] = {}
+    for k in ks:
+        chunk = min(16 if smoke else 128, k)
+        n_edges = max(k // 16, 1)
+        sources, target = _fleet(k, n_per, cfg_small.input_dim, cfg_small.n_classes)
+        proto = ProtocolConfig(
+            n_rounds=timed_rounds + 1, t_c=2, warmup_rounds=0, batch_size=batch,
+            message_batch_size=batch, client_chunk=chunk,
+            topology=Topology.uniform(k, n_edges),
+            scenario=_full_trace(k, timed_rounds + 1), seed=0,
+        )
+        tr = FedRFTCATrainer(sources, target, cfg_small, proto)
+        tr.round(1)  # compile
+        flat_per_round = _flat_ingress_per_round(tr, k)
+        before = dict(tr.ingress_bytes)
+        t0 = time.time()
+        for t in range(2, timed_rounds + 2):
+            tr.round(t)
+        dt = (time.time() - t0) / timed_rounds
+        two_tier = {
+            kind: (tr.ingress_bytes[kind] - before[kind]) // timed_rounds
+            for kind in before
+        }
+        ws_chunk, ws_full = _local_step_proxies(cfg_small, k, chunk, batch)
+        scaling[str(k)] = {
+            "k": k,
+            "chunk": chunk,
+            "n_edges": n_edges,
+            "round_s": dt,
+            "rounds_per_s": 1.0 / max(dt, 1e-9),
+            "working_set_bytes_chunked": ws_chunk,
+            "working_set_bytes_full": ws_full,
+        }
+        # classifier only syncs on t % t_c == 0 rounds; compare the kinds
+        # every round carries (moments + w_rf) plus the classifier row
+        ingress[str(k)] = {
+            "flat_per_round": flat_per_round,
+            "two_tier_per_round": two_tier,
+            "flat_total": sum(flat_per_round[kd] for kd in ("moments", "w_rf")),
+            "two_tier_total": sum(two_tier[kd] for kd in ("moments", "w_rf")),
+        }
+        emit(
+            f"fleet/scale_k{k}", dt * 1e6,
+            f"rounds_per_s={1.0 / max(dt, 1e-9):.2f},chunk={chunk},"
+            f"ws_chunked={ws_chunk},ws_full={ws_full}",
+        )
+        emit(
+            f"fleet/ingress_k{k}", 0.0,
+            f"flat={ingress[str(k)]['flat_total']},"
+            f"two_tier={ingress[str(k)]['two_tier_total']}",
+        )
+    record["scaling"] = scaling
+    record["ingress"] = ingress
+    record["max_k"] = max(ks)
+
+    # -- two-tier exactness: E=K identity codecs vs the flat engine ----------
+    k, rounds = 4, 3 if smoke else 6
+    sources, target = _fleet(k, 80, cfg_small.input_dim, cfg_small.n_classes, seed=1)
+    kw = dict(
+        n_rounds=rounds, t_c=2, warmup_rounds=1, batch_size=32, seed=0,
+        scenario=_full_trace(k, rounds),
+    )
+    tr_flat = FedRFTCATrainer(sources, target, cfg_small, ProtocolConfig(**kw))
+    tr_flat.train()
+    tr_two = FedRFTCATrainer(
+        sources, target, cfg_small,
+        ProtocolConfig(topology=Topology.singleton(k), **kw),
+    )
+    tr_two.train()
+    div = max(
+        _leaf_div(tr_flat.tgt_params, tr_two.tgt_params),
+        _leaf_div(tr_flat._src_stack, tr_two._src_stack),
+    )
+    record["two_tier"] = {
+        "max_param_divergence": div,
+        "clients": k,
+        "n_edges": k,
+        "rounds": rounds,
+    }
+    emit("fleet/two_tier_divergence", 0.0, f"divergence={div:.2e}")
+
+    # -- accuracy vs edge codec (tier-2 compression) -------------------------
+    k, rounds = 8, 6 if smoke else 40
+    cfg_acc = ClientConfig(input_dim=16, n_classes=5, n_rff=64, m=16, lambda_mmd=2.0)
+    sources, target = _fleet(k, 60 if smoke else 200, 16, 5, seed=3)
+    curve: dict[str, dict] = {}
+    for codec in ("float32", "bfloat16", "qint8"):
+        proto = ProtocolConfig(
+            n_rounds=rounds, t_c=max(rounds // 3, 1), warmup_rounds=rounds,
+            batch_size=32, lr=5e-3, seed=0, transport="wire",
+            topology=Topology.uniform(k, 2), edge_codec=codec,
+            scenario=_full_trace(k, rounds),
+        )
+        tr = FedRFTCATrainer(sources, target, cfg_acc, proto)
+        tr.train()
+        acc = float(tr.evaluate())
+        curve[codec] = {
+            "acc": acc,
+            "edge_uplink_bytes": tr.edge_transport.log.bytes_total,
+        }
+        emit(f"fleet/edge_codec_{codec}", 0.0, f"acc={acc:.3f}")
+    record["edge_codec_curve"] = curve
+
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("fleet/json", 0.0, f"wrote={JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    run()

@@ -7,15 +7,17 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
     PYTHONPATH=src python -m benchmarks.run --only fig3,table2
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny fig3 + wire
 
-Three benches write machine-readable records at the repo root, tracked across
+Four benches write machine-readable records at the repo root, tracked across
 PRs: ``fig3`` -> ``BENCH_rf_tca.json`` (fit wall-times dense/stream/lobpcg,
 speedups, peak-memory proxy, tiled large-N kernel agreement, round-engine
 per-round times serial/batched/ragged, accuracies), ``wire`` ->
 ``BENCH_comm.json`` (bytes-on-wire per payload per codec, accuracy-vs-loss-rate
-and accuracy-vs-codec curves), and ``async`` -> ``BENCH_async.json`` (fedsim
+and accuracy-vs-codec curves), ``async`` -> ``BENCH_async.json`` (fedsim
 runtime: sync-vs-async degeneracy divergence, accuracy-vs-churn-rate with
 staleness-weighted buffering vs drop-the-stragglers, accuracy-vs-buffer-size,
-virtual time to target accuracy).
+virtual time to target accuracy), and ``fleet`` -> ``BENCH_fleet.json``
+(rounds/sec + chunk-bounded working-set proxy vs K up to 1024+, server-ingress
+bytes flat vs two-tier, two-tier-vs-flat divergence, accuracy vs edge codec).
 
 ``--smoke`` reruns exactly those record-writing benches at tiny sizes and
 schema-validates the emitted JSON (required keys present, wall-times positive,
@@ -38,6 +40,7 @@ from benchmarks import (
     bench_async,
     bench_comm,
     bench_comm_wire,
+    bench_fleet,
     bench_gamma,
     bench_hard_voting,
     bench_kernels,
@@ -53,6 +56,7 @@ BENCHES = {
     "table2": ("Tables I/II: communication accounting", bench_comm.run),
     "wire": ("Wire format: bytes/payload/codec + loss & codec curves", bench_comm_wire.run),
     "async": ("Fedsim runtime: churn/staleness/buffer curves + degeneracy", bench_async.run),
+    "fleet": ("Fleet scale: K-sweep, two-tier ingress, edge codecs", bench_fleet.run),
     "table3": ("Table III + Fig.4: drop/interval robustness", bench_robustness.run),
     "table5": ("Tables IV-VI: federated DA leaderboard", bench_accuracy.run),
     "table8": ("Tables VIII/IX + Fig.5: ablations", bench_ablation.run),
@@ -158,6 +162,37 @@ def validate_async_record(record: dict) -> list[str]:
     return list(e)
 
 
+def validate_fleet_record(record: dict) -> list[str]:
+    """BENCH_fleet.json contract: the K-sweep sustains its sizes with the
+    chunk-bounded working set, two-tier vs flat stays within tolerance, and
+    server ingress is strictly below flat from K = 64 up."""
+    e = _SchemaErrors(record)
+    e.need("max_k", lambda v: v >= (64 if record.get("smoke") else 1024))
+    e.need("scaling", lambda d: isinstance(d, dict) and len(d) >= 2)
+    e.need("ingress", lambda d: isinstance(d, dict) and d)
+    for key, row in (record.get("scaling") or {}).items():
+        e.need(f"scaling.{key}.round_s", _is_pos)
+        e.need(f"scaling.{key}.rounds_per_s", _is_pos)
+        e.need(f"scaling.{key}.working_set_bytes_chunked", _is_pos)
+        if row.get("chunk", 0) < row.get("k", 0):
+            e.need(
+                f"scaling.{key}.working_set_bytes_chunked",
+                lambda v, row=row: v < row.get("working_set_bytes_full", 0),
+            )
+    for key, row in (record.get("ingress") or {}).items():
+        if int(key) >= 64:
+            e.need(
+                f"ingress.{key}.two_tier_total",
+                lambda v, row=row: _is_pos(v) and v < row.get("flat_total", 0),
+            )
+    e.need("two_tier.max_param_divergence", lambda v: 0.0 <= v <= 1e-3)
+    e.need("edge_codec_curve", lambda d: isinstance(d, dict) and d and all(
+        0.0 <= r.get("acc", -1.0) <= 1.0 and _is_pos(r.get("edge_uplink_bytes"))
+        for r in d.values()
+    ))
+    return list(e)
+
+
 def self_consistent_seed_replay(record: dict) -> bool:
     try:
         return (
@@ -168,11 +203,13 @@ def self_consistent_seed_replay(record: dict) -> bool:
 
 
 def run_smoke() -> None:
-    """CI bench-smoke: tiny fig3 + wire + async runs, then schema-validate."""
+    """CI bench-smoke: tiny fig3 + wire + async + fleet runs, then
+    schema-validate every emitted record."""
     for key, fn in (
         ("fig3", bench_rf_tca.run),
         ("wire", bench_comm_wire.run),
         ("async", bench_async.run),
+        ("fleet", bench_fleet.run),
     ):
         print(f"# --- smoke {key} ---", flush=True)
         t0 = time.time()
@@ -183,6 +220,7 @@ def run_smoke() -> None:
         ("BENCH_rf_tca.json", validate_rf_tca_record),
         ("BENCH_comm.json", validate_comm_record),
         ("BENCH_async.json", validate_async_record),
+        ("BENCH_fleet.json", validate_fleet_record),
     ):
         path = ROOT / name
         if not path.exists():
@@ -192,7 +230,8 @@ def run_smoke() -> None:
     if errors:
         sys.exit("bench record schema violations:\n  " + "\n  ".join(errors))
     print(
-        "# smoke: BENCH_rf_tca.json + BENCH_comm.json + BENCH_async.json schemas OK",
+        "# smoke: BENCH_rf_tca.json + BENCH_comm.json + BENCH_async.json + "
+        "BENCH_fleet.json schemas OK",
         flush=True,
     )
 

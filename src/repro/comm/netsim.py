@@ -205,6 +205,23 @@ class LinkScenario(Scenario):
         return t + link.latency_s + jitter + wire
 
 
+def amortized_interval_bytes(nbytes: int, interval: int) -> float:
+    """Expected per-uplink byte share of an interval payload.
+
+    The classifier syncs every T_C-th aggregation (Table II), so a single
+    uplink cannot know whether *its* consuming flush will carry the
+    classifier payload.  In expectation each uplink pays ``nbytes / T_C`` of
+    it, and that share belongs in :meth:`LinkScenario.uplink_time`'s byte
+    argument — otherwise the T_C-interval payload crosses the wire for free
+    and never contends for the shared backhaul.  The fedsim schedulers add
+    this to every uplink's wire bytes (exact in expectation, smooth in time —
+    the alternative, spiking every T_C-th uplink, would need the dispatch to
+    predict flush parity, which the buffered server does not know)."""
+    if interval <= 0:
+        raise ValueError(f"interval must be >= 1, got {interval}")
+    return nbytes / interval
+
+
 @dataclass
 class TraceScenario(Scenario):
     """Deterministic replay of an explicit plan list (cycled if ``cycle``)."""

@@ -9,9 +9,18 @@ tags into merge weights — ``constant`` (FedBuff's unweighted mean),
 aggregation, discounted polynomially by staleness).  The weighted merges
 themselves run in-graph — ``BatchedRoundEngine._flush_fn`` applies the
 weights to the Sigma-ell moment, W_RF, and classifier merges.
+
+Two-tier (fleet) aggregation: every merge above is a weighted sum over
+clients, so it splits associatively across an edge tier.
+:func:`edge_weighted_sums` is the grouped-sum primitive both the sync round
+and the async flush route through when a ``repro.fleet.Topology`` is
+configured — the Pallas segment-reduce kernel on TPU, its XLA twin (the same
+membership-matrix contraction) elsewhere.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.utils.tree import tree_mean, tree_weighted_mean
@@ -57,6 +66,29 @@ def staleness_weights(
             n = np.ones_like(s) if n_samples is None else np.asarray(n_samples, np.float64)
             w = w * (n / n.mean())
     return w.astype(np.float32)
+
+
+def edge_weighted_sums(
+    values: jnp.ndarray,  # (K, D) stacked client payloads
+    seg_ids: jnp.ndarray,  # (K,) int edge id per client
+    weights: jnp.ndarray,  # (K,) merge weights (masks x staleness)
+    n_edges: int,
+) -> jnp.ndarray:
+    """Grouped weighted sums ``out[e] = sum_{k: seg[k]=e} w_k * values[k]``.
+
+    The associative partial-merge primitive of the two-tier fleet plane
+    (jit-traceable; ``n_edges`` static).  On TPU it lowers to the fused
+    Pallas segment-reduce kernel (``kernels.ops.segment_reduce``); elsewhere
+    it runs the kernel's XLA twin — the identical weighted-membership
+    contraction, so both backends share one reduction order.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops
+
+        return ops.segment_reduce(values, seg_ids, weights, n_segments=n_edges)
+    from repro.kernels import ref
+
+    return ref.segment_reduce_ref(values, seg_ids, weights, n_edges)
 
 
 def fedavg_w_rf(source_params: list, target_params, participating: list[int]):

@@ -42,6 +42,16 @@ each against the target broadcast of its own dispatch version, and every merge
 is staleness-weighted.  With a full fresh buffer and unit weights the flush
 reduces term-by-term to the sync round — the degeneracy
 ``repro.fedsim``'s tests pin down.
+
+Fleet scale (``repro.fleet``): the sync round and the async flush share one
+set of merge methods (``_merge_msgs`` / ``_merge_w_rf`` /
+``_merge_classifier``).  With ``topology=None`` they are the flat K-client
+merges, bit-for-bit.  With a :class:`repro.fleet.Topology` every merge routes
+through the two-tier edge -> server split of ``fleet.hierarchy`` (grouped
+partial sums + masses, per-tier ``edge_channel`` codec twins on the edge
+uplinks), and ``client_chunk`` bounds the local-step working set by running
+the per-client vmap ``chunk`` rows at a time (``fleet.sharding.chunked_vmap``
+— bitwise equal to the unchunked vmap).
 """
 from __future__ import annotations
 
@@ -49,6 +59,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.federated.model import ClientConfig, client_message, source_loss, target_loss
+from repro.fleet import hierarchy
+from repro.fleet.sharding import chunked_vmap
 from repro.optim import apply_updates
 
 
@@ -81,6 +93,9 @@ class BatchedRoundEngine:
         aggregate_classifier: bool = True,
         freeze_w_rf: bool = False,
         channel: dict | None = None,
+        topology=None,
+        edge_channel: dict | None = None,
+        client_chunk: int | None = None,
     ):
         """``freeze_w_rf`` pins W_RF at its (shared, seed-derived) init:
         gradients through it are stopped and W-aggregation is skipped, so all
@@ -92,6 +107,12 @@ class BatchedRoundEngine:
         serialize/deserialize round trip (stochastic codecs draw from jax
         keys here vs numpy streams there, so the two planes agree
         statistically, not bitwise).
+
+        Fleet scale: ``topology`` (a :class:`repro.fleet.Topology`) switches
+        every merge to the two-tier edge -> server split, with
+        ``edge_channel`` the tier-2 codec twins distorting the edge uplinks;
+        ``client_chunk`` runs the per-client local-step vmap ``chunk`` rows
+        at a time so the working set is O(chunk), not O(K).
         """
         self.cfg, self.opt, self.omega = cfg, opt, omega
         self.exchange_messages = exchange_messages
@@ -99,6 +120,14 @@ class BatchedRoundEngine:
         self.aggregate_classifier = aggregate_classifier
         self.freeze_w_rf = freeze_w_rf
         self.channel = channel or {}
+        self.topology = topology
+        self.edge_channel = edge_channel or {}
+        self.client_chunk = client_chunk
+        if topology is not None:
+            self._seg_ids = jnp.asarray(topology.segment_ids)
+            self._n_edges = topology.n_edges
+        else:
+            self._seg_ids, self._n_edges = None, 0
         self._round = jax.jit(self._round_fn)
         self._warmup = jax.jit(self._warmup_fn)
         self._flush = jax.jit(self._flush_fn)
@@ -145,13 +174,159 @@ class BatchedRoundEngine:
             ps, os = carry
             x, y = xy
             mask_ax = 0 if bmask is not None else None
-            ps, os, _ = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0, mask_ax, tm_ax))(
-                ps, os, x, y, mmd_mask, bmask, tgt_msg
+            mapped = chunked_vmap(
+                one_client,
+                (0, 0, 0, 0, 0, mask_ax, tm_ax),
+                chunk=self.client_chunk,
             )
+            ps, os, _ = mapped(ps, os, x, y, mmd_mask, bmask, tgt_msg)
             return (ps, os), None
 
         (src_p, src_o), _ = jax.lax.scan(step, (src_p, src_o), (xs, ys))
         return src_p, src_o
+
+    # -- merge code (shared by the sync round and the async flush) ----------
+    #
+    # ``sel`` is the 0/1 participation mask that gates assign-backs and the
+    # "did anything arrive" checks; ``wsel`` the merge weights (== sel in the
+    # sync round, buf_mask * staleness weights in the async flush).  With no
+    # topology these are the flat K-client merges, bit-for-bit the seed
+    # expressions; with one, every merge routes through the two-tier
+    # edge -> server split of ``fleet.hierarchy`` (tier-2 ``edge_channel``
+    # codec twins applied to the edge uplinks).
+
+    def _uplinked_msgs(self, src_p, x_msg, msg_mask, chan_key):
+        """(K, 2N) source Sigma-ell uplinks after the tier-1 channel.  Also
+        ``client_chunk``-bounded: the per-client (mb, 2N) RFF slabs are the
+        other O(K) activation of a round."""
+        omega = self.omega
+        k_clients = x_msg.shape[0]
+        msgs = chunked_vmap(
+            lambda p, x, mk: client_message(p, omega, x, +1.0, mask=mk),
+            (0, 0, 0 if msg_mask is not None else None),
+            chunk=self.client_chunk,
+        )(src_p, x_msg, msg_mask)
+        chan_m = self.channel.get("moments")
+        if chan_m is not None:
+            keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
+            msgs = jax.vmap(chan_m)(msgs, keys)
+        return msgs
+
+    def _merge_msgs(self, msgs, weights, chan_key):
+        """What the target trains on: (msgs, weights) unchanged in the flat
+        plane; per-edge pooled moments + masses in the two-tier plane."""
+        if self._seg_ids is None:
+            return msgs, weights
+        return hierarchy.edge_moment_merge(
+            msgs,
+            weights,
+            self._seg_ids,
+            self._n_edges,
+            self.edge_channel.get("moments"),
+            jax.random.fold_in(chan_key, 4),
+        )
+
+    def _target_scan(self, tgt_p, tgt_o, xt_steps, msgs, weights, any_gate):
+        """Alg. 3 local target steps on the merged source moments; a no-op
+        (params AND opt state) when nothing arrived, the serial semantics."""
+        cfg, opt = self.cfg, self.opt
+
+        def tgt_step(carry, x):
+            p, o = carry
+            (_, _), grads = jax.value_and_grad(
+                lambda pp: target_loss(
+                    self._maybe_freeze(pp), self.omega, x, msgs, cfg, weights=weights
+                ),
+                has_aux=True,
+            )(p)
+            upd, o = opt.update(grads, o, p)
+            return (apply_updates(p, upd), o), None
+
+        (new_tgt_p, new_tgt_o), _ = jax.lax.scan(tgt_step, (tgt_p, tgt_o), xt_steps)
+        tgt_p = tree_where(any_gate, new_tgt_p, tgt_p)
+        tgt_o = tree_where(any_gate, new_tgt_o, tgt_o)
+        return tgt_p, tgt_o
+
+    def _merge_w_rf(self, src_p, tgt_p, sel, wsel, chan_key):
+        """Weighted W_RF merge over participants + the target (Alg. 4)."""
+        k_clients = sel.shape[0]
+        chan_w = self.channel.get("w_rf")
+        have_w = jnp.sum(sel) > 0
+        w_up, w_tgt_up = src_p["w_rf"], tgt_p["w_rf"]
+        if chan_w is not None:
+            keys = jax.random.split(jax.random.fold_in(chan_key, 2), k_clients + 1)
+            w_up = jax.vmap(chan_w)(w_up, keys[:k_clients])
+            w_tgt_up = chan_w(w_tgt_up, keys[k_clients])
+        if self._seg_ids is None:
+            w_sum, mass = jnp.einsum("k,kij->ij", wsel, w_up), jnp.sum(wsel)
+        else:
+            sums, masses = hierarchy.edge_param_merge(
+                w_up,
+                wsel,
+                self._seg_ids,
+                self._n_edges,
+                self.edge_channel.get("w_rf"),
+                jax.random.fold_in(chan_key, 5),
+            )
+            w_sum, mass = hierarchy.server_combine(sums, masses)
+        w_avg = (w_sum + w_tgt_up) / (mass + 1.0)
+        src_p["w_rf"] = jnp.where(
+            (sel > 0)[:, None, None] & have_w, w_avg[None], src_p["w_rf"]
+        )
+        tgt_p["w_rf"] = jnp.where(have_w, w_avg, tgt_p["w_rf"])
+        return src_p, tgt_p
+
+    def _merge_classifier(self, src_p, tgt_p, sel, wsel, do_clf, chan_key, floor):
+        """Weighted classifier merge on T_C rounds/flushes (Alg. 4)."""
+        k_clients = sel.shape[0]
+        chan_c = self.channel.get("classifier")
+        have_c = do_clf & (jnp.sum(sel) > 0)
+        clf_up = src_p["classifier"]
+        if chan_c is not None:
+            kbase = jax.random.fold_in(chan_key, 3)
+            leaves, treedef = jax.tree_util.tree_flatten(clf_up)
+            clf_up = jax.tree_util.tree_unflatten(
+                treedef,
+                [
+                    jax.vmap(chan_c)(
+                        leaf, jax.random.split(jax.random.fold_in(kbase, i), k_clients)
+                    )
+                    for i, leaf in enumerate(leaves)
+                ],
+            )
+        if self._seg_ids is None:
+            denom = jnp.maximum(jnp.sum(wsel), floor)
+            c_avg = jax.tree_util.tree_map(
+                lambda leaf: jnp.tensordot(wsel, leaf, axes=1) / denom,
+                clf_up,
+            )
+        else:
+            chan_ce = self.edge_channel.get("classifier")
+            kbase_e = jax.random.fold_in(chan_key, 6)
+            leaves, treedef = jax.tree_util.tree_flatten(clf_up)
+            merged = []
+            for i, leaf in enumerate(leaves):
+                sums, masses = hierarchy.edge_param_merge(
+                    leaf,
+                    wsel,
+                    self._seg_ids,
+                    self._n_edges,
+                    chan_ce,
+                    jax.random.fold_in(kbase_e, i),
+                )
+                c_sum, mass = hierarchy.server_combine(sums, masses)
+                merged.append(c_sum / jnp.maximum(mass, floor))
+            c_avg = jax.tree_util.tree_unflatten(treedef, merged)
+        assign = (sel > 0) & have_c
+        src_p["classifier"] = jax.tree_util.tree_map(
+            lambda avg, old: jnp.where(
+                assign.reshape((-1,) + (1,) * (old.ndim - 1)), avg[None], old
+            ),
+            c_avg,
+            src_p["classifier"],
+        )
+        tgt_p["classifier"] = tree_where(have_c, c_avg, tgt_p["classifier"])
+        return src_p, tgt_p
 
     # -- round body (Alg. 5) ------------------------------------------------
 
@@ -174,11 +349,8 @@ class BatchedRoundEngine:
         bmask,  # (K, b) 0/1 valid-column mask of ragged training batches | None
         msg_mask,  # (K, mb) 0/1 valid-column mask of ragged message batches | None
     ):
-        cfg, omega, opt = self.cfg, self.omega, self.opt
-        k_clients = xs.shape[1]
+        omega = self.omega
         chan_m = self.channel.get("moments")
-        chan_w = self.channel.get("w_rf")
-        chan_c = self.channel.get("classifier")
 
         # target broadcasts its message to the sources in S_t (the one
         # downlink the protocol accounts; distorted by the wire codec)
@@ -190,82 +362,28 @@ class BatchedRoundEngine:
         gates = mmd_mask if self.exchange_messages else jnp.zeros_like(mmd_mask)
         src_p, src_o = self._src_local_scan(src_p, src_o, xs, ys, gates, tgt_msg, bmask)
 
-        # local target training (Alg. 3) on the messages that arrived
+        # local target training (Alg. 3) on the messages that arrived —
+        # per-client uplinks in the flat plane, per-edge pooled moments (one
+        # backhaul uplink per edge) in the two-tier plane
         if self.exchange_messages:
-            msgs = jax.vmap(
-                lambda p, x, mk: client_message(p, omega, x, +1.0, mask=mk),
-                in_axes=(0, 0, 0 if msg_mask is not None else None),
-            )(src_p, x_msg, msg_mask)
-            if chan_m is not None:
-                keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
-                msgs = jax.vmap(chan_m)(msgs, keys)
+            msgs = self._uplinked_msgs(src_p, x_msg, msg_mask, chan_key)
+            merged, tgt_w = self._merge_msgs(msgs, mmd_mask, chan_key)
             any_msg = jnp.sum(mmd_mask) > 0
-
-            def tgt_step(carry, x):
-                p, o = carry
-                (_, _), grads = jax.value_and_grad(
-                    lambda pp: target_loss(
-                        self._maybe_freeze(pp), omega, x, msgs, cfg, weights=mmd_mask
-                    ),
-                    has_aux=True,
-                )(p)
-                upd, o = opt.update(grads, o, p)
-                return (apply_updates(p, upd), o), None
-
-            (new_tgt_p, new_tgt_o), _ = jax.lax.scan(tgt_step, (tgt_p, tgt_o), xt_steps)
-            # if no source message arrived the target performs no step (serial
-            # semantics) — opt state must stay untouched too
-            tgt_p = tree_where(any_msg, new_tgt_p, tgt_p)
-            tgt_o = tree_where(any_msg, new_tgt_o, tgt_o)
+            tgt_p, tgt_o = self._target_scan(
+                tgt_p, tgt_o, xt_steps, merged, tgt_w, any_msg
+            )
 
         # global aggregation (Alg. 4): W_RF over plan.w_clients + the target.
         # Frozen-W mode (seed-replay wire codec) skips it: every client's
         # W_RF is already bit-identical to the shared init.
         if self.aggregate_w_rf and not self.freeze_w_rf:
-            have_w = jnp.sum(w_mask) > 0
-            w_up, w_tgt_up = src_p["w_rf"], tgt_p["w_rf"]
-            if chan_w is not None:
-                keys = jax.random.split(jax.random.fold_in(chan_key, 2), k_clients + 1)
-                w_up = jax.vmap(chan_w)(w_up, keys[:k_clients])
-                w_tgt_up = chan_w(w_tgt_up, keys[k_clients])
-            w_avg = (jnp.einsum("k,kij->ij", w_mask, w_up) + w_tgt_up) / (
-                jnp.sum(w_mask) + 1.0
-            )
-            src_p["w_rf"] = jnp.where(
-                (w_mask > 0)[:, None, None] & have_w, w_avg[None], src_p["w_rf"]
-            )
-            tgt_p["w_rf"] = jnp.where(have_w, w_avg, tgt_p["w_rf"])
+            src_p, tgt_p = self._merge_w_rf(src_p, tgt_p, w_mask, w_mask, chan_key)
 
         # classifier aggregation every T_C rounds over plan.c_clients
         if self.aggregate_classifier:
-            have_c = do_clf & (jnp.sum(c_mask) > 0)
-            denom = jnp.maximum(jnp.sum(c_mask), 1.0)
-            clf_up = src_p["classifier"]
-            if chan_c is not None:
-                kbase = jax.random.fold_in(chan_key, 3)
-                leaves, treedef = jax.tree_util.tree_flatten(clf_up)
-                clf_up = jax.tree_util.tree_unflatten(
-                    treedef,
-                    [
-                        jax.vmap(chan_c)(
-                            leaf, jax.random.split(jax.random.fold_in(kbase, i), k_clients)
-                        )
-                        for i, leaf in enumerate(leaves)
-                    ],
-                )
-            c_avg = jax.tree_util.tree_map(
-                lambda leaf: jnp.tensordot(c_mask, leaf, axes=1) / denom,
-                clf_up,
+            src_p, tgt_p = self._merge_classifier(
+                src_p, tgt_p, c_mask, c_mask, do_clf, chan_key, 1.0
             )
-            assign = (c_mask > 0) & have_c
-            src_p["classifier"] = jax.tree_util.tree_map(
-                lambda avg, old: jnp.where(
-                    assign.reshape((-1,) + (1,) * (old.ndim - 1)), avg[None], old
-                ),
-                c_avg,
-                src_p["classifier"],
-            )
-            tgt_p["classifier"] = tree_where(have_c, c_avg, tgt_p["classifier"])
 
         return src_p, src_o, tgt_p, tgt_o
 
@@ -345,11 +463,6 @@ class BatchedRoundEngine:
         term-by-term to ``_round_fn``'s — that is the sync/async degeneracy
         the fedsim tests pin at <= 1e-6.
         """
-        cfg, omega, opt = self.cfg, self.omega, self.opt
-        k_clients = xs.shape[1]
-        chan_m = self.channel.get("moments")
-        chan_w = self.channel.get("w_rf")
-        chan_c = self.channel.get("classifier")
         wsel = buf_mask * weights
 
         # local source training at dispatch inputs; keep only buffered rows
@@ -359,77 +472,24 @@ class BatchedRoundEngine:
         src_o = self._select_clients(buf_mask, new_o, src_o)
 
         # target trains on the buffered Sigma-ell moments, staleness-weighted
+        # (per-edge pooled in the two-tier plane, like the sync round)
         if self.exchange_messages:
-            msgs = jax.vmap(
-                lambda p, x, mk: client_message(p, omega, x, +1.0, mask=mk),
-                in_axes=(0, 0, 0 if msg_mask is not None else None),
-            )(src_p, x_msg, msg_mask)
-            if chan_m is not None:
-                keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
-                msgs = jax.vmap(chan_m)(msgs, keys)
+            msgs = self._uplinked_msgs(src_p, x_msg, msg_mask, chan_key)
+            merged, tgt_w = self._merge_msgs(msgs, wsel, chan_key)
             any_msg = jnp.sum(buf_mask) > 0
-
-            def tgt_step(carry, x):
-                p, o = carry
-                (_, _), grads = jax.value_and_grad(
-                    lambda pp: target_loss(
-                        self._maybe_freeze(pp), omega, x, msgs, cfg, weights=wsel
-                    ),
-                    has_aux=True,
-                )(p)
-                upd, o = opt.update(grads, o, p)
-                return (apply_updates(p, upd), o), None
-
-            (new_tgt_p, new_tgt_o), _ = jax.lax.scan(tgt_step, (tgt_p, tgt_o), xt_steps)
-            tgt_p = tree_where(any_msg, new_tgt_p, tgt_p)
-            tgt_o = tree_where(any_msg, new_tgt_o, tgt_o)
+            tgt_p, tgt_o = self._target_scan(
+                tgt_p, tgt_o, xt_steps, merged, tgt_w, any_msg
+            )
 
         # staleness-weighted W_RF merge over the buffer + the server copy
         if self.aggregate_w_rf and not self.freeze_w_rf:
-            have_w = jnp.sum(buf_mask) > 0
-            w_up, w_tgt_up = src_p["w_rf"], tgt_p["w_rf"]
-            if chan_w is not None:
-                keys = jax.random.split(jax.random.fold_in(chan_key, 2), k_clients + 1)
-                w_up = jax.vmap(chan_w)(w_up, keys[:k_clients])
-                w_tgt_up = chan_w(w_tgt_up, keys[k_clients])
-            w_avg = (jnp.einsum("k,kij->ij", wsel, w_up) + w_tgt_up) / (
-                jnp.sum(wsel) + 1.0
-            )
-            src_p["w_rf"] = jnp.where(
-                (buf_mask > 0)[:, None, None] & have_w, w_avg[None], src_p["w_rf"]
-            )
-            tgt_p["w_rf"] = jnp.where(have_w, w_avg, tgt_p["w_rf"])
+            src_p, tgt_p = self._merge_w_rf(src_p, tgt_p, buf_mask, wsel, chan_key)
 
         # staleness-weighted classifier merge on T_C-interval flushes
         if self.aggregate_classifier:
-            have_c = do_clf & (jnp.sum(buf_mask) > 0)
-            denom = jnp.maximum(jnp.sum(wsel), 1e-9)
-            clf_up = src_p["classifier"]
-            if chan_c is not None:
-                kbase = jax.random.fold_in(chan_key, 3)
-                leaves, treedef = jax.tree_util.tree_flatten(clf_up)
-                clf_up = jax.tree_util.tree_unflatten(
-                    treedef,
-                    [
-                        jax.vmap(chan_c)(
-                            leaf, jax.random.split(jax.random.fold_in(kbase, i), k_clients)
-                        )
-                        for i, leaf in enumerate(leaves)
-                    ],
-                )
-            c_avg = jax.tree_util.tree_map(
-                lambda leaf: jnp.tensordot(wsel, leaf, axes=1) / denom,
-                clf_up,
+            src_p, tgt_p = self._merge_classifier(
+                src_p, tgt_p, buf_mask, wsel, do_clf, chan_key, 1e-9
             )
-            assign = (buf_mask > 0) & have_c
-            src_p["classifier"] = jax.tree_util.tree_map(
-                lambda avg, old: jnp.where(
-                    assign.reshape((-1,) + (1,) * (old.ndim - 1)), avg[None], old
-                ),
-                c_avg,
-                src_p["classifier"],
-            )
-            tgt_p["classifier"] = tree_where(have_c, c_avg, tgt_p["classifier"])
 
         return src_p, src_o, tgt_p, tgt_o
 

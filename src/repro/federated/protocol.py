@@ -54,6 +54,14 @@ asynchronous scheduler bypasses the round loop entirely — it draws per-client
 batches at dispatch time (``draw_client_dispatch`` / ``draw_target_steps`` /
 ``target_message``) and executes buffered flushes through the batched
 engine, maintaining the per-client ``client_versions`` staleness tags.
+
+Fleet scale (``repro.fleet``): ``ProtocolConfig(topology=...)`` routes every
+merge through two-tier edge -> server aggregation — clients uplink to their
+edge (tier-1, the existing codecs), each active edge ships ONE merged uplink
+to the server (tier-2, ``edge_codec``), and ``ingress_bytes`` tracks the
+server-ingress leg that collapses from K to E messages.
+``ProtocolConfig(client_chunk=...)`` bounds the compiled round's per-client
+working set (O(chunk) activations) for K in the thousands.
 """
 from __future__ import annotations
 
@@ -114,6 +122,18 @@ class ProtocolConfig:
     codec_w_rf: str | None = None
     codec_classifier: str | None = None
     scenario: Any = None  # comm.netsim.Scenario; None -> TableIII(drop_setting)
+    # -- fleet scale (repro.fleet) -------------------------------------------
+    # ``topology`` (a fleet.Topology) turns on two-tier edge -> server
+    # aggregation: every merge routes through per-edge partial sums, the
+    # server ingests ONE uplink per active edge per payload kind (at the
+    # tier-2 ``edge_codec``, default: same as ``codec``), and the fedsim
+    # AsyncScheduler flushes per-edge buffers.  Batched engine only.
+    topology: Any = None
+    edge_codec: str | None = None
+    # ``client_chunk`` bounds the local-step working set: the per-client vmap
+    # runs chunk rows at a time (O(chunk) live activations instead of O(K));
+    # bitwise-equal to the unchunked program.
+    client_chunk: int | None = None
     seed: int = 0
 
 
@@ -171,6 +191,15 @@ class FedRFTCATrainer:
         self.sources, self.target = sources, target
         self.cfg, self.proto = cfg, proto
         self.k = len(sources)
+        self.topology = proto.topology
+        if self.topology is not None:
+            if engine != "batched":
+                raise ValueError("fleet topology needs the batched engine")
+            if self.topology.n_clients != self.k:
+                raise ValueError(
+                    f"topology covers {self.topology.n_clients} clients, "
+                    f"trainer has {self.k}"
+                )
         self.omega = make_omega(cfg)
         # codec="auto:<budget>" resolves against the measured BENCH_comm.json
         # accuracy-vs-codec curves: cheapest codec whose accuracy gap fits
@@ -199,6 +228,28 @@ class FedRFTCATrainer:
                 "b": ((cfg.n_classes,), f32),
             },
         }
+        # Two-tier wire: the tier-2 (edge -> server) transport carries ONE
+        # merged uplink per active edge per payload kind — the partial merge
+        # plus the weight mass it reports — under its own ``edge_codec``.
+        # ``ingress_bytes`` tracks the server-ingress leg on both planes (the
+        # quantity the two-tier split shrinks from K to E messages).
+        if self.topology is not None:
+            edge_codec = proto.edge_codec or codec
+            if edge_codec == "seed_replay" and codec != "seed_replay":
+                raise ValueError(
+                    "edge_codec='seed_replay' requires the frozen-W protocol "
+                    "(codec='seed_replay')"
+                )
+            self.edge_transport = comm_transport.build_transport(
+                proto.transport, edge_codec, seed=proto.seed ^ 0x0ED6E
+            )
+            self._edge_specs = {
+                kind: {**spec, "mass": ((1,), f32)}
+                for kind, spec in self._specs.items()
+            }
+        else:
+            self.edge_transport, self._edge_specs = None, None
+        self.ingress_bytes = {"moments": 0, "w_rf": 0, "classifier": 0}
         # Paper Fig. 1: every client fine-tunes the SAME pretrained extractor,
         # so all clients share one initialisation (they diverge during training).
         key = jax.random.PRNGKey(proto.seed)
@@ -269,6 +320,11 @@ class FedRFTCATrainer:
                 aggregate_classifier=proto.aggregate_classifier,
                 freeze_w_rf=self._frozen_w,
                 channel=self.transport.channel_fns(),
+                topology=self.topology,
+                edge_channel=(
+                    self.edge_transport.channel_fns() if self.edge_transport else None
+                ),
+                client_chunk=proto.client_chunk,
             )
             self._src_stack = stack_trees(src_params)
             self._src_opt_stack = jax.vmap(self.opt.init)(self._src_stack)
@@ -417,23 +473,55 @@ class FedRFTCATrainer:
         return jnp.asarray(m)
 
     # ---- communication accounting (analytic; exact by wire.serialized_size) --
+    def account_ingress(self, kind: str, members) -> None:
+        """Server-ingress leg of one round/flush's ``kind`` uplinks.
+
+        Flat plane: every participating client's message reaches the server —
+        K uplinks at the tier-1 codec.  Two-tier plane: each *active edge*
+        (an edge with >= 1 participating member) ships one merged uplink —
+        the partial merge plus its mass — at the tier-2 ``edge_codec``; the
+        edge transport log records it.  ``ingress_bytes`` is the quantity
+        BENCH_fleet.json tracks flat-vs-two-tier."""
+        members = list(members)
+        if not members:
+            return
+        if self.topology is None:
+            nbytes = wire.serialized_size(
+                kind, self._specs[kind], self.transport.codecs[kind]
+            )
+            self.ingress_bytes[kind] += len(members) * nbytes
+        else:
+            edges = self.topology.edges_of(members)
+            self.edge_transport.account_spec(
+                kind, self._edge_specs[kind], count=len(edges)
+            )
+            nbytes = wire.serialized_size(
+                kind, self._edge_specs[kind], self.edge_transport.codecs[kind]
+            )
+            self.ingress_bytes[kind] += len(edges) * nbytes
+
     def _account_comm(self, plan: network.RoundPlan, t: int) -> None:
         """Byte + float accounting for the planes whose exchange is in-graph
         (identity transport and the batched engine).  The serial wire plane
         accounts inside ``Transport.transfer`` instead — same message counts,
-        same exact byte sizes."""
+        same exact byte sizes.  The main log carries the tier-1 (client)
+        legs; ``account_ingress`` adds the server-ingress leg, which the
+        two-tier plane collapses to one uplink per active edge."""
         proto, tr = self.proto, self.transport
         if proto.exchange_messages and plan.msg_clients:
             # one 2N downlink broadcast + one uplink per delivering client
             tr.account_spec(
                 "moments", self._specs["moments"], count=1 + len(plan.msg_clients)
             )
+            self.account_ingress("moments", plan.msg_clients)
         if proto.aggregate_w_rf and plan.w_clients:
             tr.account_spec("w_rf", self._specs["w_rf"], count=len(plan.w_clients) + 1)
+            self.account_ingress("w_rf", plan.w_clients)
         if proto.aggregate_classifier and t % proto.t_c == 0 and plan.c_clients:
             tr.account_spec(
                 "classifier", self._specs["classifier"], count=len(plan.c_clients)
             )
+            self.account_ingress("classifier", plan.c_clients)
 
     # ---- jitted local updates (serial plane) ---------------------------------
     def _build_steps(self):

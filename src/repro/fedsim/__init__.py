@@ -22,6 +22,8 @@ from repro.fedsim.events import (
     ClientDeparted,
     ClientJoined,
     ClientUpdateArrived,
+    EdgeUplinkArrived,
+    EvalTick,
     Event,
     SyncBarrier,
 )

@@ -13,6 +13,14 @@ Four event kinds cover the whole asynchronous protocol:
   the server model version the client was dispatched from, so the consumer
   can compute staleness = version_now - version_at_dispatch.
 - :class:`SyncBarrier` — the synchronous scheduler's per-round rendezvous.
+- :class:`EdgeUplinkArrived` — two-tier topologies only: an edge whose buffer
+  filled merged it and shipped ONE uplink over the backhaul
+  (``edge_links``); the server flushes when it lands, not when the edge
+  filled.  ``seq`` keys the scheduler's in-flight table holding the merged
+  entries.
+- :class:`EvalTick` — time-triggered evaluation (``AsyncConfig.
+  eval_interval``): accuracy-vs-virtual-time curves get points at a fixed
+  cadence instead of only at flush boundaries.
 
 Events hold only host-side bookkeeping (ints/floats); array payloads stay in
 the scheduler's pending tables so the heap never compares jax values.
@@ -48,3 +56,14 @@ class ClientUpdateArrived(Event):
 @dataclass(frozen=True)
 class SyncBarrier(Event):
     round: int
+
+
+@dataclass(frozen=True)
+class EdgeUplinkArrived(Event):
+    edge: int
+    seq: int  # key into the scheduler's in-flight edge-uplink table
+
+
+@dataclass(frozen=True)
+class EvalTick(Event):
+    index: int

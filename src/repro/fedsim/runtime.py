@@ -28,7 +28,18 @@ Two schedulers, one API (``run(n, eval_every) -> history``):
 
 Because arrival times follow from exact wire bytes, the *codec* choice
 changes arrival order and therefore staleness — the comm subsystem feeds
-back into the learning dynamics instead of only into byte accounting.
+back into the learning dynamics instead of only into byte accounting.  The
+T_C-interval classifier payload is amortized into every uplink's wire bytes
+(``netsim.amortized_interval_bytes``), so interval syncs count toward wire
+time and backhaul contention too.
+
+Fleet scale: when the trainer carries a ``repro.fleet.Topology``, the
+:class:`AsyncScheduler` keeps one buffer *per edge* — an edge flushes when
+its own buffer fills, merges it, and (with ``edge_links``) ships one uplink
+across the backhaul; the server flush fires when that merged uplink lands
+(:class:`EdgeUplinkArrived`).  ``AsyncConfig.eval_interval`` adds
+time-triggered :class:`EvalTick` events for dense accuracy-vs-virtual-time
+curves independent of the flush schedule.
 """
 from __future__ import annotations
 
@@ -39,7 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.netsim import LinkScenario
+from repro.comm import wire
+from repro.comm.netsim import LinkScenario, amortized_interval_bytes
 from repro.federated import aggregation
 from repro.federated.network import RoundPlan
 from repro.fedsim.availability import AvailabilityTrace
@@ -48,6 +60,8 @@ from repro.fedsim.events import (
     ClientDeparted,
     ClientJoined,
     ClientUpdateArrived,
+    EdgeUplinkArrived,
+    EvalTick,
     SyncBarrier,
 )
 
@@ -101,17 +115,34 @@ class _SchedulerBase:
             kinds.append("w_rf")
         return tuple(kinds)
 
-    def _uplink_nbytes(self) -> int:
-        return sum(self.payload_bytes.get(kind, 0) for kind in self._uplink_kinds())
+    def _uplink_nbytes(self) -> float:
+        """Wire bytes of one client uplink: the per-round payloads plus the
+        expected per-flush share of the T_C-interval classifier sync — so
+        interval payloads count toward wire time and backhaul contention."""
+        proto = self.trainer.proto
+        nbytes = float(sum(self.payload_bytes.get(k, 0) for k in self._uplink_kinds()))
+        if proto.aggregate_classifier:
+            nbytes += amortized_interval_bytes(
+                self.payload_bytes.get("classifier", 0), proto.t_c
+            )
+        return nbytes
 
 
 @dataclass
 class AsyncConfig:
-    """Knobs of the buffered-asynchronous server."""
+    """Knobs of the buffered-asynchronous server.
+
+    ``buffer_size`` is per buffer: the server's single buffer in the flat
+    plane, each *edge's* buffer when the trainer carries a fleet topology
+    (edges flush their own buffers).  ``eval_interval`` adds time-triggered
+    :class:`EvalTick` events every that-many virtual seconds, so
+    accuracy-vs-virtual-time curves are dense instead of flush-aligned.
+    """
 
     buffer_size: int = 2
     staleness: str = "constant"  # constant | polynomial[:alpha] | auto
     compute_s: Any = 1.0  # per-client local-training seconds (scalar or (K,))
+    eval_interval: float | None = None  # virtual seconds between EvalTicks
     seed: int = 0
 
 
@@ -204,12 +235,30 @@ class AsyncScheduler(_SchedulerBase):
         *,
         availability: AvailabilityTrace | None = None,
         links: LinkScenario | None = None,
+        edge_links: LinkScenario | None = None,
     ):
         cfg = cfg or AsyncConfig()
         if trainer._engine is None:
             raise ValueError("AsyncScheduler needs the batched engine (engine='batched')")
-        if not 1 <= cfg.buffer_size <= max(trainer.k, 1):
-            raise ValueError(f"buffer_size must be in [1, K={trainer.k}]")
+        topo = trainer.topology
+        if topo is None:
+            if not 1 <= cfg.buffer_size <= max(trainer.k, 1):
+                raise ValueError(f"buffer_size must be in [1, K={trainer.k}]")
+            if edge_links is not None:
+                raise ValueError("edge_links need a fleet topology on the trainer")
+        else:
+            smallest = min(len(topo.members(e)) for e in range(topo.n_edges))
+            if not 1 <= cfg.buffer_size <= smallest:
+                raise ValueError(
+                    f"buffer_size must be in [1, {smallest}] (smallest edge) "
+                    f"for this topology"
+                )
+            if edge_links is not None and len(edge_links.links) < topo.n_edges:
+                raise ValueError(
+                    f"{len(edge_links.links)} edge links for {topo.n_edges} edges"
+                )
+        if cfg.eval_interval is not None and cfg.eval_interval <= 0:
+            raise ValueError(f"eval_interval must be > 0, got {cfg.eval_interval}")
         aggregation.staleness_weights(np.zeros(1), cfg.staleness)  # validate mode early
         super().__init__(
             trainer,
@@ -225,9 +274,20 @@ class AsyncScheduler(_SchedulerBase):
         self.live: set[int] = set()
         self.epoch = np.zeros(trainer.k, dtype=np.int64)
         self.pending: dict[int, dict] = {}  # client -> dispatch record (in flight)
-        self.buffer: list[dict] = []  # arrived updates awaiting a flush
-        self._inflight: list[tuple[float, int]] = []  # (finish_time, bytes) uplinks
+        # one buffer per edge (the flat plane is the single pseudo-edge 0);
+        # an edge flushes when ITS buffer fills, not the global arrival count
+        self.topology = topo
+        self._n_edges = topo.n_edges if topo is not None else 1
+        self.buffers: dict[int, list[dict]] = {e: [] for e in range(self._n_edges)}
+        self.edge_links = edge_links
+        self._edge_seq = 0
+        self._edge_uplinks: dict[int, list[dict]] = {}  # seq -> merged entries
+        self._edge_inflight: list[tuple[float, float]] = []  # backhaul (finish, bytes)
+        self._inflight: list[tuple[float, float]] = []  # (finish_time, bytes) uplinks
         self._n_k = np.array([d.x.shape[1] for d in trainer.sources], dtype=np.int64)
+
+    def _edge_of(self, client: int) -> int:
+        return self.topology.edge_of(client) if self.topology is not None else 0
 
     # -- client lifecycle ---------------------------------------------------
 
@@ -274,26 +334,63 @@ class AsyncScheduler(_SchedulerBase):
         self._inflight.append((start + wire, nbytes))
         return compute + wire
 
-    def _on_arrival(self, t: float, ev: ClientUpdateArrived) -> bool:
+    def _on_arrival(self, t: float, ev: ClientUpdateArrived) -> int | None:
+        """Buffer the update at the client's edge; return the edge id when
+        its buffer just filled (None otherwise)."""
         if ev.epoch != self.epoch[ev.client] or ev.client not in self.live:
-            return False  # churned away mid-flight: the update is lost
+            return None  # churned away mid-flight: the update is lost
         entry = self.pending.pop(ev.client, None)
         if entry is None or entry["version"] != ev.version:
-            return False  # superseded dispatch (defensive; churn covers this)
+            return None  # superseded dispatch (defensive; churn covers this)
         if self.trainer.proto.exchange_messages:
             self.trainer.transport.account_spec(
                 "moments", self.trainer._specs["moments"], count=1
             )
+        edge = self._edge_of(ev.client)
+        buf = self.buffers[edge]
         # a rejoin can race an unconsumed buffered update: newest wins
-        self.buffer = [e for e in self.buffer if e["client"] != ev.client]
-        self.buffer.append(entry)
-        return len(self.buffer) >= self.cfg.buffer_size
+        self.buffers[edge] = buf = [e for e in buf if e["client"] != ev.client]
+        buf.append(entry)
+        return edge if len(buf) >= self.cfg.buffer_size else None
+
+    # -- the edge backhaul (two-tier topologies) ----------------------------
+
+    def _edge_uplink_nbytes(self) -> float:
+        """Exact wire bytes of one merged edge -> server uplink: the partial
+        merges + masses at the tier-2 codec, with the classifier partial's
+        T_C-amortized share."""
+        tr = self.trainer
+        nbytes = sum(
+            wire.serialized_size(k, tr._edge_specs[k], tr.edge_transport.codecs[k])
+            for k in self._uplink_kinds()
+        )
+        if tr.proto.aggregate_classifier:
+            nbytes += amortized_interval_bytes(
+                wire.serialized_size(
+                    "classifier",
+                    tr._edge_specs["classifier"],
+                    tr.edge_transport.codecs["classifier"],
+                ),
+                tr.proto.t_c,
+            )
+        return nbytes
+
+    def _edge_uplink_delay(self, edge: int, t: float) -> float:
+        """Backhaul crossing time of a merged edge uplink starting at ``t``,
+        contended against the other edge uplinks currently in flight."""
+        self._edge_inflight = [(fin, b) for fin, b in self._edge_inflight if fin > t]
+        inflight = sum(b for _, b in self._edge_inflight)
+        nbytes = self._edge_uplink_nbytes()
+        delay = self.edge_links.uplink_time(
+            self.rng, edge, nbytes, inflight_bytes=inflight
+        )
+        self._edge_inflight.append((t + delay, nbytes))
+        return delay
 
     # -- the buffered flush -------------------------------------------------
 
-    def _flush(self, t: float) -> None:
+    def _flush(self, t: float, entries: list[dict]) -> dict[str, Any]:
         tr = self.trainer
-        entries, self.buffer = self.buffer, []
         members = [e["client"] for e in entries]
         staleness = np.array([self.version - e["version"] for e in entries])
         w_members = aggregation.staleness_weights(
@@ -342,28 +439,34 @@ class AsyncScheduler(_SchedulerBase):
             masks,
             chan_key=jax.random.fold_in(tr._chan_base, f),
         )
-        # host-side accounting, same message counts as the sync round body
+        # host-side accounting, same message counts as the sync round body;
+        # the ingress leg collapses to one merged uplink per active edge in
+        # the two-tier plane (here: the one edge whose buffer flushed)
+        if tr.proto.exchange_messages and members:
+            tr.account_ingress("moments", members)
         if tr.proto.aggregate_w_rf and members:
             tr.transport.account_spec("w_rf", tr._specs["w_rf"], count=len(members) + 1)
+            tr.account_ingress("w_rf", members)
         if tr.proto.aggregate_classifier and f % tr.proto.t_c == 0 and members:
             tr.transport.account_spec(
                 "classifier", tr._specs["classifier"], count=len(members)
             )
+            tr.account_ingress("classifier", members)
         tr.comm.rounds += 1
         self.flushes = f
         self.version += 1
         tr.model_version = self.version
         tr.client_versions[members] = self.version
-        self.history.append(
-            {
-                "t": t,
-                "flush": f,
-                "version": self.version,
-                "members": sorted(members),
-                "staleness": staleness.tolist(),
-                "weights": w_members.tolist(),
-            }
-        )
+        row = {
+            "t": t,
+            "flush": f,
+            "version": self.version,
+            "members": sorted(members),
+            "staleness": staleness.tolist(),
+            "weights": w_members.tolist(),
+        }
+        self.history.append(row)
+        return row
 
     # -- event loop ---------------------------------------------------------
 
@@ -384,6 +487,8 @@ class AsyncScheduler(_SchedulerBase):
         if tr.k == 0:
             raise ValueError("async runtime needs at least one source client")
         self._seed_events()
+        if self.cfg.eval_interval is not None:
+            self.queue.push(self.cfg.eval_interval, EvalTick(1))
         while self.queue and self.flushes < n_flushes:
             # same-instant events pop in push order; joins are grouped so
             # simultaneous (re)joins share one dispatch broadcast
@@ -405,11 +510,43 @@ class AsyncScheduler(_SchedulerBase):
             if joined:
                 self._dispatch(joined, t)
             for ev in batch_events:
-                if isinstance(ev, ClientUpdateArrived) and self._on_arrival(t, ev):
-                    self._flush(t)
-                    if eval_every and self.flushes % eval_every == 0:
-                        self.history[-1]["acc"] = tr.evaluate()
-                    if self.flushes >= n_flushes:
-                        break
-                    self._dispatch(self.history[-1]["members"], t)
+                if isinstance(ev, EvalTick):
+                    # model state only changes at flushes, so evaluating at
+                    # the tick's own time is exact; keep ticking only while
+                    # progress is still possible (else the chain would spin
+                    # an otherwise-drained queue forever)
+                    self.history.append({"t": t, "eval": ev.index, "acc": tr.evaluate()})
+                    if self.queue or self.pending or self._edge_uplinks:
+                        self.queue.push(
+                            t + self.cfg.eval_interval, EvalTick(ev.index + 1)
+                        )
+                    continue
+                ready: list[dict] | None = None
+                if isinstance(ev, ClientUpdateArrived):
+                    edge = self._on_arrival(t, ev)
+                    if edge is None:
+                        continue
+                    entries, self.buffers[edge] = self.buffers[edge], []
+                    if self.edge_links is None:
+                        ready = entries  # edge is colocated: flush immediately
+                    else:
+                        # the edge merges its buffer and ships ONE uplink;
+                        # the server flushes when it crosses the backhaul
+                        self._edge_seq += 1
+                        self._edge_uplinks[self._edge_seq] = entries
+                        self.queue.push(
+                            t + self._edge_uplink_delay(edge, t),
+                            EdgeUplinkArrived(edge, self._edge_seq),
+                        )
+                        continue
+                elif isinstance(ev, EdgeUplinkArrived):
+                    ready = self._edge_uplinks.pop(ev.seq)
+                if ready is None:
+                    continue
+                row = self._flush(t, ready)
+                if eval_every and self.flushes % eval_every == 0:
+                    row["acc"] = tr.evaluate()
+                if self.flushes >= n_flushes:
+                    break
+                self._dispatch(row["members"], t)
         return self.history

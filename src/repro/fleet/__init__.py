@@ -1,0 +1,35 @@
+"""repro.fleet — fleet-scale hierarchical federation.
+
+Scales the round engines from K ~ 4 simulated clients to K in the thousands
+along two independent axes:
+
+- **Sharded client execution** (``sharding``): stacked per-client state runs
+  under ``shard_map`` over a ``clients`` mesh axis, and within each shard a
+  memory-bounded ``client_chunk`` scan (``chunked_vmap``) keeps the local-step
+  working set O(chunk) instead of O(K).
+- **Two-tier aggregation** (``topology`` + ``hierarchy``): a
+  :class:`Topology` assigns clients to edge aggregators; each edge runs the
+  masked partial merges (pooled Sigma-ell moments, weighted W_RF/classifier
+  partial sums + masses) and ships ONE uplink per payload kind to the server,
+  which completes the merge.  Associativity of the weighted sums makes the
+  hierarchy exact (see ``hierarchy`` for the precise statement), while
+  server-ingress bytes drop from K to E uplinks per kind, with a per-tier
+  codec on the edge -> server backhaul.
+
+``ProtocolConfig(topology=..., client_chunk=..., edge_codec=...)`` routes the
+batched sync engine and the fedsim ``AsyncScheduler`` (whose edges flush
+their own buffers) through this subsystem; ``benchmarks/bench_fleet.py``
+records the scaling envelope in ``BENCH_fleet.json``.
+"""
+from repro.fleet.hierarchy import (
+    edge_moment_merge,
+    edge_param_merge,
+    server_combine,
+)
+from repro.fleet.sharding import (
+    chunked_vmap,
+    client_mesh,
+    sharded_client_map,
+    working_set_proxy,
+)
+from repro.fleet.topology import Topology

@@ -1,0 +1,109 @@
+"""Two-tier (edge -> server) merge code, shared by the sync round and the
+async flush.
+
+Every FedRF-TCA aggregate is a weighted sum over clients, so it splits
+exactly across an edge tier:
+
+    flat:      agg = sum_k w_k x_k            (+ the target's own term)
+    two-tier:  S_e = sum_{k in e} w_k x_k,    m_e = sum_{k in e} w_k
+               agg = sum_e S_e               (the server combine)
+
+- **W_RF / classifier** (:func:`edge_param_merge` + :func:`server_combine`):
+  associativity makes the two-tier merge equal to the flat one for ANY
+  topology and ANY participation/staleness weights — reassociation of the
+  fp32 sum is the only difference (<= 1e-6 at test configs, bitwise for the
+  degenerate E=K topology).
+- **Moments** (:func:`edge_moment_merge`): the edge ships the mass-weighted
+  mean ``S_e / m_e`` — by linearity of Sigma-ell this IS the exact moment
+  message of the edge's pooled member batch (the associative "Sigma-ell sum"
+  of the paper).  The target's per-pair MMD then runs over E edge messages
+  weighted by their masses.  Whenever at most one member per edge delivers a
+  moment in a round (including E=K), this is *identical* to the flat per-pair
+  loss; with several concurrent members an edge contributes the union
+  population's message — the same estimator family at edge granularity (the
+  fleet tests pin both the identity and the pooled-moment equalities).
+
+Per-tier codecs: the tier-1 (client->edge) distortion twins are applied by
+the engine to the per-client uplinks exactly as in the flat plane; the tier-2
+(edge->server) twins passed here distort the *edge uplink payloads* — the
+normalized partial means, so quantization scales stay sane — before the
+server combine.  Identity tier-2 codecs leave the partials untouched (no
+normalize/denormalize round trip is inserted, keeping the exactness claims
+above intact).
+
+The grouped sums route through ``federated.aggregation.edge_weighted_sums``:
+the Pallas segment-reduce MXU kernel on TPU, its XLA twin elsewhere — one
+merge code path for both engines.  Each merge appends a ones column to the
+payload so the partial sums and the masses come out of a single contraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MASS_EPS = 1e-9  # empty-edge guard; a zero mass also zeroes the merge weight
+
+
+def _sums_and_mass(flat, weights, seg_ids, n_edges):
+    """((E, D) partial sums, (E,) masses) from one fused segment reduce."""
+    # deferred: aggregation sits inside repro.federated, whose __init__ pulls
+    # the engine, which imports this module — resolve the cycle at trace time
+    from repro.federated.aggregation import edge_weighted_sums
+
+    aug = jnp.concatenate([flat, jnp.ones((flat.shape[0], 1), flat.dtype)], axis=1)
+    out = edge_weighted_sums(aug, seg_ids, weights, n_edges)
+    return out[:, :-1], out[:, -1]
+
+
+def edge_moment_merge(
+    msgs: jnp.ndarray,  # (K, 2N) per-client Sigma-ell messages
+    weights: jnp.ndarray,  # (K,) participation masks x staleness weights
+    seg_ids: jnp.ndarray,  # (K,) int edge assignment
+    n_edges: int,
+    channel=None,  # tier-2 "moments" distortion twin fn(x, key) | None
+    chan_key=None,
+):
+    """Per-edge pooled moment uplinks: ``(pooled (E, 2N), mass (E,))``.
+
+    ``pooled[e]`` is the weighted mean of edge e's member messages — the
+    exact Sigma-ell message of the pooled member samples; ``mass[e]`` is the
+    weight it carries into the target's per-pair MMD.  With a singleton
+    member of weight 1 the pooled row is that member's message bit-for-bit.
+    """
+    sums, mass = _sums_and_mass(msgs, weights, seg_ids, n_edges)
+    pooled = sums / jnp.maximum(mass, _MASS_EPS)[:, None]
+    if channel is not None:
+        keys = jax.random.split(chan_key, pooled.shape[0])
+        pooled = jax.vmap(channel)(pooled, keys)
+    return pooled, mass
+
+
+def edge_param_merge(
+    values: jnp.ndarray,  # (K, ...) stacked client payloads (W_RF / a clf leaf)
+    weights: jnp.ndarray,  # (K,)
+    seg_ids: jnp.ndarray,  # (K,) int edge assignment
+    n_edges: int,
+    channel=None,  # tier-2 distortion twin fn(x, key) | None
+    chan_key=None,
+):
+    """Per-edge partial parameter sums: ``(sums (E, ...), mass (E,))``.
+
+    With a tier-2 codec the edge uplink payload is the normalized partial
+    mean (codec-friendly scale); the server re-weights it by the mass the
+    edge reports alongside.  Without one the raw partial sums flow through
+    untouched, so the identity-codec hierarchy is pure reassociation.
+    """
+    flat = values.reshape(values.shape[0], -1)
+    sums_flat, mass = _sums_and_mass(flat, weights, seg_ids, n_edges)
+    sums = sums_flat.reshape((n_edges,) + values.shape[1:])
+    if channel is not None:
+        bcast = mass.reshape((-1,) + (1,) * (sums.ndim - 1))
+        means = sums / jnp.maximum(bcast, _MASS_EPS)
+        keys = jax.random.split(chan_key, n_edges)
+        sums = jax.vmap(channel)(means, keys) * bcast
+    return sums, mass
+
+
+def server_combine(sums: jnp.ndarray, mass: jnp.ndarray):
+    """Complete the merge from edge partials: ``(sum_e S_e, sum_e m_e)``."""
+    return jnp.sum(sums, axis=0), jnp.sum(mass)

@@ -8,6 +8,9 @@
                    N ~ 1k it auto-switches to an (i, j) output-tiled grid
                    whose per-instance VMEM is bounded by the tile, not N
 - flash_attention: blockwise online-softmax GQA attention (causal / window)
+- segment_reduce:  weighted segment sums for the two-tier fleet plane's
+                   grouped moment merges — the (E, K) membership x weights
+                   matrix contracted against stacked payloads on the MXU
 
 Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py. On this
 CPU container they run with interpret=True; on TPU they lower via Mosaic.

@@ -19,6 +19,7 @@ from repro.kernels.rff_gram_stream import (
     rff_gram_stream_pallas,
     rff_gram_stream_tiled_pallas,
 )
+from repro.kernels.segment_reduce import segment_reduce_pallas
 
 
 def _on_tpu() -> bool:
@@ -160,6 +161,37 @@ def rff_gram_stream(
         mc[:n_feat, 0], ms[:n_feat, 0], mc[:n_feat, 1], ms[:n_feat, 1],
         n=n,  # fold_n=None: the kernels fold 1/sqrt(N) into cos/sin already
     )
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "block", "interpret"))
+def segment_reduce(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    weights: jax.Array,
+    *,
+    n_segments: int,
+    block: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Weighted segment sums ``out[e] = sum_{k: seg[k]=e} w_k * values[k]``.
+
+    ``values`` (K, D), ``seg_ids`` (K,) ints in [0, n_segments), ``weights``
+    (K,) -> (n_segments, D) fp32 — the grouped moment merge of the two-tier
+    fleet plane as one MXU matmul of the weighted membership matrix against
+    the stacked payloads.  Padding: K to the client block (padded rows carry
+    weight 0, so they contribute exact zeros), E and D to the 128 lane edge.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    k, d = values.shape
+    onehot = (seg_ids[None, :] == jnp.arange(n_segments)[:, None]).astype(jnp.float32)
+    wm = onehot * weights.astype(jnp.float32)[None, :]
+    vals = values.astype(jnp.float32)
+    wm, _ = _pad_to(wm, 1, block)
+    vals, _ = _pad_to(vals, 0, block)
+    wm, _ = _pad_to(wm, 0, 8)  # sublane edge of the (E, bk) membership blocks
+    vals, _ = _pad_to(vals, 1, block)
+    out = segment_reduce_pallas(wm, vals, block_k=block, interpret=interpret)
+    return out[:n_segments, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))

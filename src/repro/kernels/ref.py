@@ -39,6 +39,20 @@ def fake_quant_ref(x: jax.Array, u: jax.Array, *, bits: int) -> jax.Array:
     return (q * scale).astype(x.dtype)
 
 
+def segment_reduce_ref(
+    values: jax.Array, seg_ids: jax.Array, weights: jax.Array, n_segments: int
+) -> jax.Array:
+    """XLA twin of ops.segment_reduce: ``out[e] = sum_{k: seg[k]=e} w_k v_k``.
+
+    Implemented as the same weighted-membership matmul the kernel runs (one
+    dot over K), so the two paths share a contraction order; ``values`` is
+    (K, D), ``seg_ids`` (K,) ints, ``weights`` (K,) -> (n_segments, D) fp32.
+    """
+    onehot = (seg_ids[None, :] == jnp.arange(n_segments)[:, None]).astype(jnp.float32)
+    wm = onehot * weights.astype(jnp.float32)[None, :]
+    return wm @ values.astype(jnp.float32)
+
+
 def attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0
 ) -> jax.Array:

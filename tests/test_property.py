@@ -11,7 +11,8 @@ from hypothesis import strategies as st
 from repro.core.kernels_math import centering_matrix, ell_vector, gaussian_kernel
 from repro.core.mmd import message, mmd_projected
 from repro.core.rff import draw_omega, rff_features
-from repro.federated.aggregation import hard_vote
+from repro.federated.aggregation import hard_vote, staleness_weights
+from repro.fedsim.availability import AvailabilityTrace
 from repro.models.layers import cross_entropy
 from repro.utils.tree import tree_mean, tree_weighted_mean
 
@@ -111,6 +112,106 @@ def test_hard_vote_unanimous(k, n, c, seed):
     logits = rng.normal(size=(k, n, c)) * 0.01
     logits[:, np.arange(n), cls] += 10.0  # every client agrees
     assert (hard_vote(logits) == cls).all()
+
+
+@given(
+    s=st.lists(st.integers(0, 60), min_size=1, max_size=8),
+    alpha=st.floats(0.05, 3.0, allow_nan=False),
+)
+@settings(**SETTINGS)
+def test_staleness_polynomial_freshness_monotone(s, alpha):
+    """Fresher updates never weigh less; staleness 0 is exactly unit weight;
+    every weight sits in (0, 1]."""
+    w = staleness_weights(np.array(s), f"polynomial:{alpha}")
+    assert ((w > 0.0) & (w <= 1.0)).all()
+    for i, si in enumerate(s):
+        if si == 0:
+            assert w[i] == 1.0
+        for j, sj in enumerate(s):
+            if si <= sj:
+                assert w[i] >= w[j] - 1e-7
+
+
+@given(s=st.lists(st.integers(0, 60), min_size=1, max_size=8), seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_staleness_constant_mode_invariance(s, seed):
+    """Constant mode ignores the staleness tags entirely (FedBuff's mean):
+    all-ones under any tags and any permutation of them."""
+    arr = np.array(s)
+    assert (staleness_weights(arr, "constant") == 1.0).all()
+    perm = np.random.default_rng(seed).permutation(len(arr))
+    assert (staleness_weights(arr[perm], "constant") == 1.0).all()
+
+
+@given(
+    s=st.lists(st.integers(0, 20), min_size=2, max_size=6),
+    scale=st.floats(0.1, 100.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_staleness_auto_normalization(s, scale, seed):
+    """Auto mode's importance factor is n / mean(n): uniform sample counts
+    reduce it to the polynomial weights, and rescaling every count by the
+    same constant leaves the weights unchanged (only relative sizes count)."""
+    arr = np.array(s)
+    n = np.random.default_rng(seed).integers(1, 1000, size=len(arr)).astype(float)
+    uniform = staleness_weights(arr, "auto", n_samples=np.full(len(arr), 7.0))
+    assert np.allclose(uniform, staleness_weights(arr, "polynomial"), rtol=1e-5)
+    a = staleness_weights(arr, "auto", n_samples=n)
+    b = staleness_weights(arr, "auto", n_samples=n * scale)
+    assert np.allclose(a, b, rtol=1e-4)
+
+
+def _interval_traces():
+    """Sorted, disjoint, possibly *touching* interval lists (gap 0 touches —
+    the coalescing case) built from non-negative gap/length pairs."""
+    seg = st.tuples(st.integers(0, 3), st.integers(1, 4))  # (gap, length)
+    return st.lists(st.lists(seg, min_size=0, max_size=6), min_size=1, max_size=3)
+
+
+@given(data=_interval_traces())
+@settings(**SETTINGS)
+def test_availability_coalescing_invariants(data):
+    """Whatever valid (possibly touching, possibly empty) interval lists go
+    in: uptime is preserved, stored intervals are sorted/disjoint with no
+    touching pair left (no phantom churn edges), and the edge stream strictly
+    alternates join/depart starting with a join."""
+    intervals, horizon = [], 1.0
+    for segs in data:
+        ivs, t = [], 0.0
+        for gap, length in segs:
+            s = t + gap
+            e = s + length
+            ivs.append((s, e))
+            t = e
+        horizon = max(horizon, t + 1.0)
+        intervals.append(ivs)
+    raw_uptime = [sum(e - s for s, e in ivs) for ivs in intervals]
+    tr = AvailabilityTrace(float(horizon), intervals)
+    for i, ivs in enumerate(tr.intervals):
+        assert tr.uptime(i) == raw_uptime[i]  # coalescing never loses time
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert e1 < s2  # strictly disjoint AND non-touching after merge
+        edges = tr.edges(i)
+        kinds = [is_join for _, is_join in edges]
+        assert kinds == [j % 2 == 0 for j in range(len(kinds))]  # alternate
+        assert len(edges) == 0 or kinds[0] is True
+        times = [t for t, _ in edges]
+        assert times == sorted(times)
+        if not ivs:  # the empty-trace client: never available, no edges
+            assert edges == [] and not tr.available(i, 0.0)
+
+
+@given(
+    lo=st.integers(0, 5), mid=st.integers(1, 5), hi=st.integers(1, 5),
+)
+@settings(**SETTINGS)
+def test_availability_nested_intervals_rejected(lo, mid, hi):
+    """A nested (or otherwise overlapping) second interval must raise."""
+    outer = (float(lo), float(lo + mid + hi + 1))
+    inner = (float(lo + 1), float(lo + 1 + mid))
+    with pytest.raises(ValueError, match="overlapping|bad interval"):
+        AvailabilityTrace(outer[1] + 1.0, [[outer, inner]])
 
 
 @given(seed=st.integers(0, 2**31 - 1), v=st.integers(5, 50), pad=st.integers(0, 16))
