@@ -1,0 +1,167 @@
+"""Robustness benchmark — the fault-injection / defense record.
+
+Claims measured (and recorded in ``BENCH_robust.json``):
+
+- **degeneracy** — the AggregationRule refactor is invisible when unused:
+  ``rule="mean"`` + a no-op :class:`FaultConfig` reproduces the default
+  trainer's parameters bitwise (``max_param_divergence`` gated <= 1e-6 by the
+  CI smoke; the unit test pins it at 0.0);
+- **accuracy vs corruption rate** — per-payload value corruption (NaN
+  injection, 100x scaling) at increasing rates, plain weighted mean against
+  every robust rule (finite-guard mean, norm-clip, coordinate trimmed-mean,
+  geometric median).  NaN corruption deterministically poisons the mean
+  (one corrupted uplink -> NaN parameters -> chance accuracy) while the
+  robust rules quarantine it;
+- **accuracy vs Byzantine count** — persistent sign-flipping adversaries at
+  crafted 10x magnitude; robust rules hold while the mean degrades, up to
+  the f < K/2 breakdown point;
+- **recovery time vs checkpoint interval** — the fedsim AsyncScheduler with
+  a scheduled :class:`ServerCrashed` event: virtual-time rollback (crash
+  time minus last checkpoint) stays within one checkpoint interval, and the
+  crashed run still completes its flush budget.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import da_suite, emit
+from repro.comm.netsim import TraceScenario
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.network import RoundPlan
+from repro.fedsim import AsyncConfig, AsyncScheduler
+from repro.robust import FaultConfig
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_robust.json"
+
+ALL_RULES = ("mean", "finite_mean", "norm_clip", "trimmed_mean", "geomedian")
+
+
+def _leaf_div(a, b) -> float:
+    import jax
+
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _trainer(sources, target, cfg, rounds, *, rule="mean", faults=None, seed=0):
+    ids = list(range(len(sources)))
+    proto = ProtocolConfig(
+        n_rounds=rounds, t_c=max(rounds // 4, 1), warmup_rounds=rounds, lr=5e-3,
+        batch_size=48, seed=seed, rule=rule, faults=faults,
+        scenario=TraceScenario([RoundPlan(ids, ids, ids)] * rounds, cycle=True),
+    )
+    return FedRFTCATrainer(sources, target, cfg, proto)
+
+
+def run(smoke: bool = False) -> None:
+    """Full bench by default; ``smoke=True`` shrinks every sweep so CI can
+    validate the emitted BENCH_robust.json schema in seconds."""
+    rounds = 8 if smoke else 50
+    sources, target = da_suite(n=80 if smoke else 240)
+    k = len(sources)
+    cfg = ClientConfig(input_dim=16, n_classes=5, n_rff=128, m=16, lambda_mmd=2.0)
+    record: dict = {"smoke": smoke, "n_clients": k, "rounds": rounds}
+
+    # -- degeneracy: rule="mean" + no-op faults == the untouched pipeline ----
+    tr_ref = _trainer(sources, target, cfg, rounds)
+    tr_ref.train()
+    tr_deg = _trainer(sources, target, cfg, rounds, rule="mean", faults=FaultConfig())
+    tr_deg.train()
+    div = max(
+        _leaf_div(tr_ref.tgt_params, tr_deg.tgt_params),
+        _leaf_div(tr_ref._src_stack, tr_deg._src_stack),
+    )
+    clean_acc = float(tr_ref.evaluate())
+    record["degeneracy"] = {"max_param_divergence": div}
+    record["clean_baseline_acc"] = clean_acc
+    emit("robust/degeneracy", 0.0, f"divergence={div:.2e},clean_acc={clean_acc:.3f}")
+
+    # -- accuracy vs corruption rate, per mode, mean vs every robust rule ----
+    modes = ("nan",) if smoke else ("nan", "scale")
+    rates = (0.5,) if smoke else (0.1, 0.25, 0.5)
+    rules = ("mean", "trimmed_mean") if smoke else ALL_RULES
+    corruption: dict[str, dict] = {}
+    for mode in modes:
+        by_rate: dict[str, dict] = {}
+        for rate in rates:
+            faults = FaultConfig(
+                corrupt_moments=rate, corrupt_w_rf=rate, corrupt_classifier=rate,
+                corruption=mode,
+            )
+            row: dict[str, float] = {}
+            for rule in rules:
+                tr = _trainer(sources, target, cfg, rounds, rule=rule, faults=faults)
+                tr.train()
+                row[rule] = float(tr.evaluate())
+            by_rate[f"{rate:.2f}"] = row
+            emit(
+                f"robust/corrupt_{mode}_{rate:.2f}", 0.0,
+                ",".join(f"{r}={row[r]:.3f}" for r in rules),
+            )
+        corruption[mode] = by_rate
+    record["corruption"] = corruption
+
+    # -- accuracy vs Byzantine count (persistent sign-flip adversaries) ------
+    byz_counts = (1,) if smoke else tuple(range(1, (k - 1) // 2 + 1))
+    byzantine: dict[str, dict] = {}
+    for n_byz in byz_counts:
+        faults = FaultConfig(
+            byzantine=tuple(range(n_byz)), byzantine_mode="sign_flip",
+            byzantine_scale=10.0,
+        )
+        row = {}
+        for rule in rules:
+            tr = _trainer(sources, target, cfg, rounds, rule=rule, faults=faults)
+            tr.train()
+            row[rule] = float(tr.evaluate())
+        byzantine[str(n_byz)] = row
+        emit(
+            f"robust/byzantine_{n_byz}", 0.0,
+            ",".join(f"{r}={row[r]:.3f}" for r in rules),
+        )
+    record["byzantine"] = byzantine
+
+    # -- recovery time vs checkpoint interval (fedsim server crash) ----------
+    n_flushes = 10 if smoke else 20
+    intervals = (3.0,) if smoke else (2.0, 5.0, 10.0)
+    buf = max(k // 2, 1)
+    # with uniform 1s compute and no links the server completes k/buf flushes
+    # per virtual second; crash mid-run so recovery is actually exercised
+    crash_t = 0.5 * n_flushes * buf / k
+    recovery: dict[str, dict] = {}
+    for interval in intervals:
+        tr = _trainer(sources, target, cfg, rounds)
+        sched = AsyncScheduler(
+            tr,
+            AsyncConfig(
+                buffer_size=buf, compute_s=1.0,
+                server_crash_times=(crash_t,),
+                checkpoint_interval_s=interval,
+            ),
+        )
+        sched.run(n_flushes)
+        rec = sched.recoveries[0]
+        recovery[f"{interval:.1f}"] = {
+            "checkpoint_interval_s": interval,
+            "rollback_s": rec["rollback_s"],
+            "restored_flush": rec["restored_flush"],
+            "flushes_completed": sched.flushes,
+            "recovered": sched.flushes >= n_flushes,
+        }
+        emit(
+            f"robust/recovery_{interval:.1f}", 0.0,
+            f"rollback={rec['rollback_s']:.2f}s,flushes={sched.flushes}",
+        )
+    record["recovery"] = recovery
+
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("robust/json", 0.0, f"wrote={JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    run()

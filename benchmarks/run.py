@@ -15,9 +15,13 @@ per-round times serial/batched/ragged, accuracies), ``wire`` ->
 and accuracy-vs-codec curves), ``async`` -> ``BENCH_async.json`` (fedsim
 runtime: sync-vs-async degeneracy divergence, accuracy-vs-churn-rate with
 staleness-weighted buffering vs drop-the-stragglers, accuracy-vs-buffer-size,
-virtual time to target accuracy), and ``fleet`` -> ``BENCH_fleet.json``
+virtual time to target accuracy), ``fleet`` -> ``BENCH_fleet.json``
 (rounds/sec + chunk-bounded working-set proxy vs K up to 1024+, server-ingress
-bytes flat vs two-tier, two-tier-vs-flat divergence, accuracy vs edge codec).
+bytes flat vs two-tier, two-tier-vs-flat divergence, accuracy vs edge codec),
+and ``robust`` -> ``BENCH_robust.json`` (fault injection: zero-fault bitwise
+degeneracy of the AggregationRule refactor, accuracy vs corruption rate and
+vs Byzantine count for mean vs each robust rule, crash-recovery rollback vs
+checkpoint interval).
 
 ``--smoke`` reruns exactly those record-writing benches at tiny sizes and
 schema-validates the emitted JSON (required keys present, wall-times positive,
@@ -46,6 +50,7 @@ from benchmarks import (
     bench_kernels,
     bench_laplace,
     bench_rf_tca,
+    bench_robust,
     bench_robustness,
     bench_theory,
 )
@@ -58,6 +63,7 @@ BENCHES = {
     "async": ("Fedsim runtime: churn/staleness/buffer curves + degeneracy", bench_async.run),
     "fleet": ("Fleet scale: K-sweep, two-tier ingress, edge codecs", bench_fleet.run),
     "table3": ("Table III + Fig.4: drop/interval robustness", bench_robustness.run),
+    "robust": ("Fault injection: corruption/Byzantine/crash-recovery", bench_robust.run),
     "table5": ("Tables IV-VI: federated DA leaderboard", bench_accuracy.run),
     "table8": ("Tables VIII/IX + Fig.5: ablations", bench_ablation.run),
     "appD": ("Appendix D: one-shot hard voting / asynchrony", bench_hard_voting.run),
@@ -193,6 +199,49 @@ def validate_fleet_record(record: dict) -> list[str]:
     return list(e)
 
 
+def validate_robust_record(record: dict) -> list[str]:
+    """BENCH_robust.json contract: the rule refactor is bitwise-degenerate
+    with zero faults, at least one robust rule beats the plain mean at the
+    heaviest corruption rate, and crash recovery rolls back no further than
+    one checkpoint interval."""
+    e = _SchemaErrors(record)
+    e.need("degeneracy.max_param_divergence", lambda v: 0.0 <= v <= 1e-6)
+    e.need("clean_baseline_acc", lambda v: 0.0 <= v <= 1.0)
+    acc_row = lambda r: isinstance(r, dict) and "mean" in r and all(
+        isinstance(v, (int, float)) and 0.0 <= v <= 1.0 for v in r.values()
+    )
+    e.need("corruption", lambda d: isinstance(d, dict) and d and all(
+        isinstance(by_rate, dict) and by_rate and all(acc_row(r) for r in by_rate.values())
+        for by_rate in d.values()
+    ))
+    e.need("byzantine", lambda d: isinstance(d, dict) and d and all(
+        acc_row(r) for r in d.values()
+    ))
+    # the headline claim: a robust rule survives what poisons the mean
+    for mode, by_rate in (record.get("corruption") or {}).items():
+        if not isinstance(by_rate, dict) or not by_rate:
+            continue
+        worst = by_rate.get(max(by_rate, key=float))
+        if isinstance(worst, dict) and "mean" in worst and len(worst) > 1:
+            robust_best = max(v for k, v in worst.items() if k != "mean")
+            if not robust_best > worst["mean"]:
+                e.append(
+                    f"corruption.{mode}: no robust rule beats mean at the "
+                    f"heaviest rate ({worst!r})"
+                )
+    e.need("recovery", lambda d: isinstance(d, dict) and d)
+    for key, row in (record.get("recovery") or {}).items():
+        if not isinstance(row, dict):
+            e.append(f"recovery[{key}]: not a dict")
+            continue
+        rb, iv = row.get("rollback_s"), row.get("checkpoint_interval_s", -1.0)
+        if not (isinstance(rb, (int, float)) and 0.0 <= rb <= iv):
+            e.append(f"recovery[{key}]: rollback_s {rb!r} not within interval {iv!r}")
+        if row.get("recovered") is not True:
+            e.append(f"recovery[{key}]: crashed run did not complete its flushes")
+    return list(e)
+
+
 def self_consistent_seed_replay(record: dict) -> bool:
     try:
         return (
@@ -210,6 +259,7 @@ def run_smoke() -> None:
         ("wire", bench_comm_wire.run),
         ("async", bench_async.run),
         ("fleet", bench_fleet.run),
+        ("robust", bench_robust.run),
     ):
         print(f"# --- smoke {key} ---", flush=True)
         t0 = time.time()
@@ -221,6 +271,7 @@ def run_smoke() -> None:
         ("BENCH_comm.json", validate_comm_record),
         ("BENCH_async.json", validate_async_record),
         ("BENCH_fleet.json", validate_fleet_record),
+        ("BENCH_robust.json", validate_robust_record),
     ):
         path = ROOT / name
         if not path.exists():
@@ -231,7 +282,7 @@ def run_smoke() -> None:
         sys.exit("bench record schema violations:\n  " + "\n  ".join(errors))
     print(
         "# smoke: BENCH_rf_tca.json + BENCH_comm.json + BENCH_async.json + "
-        "BENCH_fleet.json schemas OK",
+        "BENCH_fleet.json + BENCH_robust.json schemas OK",
         flush=True,
     )
 

@@ -20,6 +20,12 @@ Scenarios:
   deterministically; any scenario can be recorded into one
   (:func:`record_trace`) and traces round-trip through JSON
   (:func:`save_trace` / :func:`load_trace`) for shareable experiments.
+- :class:`CorruptionScenario` — payload-level corruption over any base
+  scenario, in its *defended* (checksummed) form: a corrupted frame is
+  rejected and retransmitted, so per-kind corruption rates compose into an
+  extra erasure channel (give-up after ``max_retries``).  The undefended
+  form — corrupted values reaching the aggregator — lives in
+  ``repro.robust.faults`` and runs in-graph in the batched engine.
 """
 from __future__ import annotations
 
@@ -136,17 +142,24 @@ class LinkScenario(Scenario):
     bit-for-bit, rng stream included.
 
     The fedsim async runtime does not use round plans; it queries
-    :meth:`uplink_time` per dispatched client instead (lost payloads retried
-    after ``retry_s``, contention from the bytes currently in flight), so a
-    client's arrival time — and therefore its staleness at consumption —
-    follows from the exact wire bytes of the configured codec.
+    :meth:`uplink_outcome` per dispatched client instead (lost payloads
+    retransmitted under exponential backoff with jitter, contention from the
+    bytes currently in flight), so a client's arrival time — and therefore
+    its staleness at consumption — follows from the exact wire bytes of the
+    configured codec.  After ``max_retries`` failed attempts the client gives
+    up and the uplink is reported as a drop (``delivered=False`` /
+    ``uplink_time() == inf``), never an exception and never an unbounded
+    spin as ``drop → 1``.
     """
 
     links: list[LinkModel]
     deadline_s: float = math.inf
     payload_bytes: dict[str, int] = field(default_factory=dict)
     backhaul_bps: float = math.inf  # shared-uplink capacity (queueing)
-    retry_s: float = 1.0  # client retransmit backoff for lost async uplinks
+    retry_s: float = 1.0  # initial retransmit backoff for lost async uplinks
+    max_retries: int = 8  # give up (report drop) after this many retransmits
+    backoff: float = 2.0  # exponential backoff factor per retransmit
+    retry_jitter: float = 0.5  # +- fraction of uniform jitter on each wait
 
     def plan(self, rng, n_clients, t) -> RoundPlan:
         if len(self.links) < n_clients:
@@ -172,6 +185,44 @@ class LinkScenario(Scenario):
         """Exact wire bytes of one client uplink carrying ``kinds``."""
         return sum(self.payload_bytes.get(kind, 0) for kind in kinds)
 
+    def uplink_outcome(
+        self,
+        rng,
+        client: int,
+        nbytes: int,
+        *,
+        inflight_bytes: float = 0.0,
+    ) -> tuple[bool, float]:
+        """One client uplink attempt sequence -> ``(delivered, elapsed_s)``.
+
+        Bernoulli losses are retransmitted under exponential backoff with
+        jitter: attempt ``a`` waits ``retry_s * backoff**a`` (times a uniform
+        ``1 ± retry_jitter`` factor) before trying again.  After
+        ``max_retries`` retransmits the client gives up: ``(False, elapsed)``
+        where ``elapsed`` is the virtual time burned backing off — the
+        caller needs it to schedule what happens next (re-dispatch, drop
+        accounting).  On success ``elapsed`` includes latency, jitter and the
+        (possibly backhaul-contended) wire time.  ``drop=0`` draws no retry
+        randomness, keeping fault-free rng streams bit-identical to the seed.
+        """
+        link = self.links[client]
+        t = 0.0
+        if link.drop:
+            for attempt in range(self.max_retries + 1):
+                if rng.random() >= link.drop:
+                    break
+                if attempt == self.max_retries:
+                    return False, t  # budget exhausted: no wait after last try
+                wait = self.retry_s * (self.backoff**attempt)
+                if self.retry_jitter:
+                    wait *= 1.0 + self.retry_jitter * (2.0 * rng.random() - 1.0)
+                t += wait
+        jitter = rng.random() * link.jitter_s if link.jitter_s else 0.0
+        wire = nbytes / link.bandwidth_bps
+        if math.isfinite(self.backhaul_bps):
+            wire = max(wire, (nbytes + inflight_bytes) / self.backhaul_bps)
+        return True, t + link.latency_s + jitter + wire
+
     def uplink_time(
         self,
         rng,
@@ -179,30 +230,49 @@ class LinkScenario(Scenario):
         nbytes: int,
         *,
         inflight_bytes: float = 0.0,
-        max_retries: int = 10_000,
     ) -> float:
-        """Virtual seconds until a client's nbytes uplink lands at the server
-        (the async runtime's completion-time query).  Bernoulli losses are
-        retried after ``retry_s`` each (always finite, unlike the deadline
-        path — in the async protocol a lost update is *late*, not gone);
-        a finite backhaul adds contention from ``inflight_bytes``, the sum of
-        bytes concurrently on the wire when this uplink starts."""
-        link = self.links[client]
-        t = 0.0
-        if link.drop:
-            if link.drop >= 1.0:
-                raise ValueError("drop=1.0 link can never deliver an uplink")
-            retries = 0
-            while rng.random() < link.drop:
-                t += self.retry_s
-                retries += 1
-                if retries >= max_retries:
-                    raise RuntimeError(f"uplink exceeded {max_retries} retries")
-        jitter = rng.random() * link.jitter_s if link.jitter_s else 0.0
-        wire = nbytes / link.bandwidth_bps
-        if math.isfinite(self.backhaul_bps):
-            wire = max(wire, (nbytes + inflight_bytes) / self.backhaul_bps)
-        return t + link.latency_s + jitter + wire
+        """Virtual seconds until a client's nbytes uplink lands at the server;
+        ``inf`` when the retry budget is exhausted (give-up == drop)."""
+        delivered, t = self.uplink_outcome(
+            rng, client, nbytes, inflight_bytes=inflight_bytes
+        )
+        return t if delivered else math.inf
+
+
+@dataclass
+class CorruptionScenario(Scenario):
+    """Per-kind payload corruption as an erasure channel over ``base``.
+
+    With CRC32 envelope checksums every corrupted frame is rejected and
+    retransmitted; a payload only *disappears* when all ``1 + max_retries``
+    attempts corrupt, i.e. with probability ``rate ** (1 + max_retries)``.
+    This wrapper removes exactly those clients from the base plan's
+    per-kind sets — corruption under a working defense degrades to (rare)
+    loss, which the protocol already tolerates.  ``rates`` maps payload
+    kind (``moments`` / ``w_rf`` / ``classifier``) to the per-frame
+    corruption probability.  Zero rates replay the base scenario exactly,
+    rng stream included.
+    """
+
+    base: Scenario
+    rates: dict[str, float] = field(default_factory=dict)
+    max_retries: int = 8
+
+    def plan(self, rng, n_clients, t) -> RoundPlan:
+        p = self.base.plan(rng, n_clients, t)
+
+        def survive(ids: list[int], kind: str) -> list[int]:
+            rate = self.rates.get(kind, 0.0)
+            if rate <= 0.0:
+                return list(ids)
+            giveup = rate ** (1 + self.max_retries)
+            return [i for i in ids if rng.random() >= giveup]
+
+        return _nest(
+            survive(p.msg_clients, "moments"),
+            survive(p.w_clients, "w_rf"),
+            survive(p.c_clients, "classifier"),
+        )
 
 
 def amortized_interval_bytes(nbytes: int, interval: int) -> float:

@@ -56,6 +56,12 @@ class CommLog:
     messages_by_kind: dict = field(
         default_factory=lambda: {"moments": 0, "w_rf": 0, "classifier": 0}
     )
+    rejects_by_kind: dict = field(
+        default_factory=lambda: {"moments": 0, "w_rf": 0, "classifier": 0}
+    )
+    drops_by_kind: dict = field(
+        default_factory=lambda: {"moments": 0, "w_rf": 0, "classifier": 0}
+    )
 
     @property
     def total(self) -> int:
@@ -65,10 +71,26 @@ class CommLog:
     def bytes_total(self) -> int:
         return sum(self.bytes_by_kind.values())
 
+    @property
+    def rejects_total(self) -> int:
+        return sum(self.rejects_by_kind.values())
+
+    @property
+    def drops_total(self) -> int:
+        return sum(self.drops_by_kind.values())
+
     def record(self, kind: str, n_floats: int, nbytes: int) -> None:
         setattr(self, KIND_FIELD[kind], getattr(self, KIND_FIELD[kind]) + n_floats)
         self.bytes_by_kind[kind] += nbytes
         self.messages_by_kind[kind] += 1
+
+    def reject(self, kind: str) -> None:
+        """One frame failed integrity and was discarded (will retransmit)."""
+        self.rejects_by_kind[kind] += 1
+
+    def drop(self, kind: str) -> None:
+        """One payload was given up on after exhausting its retry budget."""
+        self.drops_by_kind[kind] += 1
 
 
 def resolve_codecs(
@@ -181,21 +203,43 @@ class IdentityTransport(Transport):
 
 
 class WireTransport(Transport):
-    """Serialize -> bytes -> deserialize on every transfer; counts len(bytes)."""
+    """Serialize -> bytes -> deserialize on every transfer; counts len(bytes).
+
+    With a ``fault_injector`` (:class:`repro.robust.ByteFaultInjector`)
+    installed, each frame may be corrupted in flight: the CRC32 envelope
+    check rejects it (typed :class:`~repro.comm.wire.WireDecodeError` —
+    never a crash), the reject is accounted, and the frame is retransmitted
+    up to the injector's ``max_retries``; on give-up :meth:`transfer`
+    returns ``None`` and the payload is accounted as a drop, which the
+    serial round treats exactly like a lost message.
+    """
 
     name = "wire"
     applies_values = True
 
-    def __init__(self, codecs: dict[str, Codec], *, seed: int = 0):
+    def __init__(self, codecs: dict[str, Codec], *, seed: int = 0, fault_injector=None):
         super().__init__(codecs, seed=seed)
         self._delta_refs: dict[tuple[str, str], dict[str, np.ndarray]] = {}
+        self.fault_injector = fault_injector
 
-    def transfer(self, msg: wire.Message) -> dict[str, np.ndarray]:
+    def transfer(self, msg: wire.Message) -> dict[str, np.ndarray] | None:
         codec = self.codecs[msg.kind]
-        data = wire.serialize(msg, codec, rng=self._rng(msg))
-        self.log.record(msg.kind, self._floats_of(msg), len(data))
-        decoded, _ = wire.deserialize(data)
-        return decoded.arrays
+        rng = self._rng(msg)
+        attempts = 1 + (self.fault_injector.max_retries if self.fault_injector else 0)
+        for _ in range(attempts):
+            data = wire.serialize(msg, codec, rng=rng)
+            if self.fault_injector is not None:
+                data = self.fault_injector.corrupt(msg.kind, data)
+            # every attempt crosses the wire: retransmits cost real bytes
+            self.log.record(msg.kind, self._floats_of(msg), len(data))
+            try:
+                decoded, _ = wire.deserialize(data)
+            except wire.WireDecodeError:
+                self.log.reject(msg.kind)
+                continue
+            return decoded.arrays
+        self.log.drop(msg.kind)
+        return None
 
     def transfer_delta(self, msg: wire.Message, *, link: str) -> dict[str, np.ndarray]:
         """Delta-coded transfer for sparsifying codecs (top-k classifier sync).
@@ -222,6 +266,8 @@ class WireTransport(Transport):
             msg.downlink, msg.replay,
         )
         decoded = self.transfer(delta)
+        if decoded is None:  # gave up under fault injection: reference unrolled
+            return None
         recon = {k: ref[k] + decoded[k] for k in decoded}
         self._delta_refs[(msg.kind, link)] = recon
         return recon

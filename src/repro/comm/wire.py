@@ -29,10 +29,18 @@ Layout (little-endian)::
       ndim     u8, dims u32 * ndim
       dtype    u8   (logical/decoded dtype)
       plen     u32, payload bytes (codec-specific)
+    crc     u32  CRC32 of everything above (integrity trailer, version 2)
+
+Integrity: every frame ends in a CRC32 of the preceding bytes.  A frame that
+was bit-flipped, truncated, or replaced in flight fails the check and
+:func:`deserialize` raises the typed :class:`WireDecodeError` — transports
+reject-and-account (then retransmit) instead of crashing on a raw
+``struct.error`` deep inside the parser.
 """
 from __future__ import annotations
 
 import struct
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -41,12 +49,19 @@ from repro.comm import codecs as codecs_mod
 from repro.comm.codecs import Codec, codec_from_wire_id, dtype_id
 
 MAGIC = b"RFTC"
-VERSION = 1
+VERSION = 2  # version 1 + CRC32 integrity trailer
 
 KINDS = ("moments", "w_rf", "classifier")
 _KIND_IDS = {k: i for i, k in enumerate(KINDS)}
 
 _HEADER = struct.Struct("<4sBBBBhIB")
+_CRC = struct.Struct("<I")
+
+
+class WireDecodeError(ValueError):
+    """A frame that cannot be decoded: bad checksum, truncated or garbage
+    bytes, unknown magic/version/codec.  Subclasses ValueError so legacy
+    ``except ValueError`` call sites keep working."""
 
 
 @dataclass
@@ -118,38 +133,59 @@ def serialize(msg: Message, codec: Codec, *, rng=None) -> bytes:
         payload = codec.encode(arr, rng=rng, replay=msg.replay)
         out.append(_array_header(name, arr.shape, arr.dtype, len(payload)))
         out.append(payload)
-    return b"".join(out)
+    body = b"".join(out)
+    return body + _CRC.pack(zlib.crc32(body) & 0xFFFFFFFF)
 
 
 def deserialize(data: bytes) -> tuple[Message, Codec]:
-    """Parse wire bytes -> (Message with decoded arrays, codec used)."""
+    """Parse wire bytes -> (Message with decoded arrays, codec used).
+
+    Raises :class:`WireDecodeError` on any malformed frame — checksum
+    mismatch, truncation, unknown magic/version/codec, trailing garbage.
+    """
+    try:
+        return _parse(data)
+    except WireDecodeError:
+        raise
+    except (struct.error, ValueError, KeyError, IndexError, UnicodeDecodeError) as e:
+        raise WireDecodeError(f"malformed frame ({len(data)} bytes): {e}") from e
+
+
+def _parse(data: bytes) -> tuple[Message, Codec]:
+    if len(data) < _HEADER.size + _CRC.size:
+        raise WireDecodeError(f"frame too short: {len(data)} bytes")
+    body, (crc,) = data[: -_CRC.size], _CRC.unpack_from(data, len(data) - _CRC.size)
+    if zlib.crc32(body) & 0xFFFFFFFF != crc:
+        raise WireDecodeError("checksum mismatch")
     magic, version, kind_id, codec_id, flags, sender, rnd, n_arr = _HEADER.unpack_from(
-        data, 0
+        body, 0
     )
     if magic != MAGIC:
-        raise ValueError(f"bad magic {magic!r}")
+        raise WireDecodeError(f"bad magic {magic!r}")
     if version != VERSION:
-        raise ValueError(f"wire version {version} != {VERSION}")
+        raise WireDecodeError(f"wire version {version} != {VERSION}")
     codec = codec_from_wire_id(codec_id)
     off = _HEADER.size
     arrays: dict[str, np.ndarray] = {}
     for _ in range(n_arr):
-        (name_len,) = struct.unpack_from("<B", data, off)
+        (name_len,) = struct.unpack_from("<B", body, off)
         off += 1
-        name = data[off : off + name_len].decode("ascii")
+        name = body[off : off + name_len].decode("ascii")
         off += name_len
-        (ndim,) = struct.unpack_from("<B", data, off)
+        (ndim,) = struct.unpack_from("<B", body, off)
         off += 1
-        shape = struct.unpack_from(f"<{ndim}I", data, off)
+        shape = struct.unpack_from(f"<{ndim}I", body, off)
         off += 4 * ndim
-        dt_id, plen = struct.unpack_from("<BI", data, off)
+        dt_id, plen = struct.unpack_from("<BI", body, off)
         off += 5
         arrays[name] = codec.decode(
-            data[off : off + plen], tuple(shape), codecs_mod.DTYPE_CODES[dt_id]
+            body[off : off + plen], tuple(shape), codecs_mod.DTYPE_CODES[dt_id]
         )
         off += plen
-    if off != len(data):
-        raise ValueError(f"trailing bytes: parsed {off} of {len(data)}")
+    if off != len(body):
+        raise WireDecodeError(f"trailing bytes: parsed {off} of {len(body)}")
+    if kind_id >= len(KINDS):
+        raise WireDecodeError(f"unknown kind id {kind_id}")
     msg = Message(KINDS[kind_id], sender, rnd, arrays, bool(flags & 1))
     return msg, codec
 
@@ -158,7 +194,7 @@ def serialized_size(
     kind: str, specs: dict[str, tuple[tuple[int, ...], np.dtype]], codec: Codec
 ) -> int:
     """Analytic ``len(serialize(...))`` from shapes alone (no data needed)."""
-    total = _HEADER.size
+    total = _HEADER.size + _CRC.size
     for name, (shape, dtype) in specs.items():
         total += 1 + len(name) + 1 + 4 * len(shape) + 5 + codec.nbytes(shape, dtype)
     return total

@@ -102,12 +102,54 @@ def normalize_unit(x: np.ndarray) -> np.ndarray:
     return x / (np.linalg.norm(x, axis=0, keepdims=True) + 1e-12)
 
 
+class BatchStream:
+    """Infinite shuffled minibatch stream over columns of x.
+
+    Same draw sequence as the generator it replaced (one permutation per
+    epoch, consecutive ``batch_size`` slices while a full batch fits), but
+    with *capturable* state: :meth:`state` returns a JSON-serializable dict
+    and :meth:`set_state` rewinds the stream exactly — the checkpoint
+    machinery's requirement for bitwise save -> restore -> continue.  State
+    is compact: the rng state captured *before* each permutation draw plus
+    the position in it, so restore re-draws the identical permutation
+    instead of serializing index arrays.
+    """
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, batch_size: int, seed: int = 0):
+        self.x, self.y = x, y
+        self.batch_size = int(batch_size)
+        self.n = x.shape[1]
+        if not 0 < self.batch_size <= self.n:
+            # the old generator would silently spin forever on batch > n
+            raise ValueError(f"batch_size {batch_size} not in [1, {self.n}]")
+        self.rng = np.random.default_rng(seed)
+        self._new_epoch()
+
+    def _new_epoch(self) -> None:
+        self._perm_state = self.rng.bit_generator.state
+        self._perm = self.rng.permutation(self.n)
+        self._i = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._i + self.batch_size > self.n:
+            self._new_epoch()
+        idx = self._perm[self._i : self._i + self.batch_size]
+        self._i += self.batch_size
+        return self.x[:, idx], self.y[idx]
+
+    def state(self) -> dict:
+        return {"perm_state": self._perm_state, "i": self._i}
+
+    def set_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["perm_state"]
+        self._new_epoch()
+        self._i = int(state["i"])
+
+
 def batches(x: np.ndarray, y: np.ndarray, batch_size: int, seed: int = 0):
-    """Infinite shuffled minibatch generator over columns of x."""
-    rng = np.random.default_rng(seed)
-    n = x.shape[1]
-    while True:
-        perm = rng.permutation(n)
-        for i in range(0, n - batch_size + 1, batch_size):
-            idx = perm[i : i + batch_size]
-            yield x[:, idx], y[idx]
+    """Infinite shuffled minibatch stream over columns of x (a
+    :class:`BatchStream`; kept as the seed-era constructor name)."""
+    return BatchStream(x, y, batch_size, seed=seed)

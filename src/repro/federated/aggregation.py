@@ -16,6 +16,13 @@ clients, so it splits associatively across an edge tier.
 and the async flush route through when a ``repro.fleet.Topology`` is
 configured — the Pallas segment-reduce kernel on TPU, its XLA twin (the same
 membership-matrix contraction) elsewhere.
+
+Robust aggregation: every merge here is a weighted sum, and *which* weighted
+sum is now pluggable — :class:`repro.robust.rules.AggregationRule` (norm-clip,
+coordinate trimmed-mean, geometric-median, finite-guard quarantine) slots into
+the same in-graph merge points via ``ProtocolConfig.rule``.  The rule types
+are re-exported here so aggregation stays the one import site for merge
+policy.
 """
 from __future__ import annotations
 
@@ -23,6 +30,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.robust.rules import (  # noqa: F401  (re-export seam)
+    AggregationRule,
+    FiniteMeanRule,
+    GeoMedianRule,
+    MeanRule,
+    NormClipRule,
+    TrimmedMeanRule,
+    get_rule,
+    rule_names,
+)
 from repro.utils.tree import tree_mean, tree_weighted_mean
 
 STALENESS_MODES = ("constant", "polynomial", "auto")

@@ -62,6 +62,9 @@ from repro.federated.model import ClientConfig, client_message, source_loss, tar
 from repro.fleet import hierarchy
 from repro.fleet.sharding import chunked_vmap
 from repro.optim import apply_updates
+from repro.robust.rules import MeanRule
+
+_MASS_EPS = 1e-12
 
 
 def stack_trees(trees: list):
@@ -96,6 +99,8 @@ class BatchedRoundEngine:
         topology=None,
         edge_channel: dict | None = None,
         client_chunk: int | None = None,
+        rule=None,
+        faults=None,
     ):
         """``freeze_w_rf`` pins W_RF at its (shared, seed-derived) init:
         gradients through it are stopped and W-aggregation is skipped, so all
@@ -113,8 +118,21 @@ class BatchedRoundEngine:
         ``edge_channel`` the tier-2 codec twins distorting the edge uplinks;
         ``client_chunk`` runs the per-client local-step vmap ``chunk`` rows
         at a time so the working set is O(chunk), not O(K).
+
+        Robustness: ``rule`` (a :class:`repro.robust.AggregationRule`,
+        default the seed's exact :class:`~repro.robust.rules.MeanRule`) owns
+        every weighted merge — Sigma-ell moments into the target loss, W_RF,
+        classifier leaves, and (two-tier) the server-side combine over edge
+        partial means — all in-graph, so the round/flush stay one compiled
+        dispatch.  ``faults`` (a :class:`repro.robust.FaultPlan`, or None)
+        injects value-level payload corruption and Byzantine crafted uplinks
+        into the stacked client payloads after the channel — the undefended
+        attack surface the robust rules are measured against.  Both default
+        to the bit-exact fault-free seed program.
         """
         self.cfg, self.opt, self.omega = cfg, opt, omega
+        self.rule = rule if rule is not None else MeanRule()
+        self.faults = faults
         self.exchange_messages = exchange_messages
         self.aggregate_w_rf = aggregate_w_rf
         self.aggregate_classifier = aggregate_classifier
@@ -210,14 +228,20 @@ class BatchedRoundEngine:
         if chan_m is not None:
             keys = jax.random.split(jax.random.fold_in(chan_key, 1), k_clients)
             msgs = jax.vmap(chan_m)(msgs, keys)
+        if self.faults is not None:
+            msgs = self.faults.apply("moments", msgs, jax.random.fold_in(chan_key, 7))
         return msgs
 
     def _merge_msgs(self, msgs, weights, chan_key):
-        """What the target trains on: (msgs, weights) unchanged in the flat
-        plane; per-edge pooled moments + masses in the two-tier plane."""
+        """What the target trains on.  Flat plane: the rule's moment merge —
+        (msgs, weights) unchanged for the mean (the seed's per-pair MMD),
+        the single robust pooled moment row otherwise.  Two-tier plane:
+        per-edge pooled moments + masses, robustly re-merged over edges when
+        the rule is not the mean (an adversarial *edge* is then one outlier
+        row, exactly like an adversarial client in the flat plane)."""
         if self._seg_ids is None:
-            return msgs, weights
-        return hierarchy.edge_moment_merge(
+            return self.rule.merge_moments(msgs, weights)
+        pooled, masses = hierarchy.edge_moment_merge(
             msgs,
             weights,
             self._seg_ids,
@@ -225,6 +249,7 @@ class BatchedRoundEngine:
             self.edge_channel.get("moments"),
             jax.random.fold_in(chan_key, 4),
         )
+        return self.rule.merge_moments(pooled, masses)
 
     def _target_scan(self, tgt_p, tgt_o, xt_steps, msgs, weights, any_gate):
         """Alg. 3 local target steps on the merged source moments; a no-op
@@ -247,6 +272,18 @@ class BatchedRoundEngine:
         tgt_o = tree_where(any_gate, new_tgt_o, tgt_o)
         return tgt_p, tgt_o
 
+    def _server_merge(self, sums, masses):
+        """Tier-2 combine of per-edge (weighted sum, mass) partials.  For the
+        mean rule this is the pure reassociation ``(sum sums, sum masses)``
+        (bitwise the flat contraction's value up to reassociation — pinned by
+        the fleet equivalence tests).  Robust rules instead treat the edge
+        partial *means* as K'=E rows: a poisoned edge is one outlier."""
+        if self.rule.is_mean:
+            return hierarchy.server_combine(sums, masses)
+        shaped = masses.reshape((-1,) + (1,) * (sums.ndim - 1))
+        rows = sums / jnp.maximum(shaped, _MASS_EPS)
+        return self.rule.weighted_sum(rows, masses)
+
     def _merge_w_rf(self, src_p, tgt_p, sel, wsel, chan_key):
         """Weighted W_RF merge over participants + the target (Alg. 4)."""
         k_clients = sel.shape[0]
@@ -257,8 +294,11 @@ class BatchedRoundEngine:
             keys = jax.random.split(jax.random.fold_in(chan_key, 2), k_clients + 1)
             w_up = jax.vmap(chan_w)(w_up, keys[:k_clients])
             w_tgt_up = chan_w(w_tgt_up, keys[k_clients])
+        if self.faults is not None:
+            w_up = self.faults.apply("w_rf", w_up, jax.random.fold_in(chan_key, 8))
         if self._seg_ids is None:
-            w_sum, mass = jnp.einsum("k,kij->ij", wsel, w_up), jnp.sum(wsel)
+            # rule-owned contraction; MeanRule is the seed einsum bit-for-bit
+            w_sum, mass = self.rule.weighted_sum(w_up, wsel)
         else:
             sums, masses = hierarchy.edge_param_merge(
                 w_up,
@@ -268,7 +308,7 @@ class BatchedRoundEngine:
                 self.edge_channel.get("w_rf"),
                 jax.random.fold_in(chan_key, 5),
             )
-            w_sum, mass = hierarchy.server_combine(sums, masses)
+            w_sum, mass = self._server_merge(sums, masses)
         w_avg = (w_sum + w_tgt_up) / (mass + 1.0)
         src_p["w_rf"] = jnp.where(
             (sel > 0)[:, None, None] & have_w, w_avg[None], src_p["w_rf"]
@@ -294,12 +334,21 @@ class BatchedRoundEngine:
                     for i, leaf in enumerate(leaves)
                 ],
             )
-        if self._seg_ids is None:
-            denom = jnp.maximum(jnp.sum(wsel), floor)
-            c_avg = jax.tree_util.tree_map(
-                lambda leaf: jnp.tensordot(wsel, leaf, axes=1) / denom,
-                clf_up,
+        if self.faults is not None:
+            # one fault key per merge: the same clients corrupt in every
+            # classifier leaf (w and b travel in one message)
+            kf = jax.random.fold_in(chan_key, 9)
+            clf_up = jax.tree_util.tree_map(
+                lambda leaf: self.faults.apply("classifier", leaf, kf), clf_up
             )
+        if self._seg_ids is None:
+
+            def leaf_avg(leaf):
+                # rule-owned contraction; MeanRule == the seed tensordot/denom
+                s, m = self.rule.weighted_sum(leaf, wsel)
+                return s / jnp.maximum(m, floor)
+
+            c_avg = jax.tree_util.tree_map(leaf_avg, clf_up)
         else:
             chan_ce = self.edge_channel.get("classifier")
             kbase_e = jax.random.fold_in(chan_key, 6)
@@ -314,7 +363,7 @@ class BatchedRoundEngine:
                     chan_ce,
                     jax.random.fold_in(kbase_e, i),
                 )
-                c_sum, mass = hierarchy.server_combine(sums, masses)
+                c_sum, mass = self._server_merge(sums, masses)
                 merged.append(c_sum / jnp.maximum(mass, floor))
             c_avg = jax.tree_util.tree_unflatten(treedef, merged)
         assign = (sel > 0) & have_c

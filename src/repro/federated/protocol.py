@@ -65,6 +65,8 @@ working set (O(chunk) activations) for K in the thousands.
 """
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass
 from typing import Any
 
@@ -72,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.comm import autocodec, netsim, transport as comm_transport, wire
 from repro.comm.transport import CommLog  # noqa: F401  (seed-era import path)
 from repro.data.domains import Domain, batches
@@ -89,6 +92,7 @@ from repro.federated.model import (
     w_rf_key,
 )
 from repro.optim import adam, apply_updates
+from repro.robust import ByteFaultInjector, build_fault_plan, get_rule
 from repro.utils.tree import tree_mean
 
 
@@ -134,6 +138,21 @@ class ProtocolConfig:
     # runs chunk rows at a time (O(chunk) live activations instead of O(K));
     # bitwise-equal to the unchunked program.
     client_chunk: int | None = None
+    # -- robustness (repro.robust) -------------------------------------------
+    # ``rule``: aggregation rule spec — "mean" | "finite_mean" |
+    # "norm_clip[:c]" | "trimmed_mean[:b]" | "geomedian[:iters]" or an
+    # AggregationRule instance — owning every weighted merge in the batched
+    # engine (in-graph).  "mean" is bit-for-bit the seed pipeline; robust
+    # rules need the batched engine.
+    rule: Any = "mean"
+    # ``faults``: a repro.robust.FaultConfig.  Batched plane: in-graph
+    # value-level payload corruption + Byzantine crafted uplinks (what robust
+    # rules defend).  Serial wire plane: byte-level frame corruption — the
+    # CRC32 envelope checksum rejects each corrupted frame (typed
+    # WireDecodeError, never a crash), retransmits, and reports give-up as a
+    # drop.  None (or an all-zero config) compiles the exact fault-free
+    # program, bit-for-bit.
+    faults: Any = None
     seed: int = 0
 
 
@@ -191,6 +210,19 @@ class FedRFTCATrainer:
         self.sources, self.target = sources, target
         self.cfg, self.proto = cfg, proto
         self.k = len(sources)
+        self.rule = get_rule(proto.rule)
+        self._fault_plan = build_fault_plan(proto.faults, self.k)
+        if engine != "batched":
+            if not self.rule.is_mean:
+                raise ValueError(
+                    f"rule={self.rule.name!r} runs in-graph and needs the "
+                    "batched engine"
+                )
+            if self._fault_plan is not None and proto.transport != "wire":
+                raise ValueError(
+                    "serial fault injection corrupts real frames and needs "
+                    "transport='wire'; value-level faults need the batched engine"
+                )
         self.topology = proto.topology
         if self.topology is not None:
             if engine != "batched":
@@ -215,6 +247,10 @@ class FedRFTCATrainer:
             codec_w_rf=proto.codec_w_rf,
             codec_classifier=proto.codec_classifier,
         )
+        if self._fault_plan is not None and engine != "batched":
+            # serial wire plane: faults are byte corruption on real frames,
+            # defended by the CRC32 checksum + retransmit path
+            self.transport.fault_injector = ByteFaultInjector.from_config(proto.faults)
         self.scenario = proto.scenario or netsim.TableIIIScenario(proto.drop_setting)
         self._frozen_w = self.transport.frozen_w
         # exact wire shapes of the three payload kinds (for analytic accounting
@@ -325,6 +361,8 @@ class FedRFTCATrainer:
                     self.edge_transport.channel_fns() if self.edge_transport else None
                 ),
                 client_chunk=proto.client_chunk,
+                rule=self.rule,
+                faults=self._fault_plan,
             )
             self._src_stack = stack_trees(src_params)
             self._src_opt_stack = jax.vmap(self.opt.init)(self._src_stack)
@@ -594,6 +632,72 @@ class FedRFTCATrainer:
             self.client_versions[list(plan.w_clients)] = self.model_version
         return {"plan": plan}
 
+    # ---- checkpoint / restore (repro.checkpoint wired into the trainer) ------
+    def _array_state(self):
+        """The array half of the trainer state as one checkpointable pytree."""
+        tree = {
+            "tgt_params": self.tgt_params,
+            "tgt_opt": self.tgt_opt,
+            "client_versions": self.client_versions,
+        }
+        if self._engine is not None:
+            tree["src"] = {"params": self._src_stack, "opt": self._src_opt_stack}
+        else:
+            tree["src"] = {"params": self.src_params, "opt": self.src_opt}
+        return tree
+
+    def _iterators(self):
+        return [*self.src_iters, self.tgt_iter, *self._msg_iters, self._tgt_msg_iter]
+
+    def save_state(self, path: str, *, step: int | None = None, keep: int = 3) -> str:
+        """Checkpoint the complete trainer state through ``repro.checkpoint``.
+
+        Arrays (client/target params + optimizer states + version tags) go
+        into the atomic npz checkpoint; the host-side randomness — the
+        scenario rng and every batch-iterator state — goes into a
+        ``<ckpt>.host.json`` sidecar, so a restored trainer replays the
+        *exact* trajectory it would have produced (save -> restore ->
+        continue is bitwise; test-gated).  With ``step`` the path is treated
+        as a checkpoint directory (``step_<n>.npz``, ``keep`` most recent
+        retained); returns the written npz path."""
+        target = ckpt.save(path, self._array_state(), step=step, keep=keep)
+        host = {
+            "rng": self.rng.bit_generator.state,
+            "iters": [it.state() for it in self._iterators()],
+            "model_version": int(self.model_version),
+        }
+        with open(target + ".host.json", "w") as f:
+            json.dump(host, f)
+        return target
+
+    def restore_state(self, path: str) -> None:
+        """Inverse of :meth:`save_state` (accepts the npz path or a checkpoint
+        directory — restores the latest step).  Comm accounting is
+        deliberately NOT rolled back: bytes that crossed the wire before a
+        crash were really spent, and recovery replays (and re-pays) the
+        rounds since the last checkpoint."""
+        if os.path.isdir(path):
+            found = ckpt.latest(path)
+            if found is None:
+                raise FileNotFoundError(f"no checkpoints in {path}")
+            path = found
+        tree = ckpt.restore(path, self._array_state())
+        self.tgt_params = tree["tgt_params"]
+        self.tgt_opt = tree["tgt_opt"]
+        self.client_versions = np.asarray(tree["client_versions"])
+        if self._engine is not None:
+            self._src_stack = tree["src"]["params"]
+            self._src_opt_stack = tree["src"]["opt"]
+        else:
+            self.src_params = tree["src"]["params"]
+            self.src_opt = tree["src"]["opt"]
+        with open(path + ".host.json") as f:
+            host = json.load(f)
+        self.rng.bit_generator.state = host["rng"]
+        for it, st in zip(self._iterators(), host["iters"], strict=True):
+            it.set_state(st)
+        self.model_version = int(host["model_version"])
+
     def _round_batched(self, t: int, plan: network.RoundPlan) -> None:
         batch = self._round_batch()
         masks = {
@@ -624,15 +728,22 @@ class FedRFTCATrainer:
         # decoded (possibly codec-distorted) arrays flow back into training
         wiretx = self.transport if self.transport.applies_values else None
 
-        # target broadcasts its message to sources in S_t
+        # target broadcasts its message to sources in S_t.  Under byte-level
+        # fault injection any transfer may give up after its retry budget
+        # (None): a lost downlink degrades sources to plain CE steps, a lost
+        # uplink is simply a message that never arrived — reject-and-account,
+        # never a crash.
         xt, _ = next(self._tgt_msg_iter)
         tgt_msg = self._msg_of(self.tgt_params, jnp.asarray(xt), -1.0)
+        downlink_ok = True
         if wiretx and proto.exchange_messages and plan.msg_clients:
-            tgt_msg = jnp.asarray(
-                wiretx.transfer(
-                    wire.moments_message(tgt_msg, sender=-1, round=t, downlink=True)
-                )["msg"]
+            arrs = wiretx.transfer(
+                wire.moments_message(tgt_msg, sender=-1, round=t, downlink=True)
             )
+            if arrs is None:
+                downlink_ok = False
+            else:
+                tgt_msg = jnp.asarray(arrs["msg"])
 
         # local source training (Alg. 2)
         src_msgs = {}
@@ -640,7 +751,7 @@ class FedRFTCATrainer:
             for _ in range(proto.local_steps):
                 x, y = next(self.src_iters[i])
                 x, y = jnp.asarray(x), jnp.asarray(y)
-                if proto.exchange_messages and i in plan.msg_clients:
+                if proto.exchange_messages and i in plan.msg_clients and downlink_ok:
                     self.src_params[i], self.src_opt[i], aux = self._src_step_mmd(
                         self.src_params[i], self.src_opt[i], x, y, tgt_msg
                     )
@@ -652,9 +763,10 @@ class FedRFTCATrainer:
                 xm, _ = next(self._msg_iters[i])
                 msg = self._msg_of(self.src_params[i], jnp.asarray(xm), +1.0)
                 if wiretx:
-                    msg = jnp.asarray(
-                        wiretx.transfer(wire.moments_message(msg, sender=i, round=t))["msg"]
-                    )
+                    arrs = wiretx.transfer(wire.moments_message(msg, sender=i, round=t))
+                    if arrs is None:
+                        continue  # retry budget exhausted: an undelivered uplink
+                    msg = jnp.asarray(arrs["msg"])
                 src_msgs[i] = msg
 
         # local target training (Alg. 3)
@@ -681,26 +793,30 @@ class FedRFTCATrainer:
                             self._w_init, sender=plan.w_clients[0], round=t,
                             replay=("w_rf_init", self._w_key_data),
                         )
-                    )["w_rf"]
+                    )
                     wiretx.account_spec(
                         "w_rf", self._specs["w_rf"], count=len(plan.w_clients)
                     )
-                    self.tgt_params["w_rf"] = jnp.asarray(decoded)
+                    if decoded is not None:
+                        self.tgt_params["w_rf"] = jnp.asarray(decoded["w_rf"])
             elif wiretx:
-                ws = [
-                    wiretx.transfer(
-                        wire.w_rf_message(self.src_params[i]["w_rf"], sender=i, round=t)
-                    )["w_rf"]
-                    for i in plan.w_clients
-                ] + [
-                    wiretx.transfer(
-                        wire.w_rf_message(self.tgt_params["w_rf"], sender=-1, round=t)
-                    )["w_rf"]
-                ]
-                w_rf = jnp.asarray(tree_mean(ws))
+                ws = []
                 for i in plan.w_clients:
-                    self.src_params[i]["w_rf"] = w_rf
-                self.tgt_params["w_rf"] = w_rf
+                    arrs = wiretx.transfer(
+                        wire.w_rf_message(self.src_params[i]["w_rf"], sender=i, round=t)
+                    )
+                    if arrs is not None:
+                        ws.append(arrs["w_rf"])
+                arrs = wiretx.transfer(
+                    wire.w_rf_message(self.tgt_params["w_rf"], sender=-1, round=t)
+                )
+                if arrs is not None:
+                    ws.append(arrs["w_rf"])
+                if ws:
+                    w_rf = jnp.asarray(tree_mean(ws))
+                    for i in plan.w_clients:
+                        self.src_params[i]["w_rf"] = w_rf
+                    self.tgt_params["w_rf"] = w_rf
             else:
                 w_rf = aggregation.fedavg_w_rf(
                     self.src_params, self.tgt_params, plan.w_clients
@@ -720,12 +836,14 @@ class FedRFTCATrainer:
                     )
                     for i in plan.c_clients
                 ]
-                clf = jax.tree_util.tree_map(jnp.asarray, tree_mean(clfs))
+                clfs = [c for c in clfs if c is not None]  # give-ups: lost uplinks
+                clf = jax.tree_util.tree_map(jnp.asarray, tree_mean(clfs)) if clfs else None
             else:
                 clf = aggregation.fedavg_classifier(self.src_params, plan.c_clients)
-            for i in plan.c_clients:
-                self.src_params[i]["classifier"] = clf
-            self.tgt_params["classifier"] = clf
+            if clf is not None:
+                for i in plan.c_clients:
+                    self.src_params[i]["classifier"] = clf
+                self.tgt_params["classifier"] = clf
 
     def train(self, eval_every: int = 0) -> list[float]:
         accs = []

@@ -22,9 +22,12 @@ from repro.fedsim.events import (
     ClientDeparted,
     ClientJoined,
     ClientUpdateArrived,
+    EdgeCrashed,
     EdgeUplinkArrived,
     EvalTick,
     Event,
+    ServerCrashed,
     SyncBarrier,
+    UplinkGaveUp,
 )
 from repro.fedsim.runtime import AsyncConfig, AsyncScheduler, SyncScheduler

@@ -22,6 +22,24 @@ Four event kinds cover the whole asynchronous protocol:
   eval_interval``): accuracy-vs-virtual-time curves get points at a fixed
   cadence instead of only at flush boundaries.
 
+Fault-plane events (the robustness layer):
+
+- :class:`UplinkGaveUp` — ``netsim.uplink_outcome`` exhausted its retry
+  budget: the client's update is *lost* (a reported drop, not an infinite
+  retransmit loop) and the scheduler re-dispatches it fresh.  Carries the
+  same (version, epoch) tags as an arrival so a churned/superseded give-up
+  is orphaned identically.
+- :class:`ServerCrashed` — the server process dies at a scheduled virtual
+  time.  The scheduler restores the last checkpoint
+  (``FedRFTCATrainer.restore_state``), rolls its version/flush counters back
+  to the checkpoint's, orphans everything in flight, and re-dispatches the
+  live cohort after ``restart_delay_s`` — replay from there is
+  deterministic.
+- :class:`EdgeCrashed` — one edge aggregator dies: its buffered updates and
+  any merged uplink it has on the backhaul are lost; the affected clients
+  re-dispatch after the restart delay.  No server state is lost, so no
+  rollback.
+
 Events hold only host-side bookkeeping (ints/floats); array payloads stay in
 the scheduler's pending tables so the heap never compares jax values.
 """
@@ -67,3 +85,23 @@ class EdgeUplinkArrived(Event):
 @dataclass(frozen=True)
 class EvalTick(Event):
     index: int
+
+
+@dataclass(frozen=True)
+class UplinkGaveUp(Event):
+    client: int
+    version: int  # server model version the client was dispatched from
+    epoch: int  # availability epoch at dispatch (orphaned on mismatch)
+    dispatched_at: float
+
+
+@dataclass(frozen=True)
+class ServerCrashed(Event):
+    """Scheduled server failure: restore last checkpoint, replay."""
+
+
+@dataclass(frozen=True)
+class EdgeCrashed(Event):
+    """Scheduled edge-aggregator failure: its buffer + backhaul uplink lost."""
+
+    edge: int

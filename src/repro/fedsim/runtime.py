@@ -33,6 +33,17 @@ T_C-interval classifier payload is amortized into every uplink's wire bytes
 (``netsim.amortized_interval_bytes``), so interval syncs count toward wire
 time and backhaul contention too.
 
+Fault plane (the robustness layer): uplinks now ride
+``netsim.uplink_outcome`` — a retry budget with exponential backoff instead
+of an unbounded retransmit loop — so a hopeless link *gives up*
+(:class:`UplinkGaveUp`) and the client re-dispatches fresh.  Scheduled
+:class:`ServerCrashed` events restore the trainer's last checkpoint
+(``checkpoint/ckpt.py`` via ``FedRFTCATrainer.save_state`` /
+``restore_state``, written every ``AsyncConfig.checkpoint_interval_s``
+virtual seconds) and replay deterministically; :class:`EdgeCrashed` events
+lose one edge's buffer and in-flight backhaul uplinks without touching
+server state.
+
 Fleet scale: when the trainer carries a ``repro.fleet.Topology``, the
 :class:`AsyncScheduler` keeps one buffer *per edge* — an edge flushes when
 its own buffer fills, merges it, and (with ``edge_links``) ships one uplink
@@ -43,6 +54,8 @@ curves independent of the flush schedule.
 """
 from __future__ import annotations
 
+import math
+import tempfile
 from dataclasses import dataclass
 from typing import Any
 
@@ -60,9 +73,12 @@ from repro.fedsim.events import (
     ClientDeparted,
     ClientJoined,
     ClientUpdateArrived,
+    EdgeCrashed,
     EdgeUplinkArrived,
     EvalTick,
+    ServerCrashed,
     SyncBarrier,
+    UplinkGaveUp,
 )
 
 
@@ -137,6 +153,14 @@ class AsyncConfig:
     (edges flush their own buffers).  ``eval_interval`` adds time-triggered
     :class:`EvalTick` events every that-many virtual seconds, so
     accuracy-vs-virtual-time curves are dense instead of flush-aligned.
+
+    Fault plane: ``server_crash_times`` / ``edge_crash_times`` schedule
+    :class:`ServerCrashed` / :class:`EdgeCrashed` events at fixed virtual
+    times (edge crashes are ``(time, edge)`` pairs).  A server crash restores
+    the last checkpoint — written every ``checkpoint_interval_s`` virtual
+    seconds (flush-aligned) into ``ckpt_dir`` (a temp dir when None) — and
+    re-dispatches the live cohort after ``restart_delay_s``; replay from the
+    checkpoint is deterministic, so two identical runs stay bitwise equal.
     """
 
     buffer_size: int = 2
@@ -144,6 +168,12 @@ class AsyncConfig:
     compute_s: Any = 1.0  # per-client local-training seconds (scalar or (K,))
     eval_interval: float | None = None  # virtual seconds between EvalTicks
     seed: int = 0
+    # -- fault plane --------------------------------------------------------
+    server_crash_times: tuple = ()  # virtual times of ServerCrashed events
+    edge_crash_times: tuple = ()  # (time, edge) pairs of EdgeCrashed events
+    restart_delay_s: float = 1.0  # crash -> first re-dispatch delay
+    checkpoint_interval_s: float | None = None  # virtual s between checkpoints
+    ckpt_dir: str | None = None  # checkpoint directory (temp dir when None)
 
 
 class SyncScheduler(_SchedulerBase):
@@ -179,9 +209,12 @@ class SyncScheduler(_SchedulerBase):
         if np.isfinite(self.links.deadline_s):
             return float(self.links.deadline_s)  # the barrier waits out the deadline
         nbytes = self._uplink_nbytes()
+        # a gave-up uplink (inf) is a straggler LOST to the round, not one
+        # the barrier waits forever for
         times = [
-            self.compute_s[i] + self.links.uplink_time(self.rng, i, nbytes)
+            t
             for i in plan.msg_clients
+            if math.isfinite(t := self.compute_s[i] + self.links.uplink_time(self.rng, i, nbytes))
         ]
         return max(times, default=self.round_s)
 
@@ -259,6 +292,21 @@ class AsyncScheduler(_SchedulerBase):
                 )
         if cfg.eval_interval is not None and cfg.eval_interval <= 0:
             raise ValueError(f"eval_interval must be > 0, got {cfg.eval_interval}")
+        if cfg.checkpoint_interval_s is not None and cfg.checkpoint_interval_s <= 0:
+            raise ValueError(
+                f"checkpoint_interval_s must be > 0, got {cfg.checkpoint_interval_s}"
+            )
+        if cfg.restart_delay_s < 0:
+            raise ValueError(f"restart_delay_s must be >= 0, got {cfg.restart_delay_s}")
+        n_edges = topo.n_edges if topo is not None else 1
+        for item in cfg.edge_crash_times:
+            ct, e = item
+            if not 0 <= int(e) < n_edges:
+                raise ValueError(f"edge crash {item}: edge id out of range [0, {n_edges})")
+            if ct < 0:
+                raise ValueError(f"edge crash {item}: time must be >= 0")
+        if any(ct < 0 for ct in cfg.server_crash_times):
+            raise ValueError(f"server crash times must be >= 0: {cfg.server_crash_times}")
         aggregation.staleness_weights(np.zeros(1), cfg.staleness)  # validate mode early
         super().__init__(
             trainer,
@@ -281,10 +329,18 @@ class AsyncScheduler(_SchedulerBase):
         self.buffers: dict[int, list[dict]] = {e: [] for e in range(self._n_edges)}
         self.edge_links = edge_links
         self._edge_seq = 0
-        self._edge_uplinks: dict[int, list[dict]] = {}  # seq -> merged entries
+        # seq -> (edge, merged entries): the edge id is kept so an EdgeCrashed
+        # event can cancel that edge's in-flight backhaul uplinks
+        self._edge_uplinks: dict[int, tuple[int, list[dict]]] = {}
         self._edge_inflight: list[tuple[float, float]] = []  # backhaul (finish, bytes)
         self._inflight: list[tuple[float, float]] = []  # (finish_time, bytes) uplinks
         self._n_k = np.array([d.x.shape[1] for d in trainer.sources], dtype=np.int64)
+        # -- fault plane: give-up accounting + crash/checkpoint state ---------
+        self.giveups = 0  # uplinks lost to exhausted retry budgets
+        self.recoveries: list[dict[str, Any]] = []  # one row per server recovery
+        self._ckpt_dir = cfg.ckpt_dir
+        self._ckpt_meta: dict[str, Any] | None = None  # {"t", "flushes"} of last ckpt
+        self._next_ckpt: float | None = None
 
     def _edge_of(self, client: int) -> int:
         return self.topology.edge_of(client) if self.topology is not None else 0
@@ -317,22 +373,32 @@ class AsyncScheduler(_SchedulerBase):
                 "x_msg": x_msg,
                 "tgt_msg": tgt_msg,
             }
-            arrival = t + self._completion_delay(i, t)
-            self.queue.push(
-                arrival, ClientUpdateArrived(i, self.version, int(self.epoch[i]), t)
+            delivered, delay = self._completion_delay(i, t)
+            ev = (
+                ClientUpdateArrived(i, self.version, int(self.epoch[i]), t)
+                if delivered
+                else UplinkGaveUp(i, self.version, int(self.epoch[i]), t)
             )
+            self.queue.push(t + delay, ev)
 
-    def _completion_delay(self, i: int, t: float) -> float:
+    def _completion_delay(self, i: int, t: float) -> tuple[bool, float]:
+        """(delivered, compute + wire seconds).  ``delivered=False`` means the
+        link exhausted its retry budget (``netsim.uplink_outcome`` give-up):
+        the update is lost at the returned elapsed time and the scheduler will
+        re-dispatch the client instead of retransmitting forever."""
         compute = float(self.compute_s[i])
         if self.links is None:
-            return compute
+            return True, compute
         start = t + compute
         self._inflight = [(fin, b) for fin, b in self._inflight if fin > start]
         inflight_bytes = sum(b for _, b in self._inflight)
         nbytes = self._uplink_nbytes()
-        wire = self.links.uplink_time(self.rng, i, nbytes, inflight_bytes=inflight_bytes)
-        self._inflight.append((start + wire, nbytes))
-        return compute + wire
+        delivered, wire = self.links.uplink_outcome(
+            self.rng, i, nbytes, inflight_bytes=inflight_bytes
+        )
+        if delivered:
+            self._inflight.append((start + wire, nbytes))
+        return delivered, compute + wire
 
     def _on_arrival(self, t: float, ev: ClientUpdateArrived) -> int | None:
         """Buffer the update at the client's edge; return the edge id when
@@ -375,17 +441,96 @@ class AsyncScheduler(_SchedulerBase):
             )
         return nbytes
 
-    def _edge_uplink_delay(self, edge: int, t: float) -> float:
-        """Backhaul crossing time of a merged edge uplink starting at ``t``,
-        contended against the other edge uplinks currently in flight."""
+    def _edge_uplink_delay(self, edge: int, t: float) -> tuple[bool, float]:
+        """(delivered, backhaul crossing seconds) of a merged edge uplink
+        starting at ``t``, contended against the other edge uplinks in flight.
+        ``delivered=False``: the backhaul gave up — the whole merged buffer is
+        lost and its clients re-dispatch."""
         self._edge_inflight = [(fin, b) for fin, b in self._edge_inflight if fin > t]
         inflight = sum(b for _, b in self._edge_inflight)
         nbytes = self._edge_uplink_nbytes()
-        delay = self.edge_links.uplink_time(
+        delivered, delay = self.edge_links.uplink_outcome(
             self.rng, edge, nbytes, inflight_bytes=inflight
         )
-        self._edge_inflight.append((t + delay, nbytes))
-        return delay
+        if delivered:
+            self._edge_inflight.append((t + delay, nbytes))
+        return delivered, delay
+
+    # -- crash-restart: checkpoints + recovery ------------------------------
+
+    @property
+    def ckpt_dir(self) -> str:
+        if self._ckpt_dir is None:
+            self._ckpt_dir = tempfile.mkdtemp(prefix="fedsim_ckpt_")
+        return self._ckpt_dir
+
+    def _checkpoint(self, t: float) -> None:
+        """Snapshot the full trainer state (arrays + host rng/iterator state,
+        ``FedRFTCATrainer.save_state``) tagged with the flush count."""
+        self.trainer.save_state(self.ckpt_dir, step=self.flushes)
+        self._ckpt_meta = {"t": t, "flushes": self.flushes}
+
+    def _maybe_checkpoint(self, t: float) -> None:
+        if self._next_ckpt is None or t < self._next_ckpt:
+            return
+        self._checkpoint(t)
+        self._next_ckpt = t + self.cfg.checkpoint_interval_s
+
+    def _redispatch_later(self, clients, t: float) -> None:
+        """Queue a fresh dispatch for ``clients`` after the restart delay.
+        Reuses :class:`ClientJoined` — same grouping (one shared broadcast per
+        instant) and the epoch bump orphans anything still in flight."""
+        restart = t + self.cfg.restart_delay_s
+        for i in sorted(set(clients)):
+            self.queue.push(restart, ClientJoined(i))
+
+    def _recover(self, t: float) -> None:
+        """ServerCrashed: restore the last checkpoint and replay from it.
+
+        The trainer's arrays, optimizer state, scenario rng, and batch-stream
+        positions all rewind to the checkpoint (bitwise —
+        ``restore_state``'s contract), the scheduler's version/flush counters
+        roll back with them, and everything in flight is orphaned via an
+        epoch bump.  Only virtual time and the comm ledger keep running: a
+        crash costs wall-clock and bytes, never determinism.
+        """
+        if self._ckpt_meta is None:
+            raise RuntimeError(
+                "ServerCrashed before any checkpoint — run() writes one at "
+                "t=0 when crash times are configured"
+            )
+        tr = self.trainer
+        tr.restore_state(self.ckpt_dir)
+        rollback = t - self._ckpt_meta["t"]
+        self.version = self.flushes = self._ckpt_meta["flushes"]
+        self.epoch += 1  # orphan every in-flight arrival/give-up
+        self.pending.clear()
+        self.buffers = {e: [] for e in range(self._n_edges)}
+        self._edge_uplinks.clear()
+        self._inflight.clear()
+        self._edge_inflight.clear()
+        row = {
+            "t": t,
+            "crash": "server",
+            "restored_flush": self.flushes,
+            "rollback_s": rollback,
+        }
+        self.recoveries.append(row)
+        self.history.append(row)
+        self._redispatch_later(self.live, t)
+
+    def _crash_edge(self, t: float, edge: int) -> None:
+        """EdgeCrashed: the edge's buffered updates and its merged uplinks on
+        the backhaul are lost; the clients behind them re-dispatch.  Server
+        state is intact, so no rollback."""
+        lost = [e["client"] for e in self.buffers[edge]]
+        self.buffers[edge] = []
+        for seq, (e_id, entries) in list(self._edge_uplinks.items()):
+            if e_id == edge:
+                lost += [e["client"] for e in entries]
+                del self._edge_uplinks[seq]
+        self.history.append({"t": t, "crash": "edge", "edge": edge, "lost": sorted(lost)})
+        self._redispatch_later(lost, t)
 
     # -- the buffered flush -------------------------------------------------
 
@@ -489,6 +634,14 @@ class AsyncScheduler(_SchedulerBase):
         self._seed_events()
         if self.cfg.eval_interval is not None:
             self.queue.push(self.cfg.eval_interval, EvalTick(1))
+        for ct in self.cfg.server_crash_times:
+            self.queue.push(float(ct), ServerCrashed())
+        for ct, e in self.cfg.edge_crash_times:
+            self.queue.push(float(ct), EdgeCrashed(int(e)))
+        if self.cfg.server_crash_times or self.cfg.checkpoint_interval_s is not None:
+            self._checkpoint(0.0)  # a crash before the first interval rolls to t=0
+            if self.cfg.checkpoint_interval_s is not None:
+                self._next_ckpt = self.cfg.checkpoint_interval_s
         while self.queue and self.flushes < n_flushes:
             # same-instant events pop in push order; joins are grouped so
             # simultaneous (re)joins share one dispatch broadcast
@@ -499,7 +652,14 @@ class AsyncScheduler(_SchedulerBase):
                 batch_events.append(self.queue.pop()[1])
             joined: list[int] = []
             for ev in batch_events:
-                if isinstance(ev, ClientDeparted):
+                if isinstance(ev, ServerCrashed):
+                    # processed ahead of same-instant churn/give-ups: the
+                    # epoch bump orphans them and _recover re-dispatches the
+                    # whole live cohort anyway
+                    self._recover(t)
+                elif isinstance(ev, EdgeCrashed):
+                    self._crash_edge(t, ev.edge)
+                elif isinstance(ev, ClientDeparted):
                     self.live.discard(ev.client)
                     self.epoch[ev.client] += 1
                     self.pending.pop(ev.client, None)
@@ -507,8 +667,17 @@ class AsyncScheduler(_SchedulerBase):
                     self.live.add(ev.client)
                     self.epoch[ev.client] += 1
                     joined.append(ev.client)
+                elif isinstance(ev, UplinkGaveUp):
+                    if ev.epoch != self.epoch[ev.client] or ev.client not in self.live:
+                        continue  # churned/crashed away: already orphaned
+                    entry = self.pending.get(ev.client)
+                    if entry is None or entry["version"] != ev.version:
+                        continue
+                    del self.pending[ev.client]
+                    self.giveups += 1
+                    joined.append(ev.client)  # lost, not looping: dispatch fresh
             if joined:
-                self._dispatch(joined, t)
+                self._dispatch(dict.fromkeys(joined), t)
             for ev in batch_events:
                 if isinstance(ev, EvalTick):
                     # model state only changes at flushes, so evaluating at
@@ -532,18 +701,29 @@ class AsyncScheduler(_SchedulerBase):
                     else:
                         # the edge merges its buffer and ships ONE uplink;
                         # the server flushes when it crosses the backhaul
-                        self._edge_seq += 1
-                        self._edge_uplinks[self._edge_seq] = entries
-                        self.queue.push(
-                            t + self._edge_uplink_delay(edge, t),
-                            EdgeUplinkArrived(edge, self._edge_seq),
-                        )
+                        delivered, delay = self._edge_uplink_delay(edge, t)
+                        if delivered:
+                            self._edge_seq += 1
+                            self._edge_uplinks[self._edge_seq] = (edge, entries)
+                            self.queue.push(
+                                t + delay, EdgeUplinkArrived(edge, self._edge_seq)
+                            )
+                        else:
+                            # backhaul gave up: the merged buffer is lost and
+                            # its clients re-dispatch at the give-up instant
+                            self.giveups += 1
+                            for i in sorted({e["client"] for e in entries}):
+                                self.queue.push(t + delay, ClientJoined(i))
                         continue
                 elif isinstance(ev, EdgeUplinkArrived):
-                    ready = self._edge_uplinks.pop(ev.seq)
+                    item = self._edge_uplinks.pop(ev.seq, None)
+                    if item is None:
+                        continue  # orphaned by an edge/server crash
+                    ready = item[1]
                 if ready is None:
                     continue
                 row = self._flush(t, ready)
+                self._maybe_checkpoint(t)
                 if eval_every and self.flushes % eval_every == 0:
                     row["acc"] = tr.evaluate()
                 if self.flushes >= n_flushes:

@@ -1,0 +1,262 @@
+"""Fault injection for the federated protocol — the chaos half of ``robust``.
+
+Three fault surfaces, matching where real systems break:
+
+- **Value-level payload corruption** (the batched engine's in-graph plane):
+  a message that arrives may arrive *wrong*.  :func:`build_fault_plan` turns
+  a :class:`FaultConfig` into jittable per-kind corruptors ``fn(row, key) ->
+  row`` applied to the stacked uplinks inside the compiled round/flush —
+  bit-flips through ``bitcast``, scaled payloads, sign flips, NaN injection,
+  truncated (zero-tail) payloads, each firing per message with the
+  configured per-kind probability.  This models what reaches the aggregator
+  when frame integrity is NOT checked (or the corruption happened before
+  encoding) — the regime robust :mod:`repro.robust.rules` defend.
+- **Byzantine clients**: persistent adversaries among the K sources whose
+  uplinks are *well-formed but crafted* (sign-flipped, norm-boosted, random,
+  or NaN moments/W_RF/classifier rows).  Checksums cannot help here — only
+  the aggregation rule can.
+- **Byte-level frame corruption** (the serial wire plane):
+  :class:`ByteFaultInjector` flips bits in / truncates / replaces the actual
+  serialized frames between ``serialize`` and ``deserialize``.  With the
+  CRC32 envelope checksum (``comm.wire``) every such frame is *rejected*
+  (typed :class:`~repro.comm.wire.WireDecodeError`, never a crash),
+  retransmitted up to ``max_retries``, and reported as a drop on give-up —
+  the defended regime, where corruption degrades to erasure.
+
+Crash faults (``ServerCrashed`` / ``EdgeCrashed``) live in
+``repro.fedsim.events``; the scheduling knobs sit on ``fedsim.AsyncConfig``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VALUE_MODES = ("bit_flip", "scale", "sign_flip", "nan", "truncate")
+BYZANTINE_MODES = ("sign_flip", "scale", "random", "nan")
+BYTE_MODES = ("bit_flip", "truncate", "garbage")
+
+
+@dataclass
+class FaultConfig:
+    """One knob set for every fault surface (zero rates == no faults at all;
+    the trainer then compiles the exact fault-free program, bit-for-bit).
+
+    ``corrupt_*`` are per-uplink corruption probabilities per payload kind;
+    ``corruption`` picks the value-level model (``VALUE_MODES``).  On the
+    serial wire plane the same rates drive :class:`ByteFaultInjector`
+    (byte-level modes; value-only modes fall back to ``bit_flip`` — on a real
+    wire every corruption is byte corruption, and the CRC32 checksum turns it
+    into reject -> retransmit -> drop).
+
+    ``byzantine`` lists persistent adversarial client ids whose moments /
+    W_RF / classifier uplinks are replaced by ``byzantine_mode``-crafted
+    payloads every round.
+    """
+
+    corrupt_moments: float = 0.0
+    corrupt_w_rf: float = 0.0
+    corrupt_classifier: float = 0.0
+    corruption: str = "bit_flip"
+    corruption_scale: float = 100.0  # factor for mode "scale"
+    byzantine: tuple[int, ...] = ()
+    byzantine_mode: str = "sign_flip"
+    byzantine_scale: float = 10.0  # factor for byzantine "scale"/"random"
+    max_retries: int = 8  # byte-plane retransmit budget
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.corruption not in VALUE_MODES:
+            raise ValueError(
+                f"unknown corruption mode {self.corruption!r}; have {VALUE_MODES}"
+            )
+        if self.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(
+                f"unknown byzantine mode {self.byzantine_mode!r}; "
+                f"have {BYZANTINE_MODES}"
+            )
+        for name in ("corrupt_moments", "corrupt_w_rf", "corrupt_classifier"):
+            rate = getattr(self, name)
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {rate}")
+
+    @property
+    def rates(self) -> dict[str, float]:
+        return {
+            "moments": self.corrupt_moments,
+            "w_rf": self.corrupt_w_rf,
+            "classifier": self.corrupt_classifier,
+        }
+
+    @property
+    def is_noop(self) -> bool:
+        return not self.byzantine and all(r == 0.0 for r in self.rates.values())
+
+
+# ---------------------------------------------------------------------------
+# value-level corruptors (jittable; one row = one message payload)
+# ---------------------------------------------------------------------------
+
+
+def _bit_flip(x, key):
+    """Flip one random bit of one random element (f32 bitcast)."""
+    flat = x.ravel()
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.randint(k1, (), 0, flat.size)
+    bit = jax.random.randint(k2, (), 0, 32).astype(jnp.uint32)
+    u = jax.lax.bitcast_convert_type(flat.astype(jnp.float32), jnp.uint32)
+    u = u.at[idx].set(u[idx] ^ (jnp.uint32(1) << bit))
+    return jax.lax.bitcast_convert_type(u, jnp.float32).reshape(x.shape).astype(x.dtype)
+
+
+def _nan_inject(x, key):
+    flat = x.ravel()
+    idx = jax.random.randint(key, (), 0, flat.size)
+    return flat.at[idx].set(jnp.nan).reshape(x.shape)
+
+
+def _truncate(x, key):
+    """Zero the payload's tail from a random offset (a frame cut mid-flight,
+    decoded anyway because nobody checked integrity)."""
+    flat = x.ravel()
+    off = jax.random.randint(key, (), 1, flat.size)
+    return jnp.where(jnp.arange(flat.size) < off, flat, 0.0).reshape(x.shape)
+
+
+def make_corruptor(mode: str, rate: float, scale: float):
+    """Jittable ``fn(row, key) -> row`` corrupting with probability ``rate``."""
+    if mode == "bit_flip":
+        hit = _bit_flip
+    elif mode == "scale":
+        hit = lambda x, k: x * scale
+    elif mode == "sign_flip":
+        hit = lambda x, k: -x
+    elif mode == "nan":
+        hit = _nan_inject
+    elif mode == "truncate":
+        hit = _truncate
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+
+    def corrupt(x, key):
+        k_gate, k_hit = jax.random.split(key)
+        do = jax.random.bernoulli(k_gate, rate)
+        return jnp.where(do, hit(x, k_hit), x)
+
+    return corrupt
+
+
+def make_byzantine_craft(mode: str, scale: float):
+    """Jittable ``fn(row, key) -> row`` replacing an honest payload by the
+    adversary's crafted one."""
+    if mode == "sign_flip":
+        return lambda x, k: -x  # the classic gradient-reversal attack
+    if mode == "scale":
+        return lambda x, k: x * scale  # model boosting
+    if mode == "nan":
+        return lambda x, k: jnp.full_like(x, jnp.nan)
+    if mode == "random":
+
+        def craft(x, key):
+            noise = jax.random.normal(key, x.shape, x.dtype)
+            norm = jnp.linalg.norm(x.ravel())
+            return noise * (scale * norm / jnp.maximum(jnp.linalg.norm(noise.ravel()), 1e-12))
+
+        return craft
+    raise ValueError(f"unknown byzantine mode {mode!r}")
+
+
+@dataclass
+class FaultPlan:
+    """Engine-facing compiled fault surface: per-kind corruptors + the
+    Byzantine mask/craft.  Built by :func:`build_fault_plan`; ``None`` when
+    the config is a no-op so the fault-free program stays bit-identical."""
+
+    corruptors: dict = field(default_factory=dict)  # kind -> fn(row, key) -> row
+    byz_mask: jnp.ndarray | None = None  # (K,) 0/1 floats
+    craft: object | None = None  # fn(row, key) -> row
+
+    def apply(self, kind: str, rows: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """Per-client fault pass over stacked (K, ...) uplink payloads:
+        Byzantine rows are replaced by crafted ones, then the channel
+        corruption fires per message.  One key per client, shared between
+        the craft and the corruption gate of the same message."""
+        keys = jax.random.split(key, rows.shape[0])
+        if self.byz_mask is not None:
+            crafted = jax.vmap(self.craft)(rows, keys)
+            sel = self.byz_mask.reshape((-1,) + (1,) * (rows.ndim - 1))
+            rows = jnp.where(sel > 0, crafted, rows)
+        fn = self.corruptors.get(kind)
+        if fn is not None:
+            rows = jax.vmap(fn)(rows, jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys))
+        return rows
+
+
+def build_fault_plan(cfg: FaultConfig | None, k: int) -> FaultPlan | None:
+    """FaultConfig -> FaultPlan for a K-client stacked engine (None if no-op)."""
+    if cfg is None or cfg.is_noop:
+        return None
+    bad = [i for i in cfg.byzantine if not 0 <= i < k]
+    if bad:
+        raise ValueError(f"byzantine ids {bad} out of range for K={k}")
+    corruptors = {
+        kind: make_corruptor(cfg.corruption, rate, cfg.corruption_scale)
+        for kind, rate in cfg.rates.items()
+        if rate > 0.0
+    }
+    byz_mask, craft = None, None
+    if cfg.byzantine:
+        m = np.zeros((k,), np.float32)
+        m[list(cfg.byzantine)] = 1.0
+        byz_mask = jnp.asarray(m)
+        craft = make_byzantine_craft(cfg.byzantine_mode, cfg.byzantine_scale)
+    return FaultPlan(corruptors=corruptors, byz_mask=byz_mask, craft=craft)
+
+
+# ---------------------------------------------------------------------------
+# byte-level frame corruption (the serial wire plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ByteFaultInjector:
+    """Corrupts serialized frames between serialize and deserialize.
+
+    ``rates`` maps payload kind -> per-frame corruption probability; every
+    corrupted frame fails the CRC32 envelope check and surfaces as a typed
+    ``WireDecodeError`` the transport turns into reject -> retransmit ->
+    (after ``max_retries``) drop.
+    """
+
+    rates: dict[str, float] = field(default_factory=dict)
+    mode: str = "bit_flip"
+    max_retries: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in BYTE_MODES:
+            raise ValueError(f"unknown byte mode {self.mode!r}; have {BYTE_MODES}")
+        self._rng = np.random.default_rng(self.seed)
+
+    @classmethod
+    def from_config(cls, cfg: FaultConfig) -> "ByteFaultInjector":
+        mode = cfg.corruption if cfg.corruption in BYTE_MODES else "bit_flip"
+        return cls(
+            rates=dict(cfg.rates), mode=mode, max_retries=cfg.max_retries,
+            seed=cfg.seed,
+        )
+
+    def corrupt(self, kind: str, data: bytes) -> bytes:
+        rate = self.rates.get(kind, 0.0)
+        if rate <= 0.0 or self._rng.random() >= rate:
+            return data
+        buf = bytearray(data)
+        if self.mode == "bit_flip":
+            i = int(self._rng.integers(len(buf)))
+            buf[i] ^= 1 << int(self._rng.integers(8))
+            return bytes(buf)
+        if self.mode == "truncate":
+            return bytes(buf[: int(self._rng.integers(1, max(len(buf), 2)))])
+        return self._rng.integers(0, 256, size=len(buf), dtype=np.uint8).tobytes()

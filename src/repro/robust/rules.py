@@ -1,0 +1,240 @@
+"""Byzantine-robust aggregation rules — the ``AggregationRule`` seam.
+
+Every FedRF-TCA aggregate is a weighted sum over client payloads (moments,
+W_RF, classifier leaves) divided by a mass.  The exact-union merge this repo
+shipped until now is therefore maximally fragile: a single corrupted or
+adversarial uplink enters the pooled sum with full weight and poisons the
+global model exactly.  An :class:`AggregationRule` owns that one contraction
+— ``weighted_sum(values (K, ...), weights (K,)) -> (sum (...), mass ())`` —
+so swapping the merge estimator never touches the protocol around it, and
+every rule runs **in-graph** (pure jnp, jit/vmap-safe): the batched round and
+the async flush stay one compiled dispatch each.
+
+Rules (``get_rule("name[:param]")``):
+
+==================  =========================================================
+``mean``            the seed's exact weighted sum (``einsum`` contraction) —
+                    bit-for-bit today's pipeline, no finite guard (NaNs
+                    propagate, which is exactly the fragility the robust
+                    rules fix)
+``finite_mean``     mean + finite-guard quarantine: rows containing any
+                    NaN/Inf entry get weight 0 and value 0 (0 * NaN would
+                    still poison the sum)
+``norm_clip[:c]``   each row scaled to L2 norm <= c before the mean; with no
+                    ``c`` the clip radius is the median norm of the delivered
+                    rows (scale-free).  Bounds any single row's pull.
+``trimmed_mean[:b]``coordinate-wise weighted trimmed mean discarding the
+                    ``b`` (default 0.2) weight-fraction tails per coordinate
+                    — breakdown point b (f < b*K arbitrary rows cannot move
+                    any coordinate outside the honest range)
+``geomedian[:it]``  smoothed geometric median via ``it`` (default 8)
+                    Weiszfeld iterations — the classic high-dimension robust
+                    location estimate (breakdown 1/2)
+==================  =========================================================
+
+All rules except ``mean`` apply the finite guard first, so a NaN-injected
+update is quarantined rather than averaged.  Every rule reports the *raw*
+delivered mass alongside its estimate (``sum = estimate * mass``), so the
+downstream ``(sum + target) / (mass + 1)`` and ``sum / mass`` consumers are
+rule-agnostic.
+
+:meth:`AggregationRule.merge_moments` is the second seam: the target's
+per-pair MMD consumes a *stack* of moment messages with weights, and the mean
+rule must leave that stack untouched (bitwise degeneracy).  Robust rules
+instead collapse it to the single robust pooled moment carrying the total
+mass — the same estimator family the two-tier fleet plane already uses for
+per-edge pooled moments.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def finite_guard(values: jnp.ndarray, weights: jnp.ndarray):
+    """Quarantine non-finite rows: weight 0 AND value 0 (so ``0 * NaN`` can
+    never leak back into a sum).  values: (K, ...), weights: (K,)."""
+    flat = values.reshape(values.shape[0], -1)
+    ok = jnp.all(jnp.isfinite(flat), axis=1)
+    shaped = ok.reshape((-1,) + (1,) * (values.ndim - 1))
+    return jnp.where(shaped, values, 0.0), weights * ok.astype(weights.dtype)
+
+
+class AggregationRule:
+    """One merge estimator: a weighted sum + the mass it represents."""
+
+    name: str = ""
+    is_mean: bool = False  # True only for the bitwise-degenerate seed rule
+
+    def weighted_sum(self, values: jnp.ndarray, weights: jnp.ndarray):
+        """(K, ...) values x (K,) weights -> ((...) sum, () mass).
+
+        ``sum`` plays the role of the seed's ``einsum(w, v)`` contraction:
+        consumers divide by ``mass`` (or ``mass + 1`` with a server term).
+        Robust rules return ``estimate * mass`` so that division recovers
+        the robust estimate.
+        """
+        raise NotImplementedError
+
+    def estimate(self, values: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+        """The robust weighted mean itself (sum / mass, mass-guarded)."""
+        s, m = self.weighted_sum(values, weights)
+        return s / jnp.maximum(m, _EPS)
+
+    def merge_moments(self, msgs: jnp.ndarray, weights: jnp.ndarray):
+        """(K, 2N) moment stack + (K,) weights -> (stack, weights) the target
+        trains on.  Mean: identity (the seed's per-pair MMD over per-client
+        messages).  Robust rules: the single pooled robust moment row with
+        the total delivered mass."""
+        s, m = self.weighted_sum(msgs, weights)
+        pooled = s / jnp.maximum(m, _EPS)
+        return pooled[None, :], m[None]
+
+
+class MeanRule(AggregationRule):
+    """The seed's exact-union weighted mean — bitwise today's pipeline."""
+
+    name, is_mean = "mean", True
+
+    def weighted_sum(self, values, weights):
+        # the literal seed contraction ("k,kij->ij" for W_RF, tensordot for
+        # classifier leaves): einsum with ellipsis is bitwise-equal to both
+        return jnp.einsum("k,k...->...", weights, values), jnp.sum(weights)
+
+    def merge_moments(self, msgs, weights):
+        return msgs, weights  # untouched: bitwise the seed target loss
+
+
+class FiniteMeanRule(AggregationRule):
+    """Weighted mean with NaN/Inf rows quarantined (weight + value zeroed)."""
+
+    name = "finite_mean"
+
+    def weighted_sum(self, values, weights):
+        values, weights = finite_guard(values, weights)
+        return jnp.einsum("k,k...->...", weights, values), jnp.sum(weights)
+
+
+class NormClipRule(AggregationRule):
+    """Mean of rows clipped to L2 norm <= ``clip`` (median-norm when None).
+
+    Clipping values, not weights: an adversarial row still votes, but its
+    pull is bounded by the clip radius — the standard defense against scaled
+    (model-boosting) attacks.
+    """
+
+    name = "norm_clip"
+
+    def __init__(self, clip: float | None = None):
+        self.clip = clip
+        if clip is not None:
+            self.name = f"norm_clip:{clip:g}"
+
+    def weighted_sum(self, values, weights):
+        values, weights = finite_guard(values, weights)
+        flat = values.reshape(values.shape[0], -1)
+        norms = jnp.linalg.norm(flat, axis=1)
+        if self.clip is None:
+            # median norm over delivered rows (undelivered rows pushed to
+            # +inf so they never define the radius); all-dropped -> radius 0
+            masked = jnp.where(weights > 0, norms, jnp.inf)
+            order = jnp.sort(masked)
+            n_live = jnp.sum(weights > 0).astype(jnp.int32)
+            mid = jnp.maximum(n_live - 1, 0) // 2
+            radius = jnp.where(n_live > 0, order[mid], 0.0)
+        else:
+            radius = jnp.asarray(self.clip, flat.dtype)
+        scale = jnp.minimum(1.0, radius / jnp.maximum(norms, _EPS))
+        clipped = flat * scale[:, None]
+        s = jnp.einsum("k,kd->d", weights, clipped)
+        return s.reshape(values.shape[1:]), jnp.sum(weights)
+
+
+class TrimmedMeanRule(AggregationRule):
+    """Coordinate-wise weighted trimmed mean (trim fraction ``beta`` per tail).
+
+    Exact interval trimming on the weight axis: per coordinate the rows are
+    sorted by value, and each row contributes the overlap of its cumulative-
+    weight interval with ``[beta * W, (1 - beta) * W]`` — so weight-0
+    (undelivered / quarantined) rows occupy no quantile mass, and ``beta=0``
+    recovers the weighted mean exactly.  ``f`` arbitrary rows of total weight
+    ``< beta * W`` cannot move any coordinate outside the honest value range
+    (the breakdown property the hypothesis tests pin).
+    """
+
+    name = "trimmed_mean"
+
+    def __init__(self, beta: float = 0.2):
+        if not 0.0 <= beta < 0.5:
+            raise ValueError(f"trim fraction must be in [0, 0.5), got {beta}")
+        self.beta = beta
+        self.name = f"trimmed_mean:{beta:g}"
+
+    def weighted_sum(self, values, weights):
+        values, weights = finite_guard(values, weights)
+        flat = values.reshape(values.shape[0], -1)  # (K, D)
+        order = jnp.argsort(flat, axis=0)  # (K, D) row order per coordinate
+        v_s = jnp.take_along_axis(flat, order, axis=0)
+        w_s = weights[order]  # (K, D) weights in value order
+        cw = jnp.cumsum(w_s, axis=0)
+        total = cw[-1]  # (D,) == sum(weights) everywhere
+        lo, hi = self.beta * total, (1.0 - self.beta) * total
+        eff = jnp.clip(jnp.minimum(cw, hi) - jnp.maximum(cw - w_s, lo), 0.0, None)
+        est = jnp.sum(eff * v_s, axis=0) / jnp.maximum(jnp.sum(eff, axis=0), _EPS)
+        mass = jnp.sum(weights)
+        return (est * mass).reshape(values.shape[1:]), mass
+
+
+class GeoMedianRule(AggregationRule):
+    """Smoothed geometric median (Weiszfeld iterations, fixed count).
+
+    Iteratively reweighted mean ``b <- sum_k (w_k / max(||v_k - b||, eps)) v_k
+    / sum_k (...)`` starting from the weighted mean; a fixed iteration count
+    keeps the program jittable and the cost deterministic.  Arbitrarily
+    large adversarial rows get arbitrarily small Weiszfeld weights, so the
+    estimate stays near the honest majority (breakdown point 1/2).
+    """
+
+    name = "geomedian"
+
+    def __init__(self, iters: int = 8):
+        if iters < 1:
+            raise ValueError(f"need >= 1 Weiszfeld iteration, got {iters}")
+        self.iters = int(iters)
+        self.name = f"geomedian:{self.iters}"
+
+    def weighted_sum(self, values, weights):
+        values, weights = finite_guard(values, weights)
+        flat = values.reshape(values.shape[0], -1)
+        mass = jnp.sum(weights)
+        b = jnp.einsum("k,kd->d", weights, flat) / jnp.maximum(mass, _EPS)
+        for _ in range(self.iters):
+            d = jnp.linalg.norm(flat - b[None, :], axis=1)
+            wz = weights / jnp.maximum(d, 1e-6)
+            b = jnp.einsum("k,kd->d", wz, flat) / jnp.maximum(jnp.sum(wz), _EPS)
+        return (b * mass).reshape(values.shape[1:]), mass
+
+
+_FACTORIES = {
+    "mean": MeanRule,
+    "finite_mean": FiniteMeanRule,
+    "norm_clip": NormClipRule,
+    "trimmed_mean": TrimmedMeanRule,
+    "geomedian": lambda p=8: GeoMedianRule(int(p)),
+}
+
+
+def rule_names() -> list[str]:
+    return sorted(_FACTORIES)
+
+
+def get_rule(spec) -> AggregationRule:
+    """``get_rule("trimmed_mean:0.25")`` — name[:param]; rule instances pass
+    through (custom rules plug into the same seam)."""
+    if isinstance(spec, AggregationRule):
+        return spec
+    name, _, param = str(spec).partition(":")
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown aggregation rule {spec!r}; have {rule_names()}")
+    return _FACTORIES[name](float(param)) if param else _FACTORIES[name]()

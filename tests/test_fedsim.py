@@ -272,7 +272,7 @@ def test_async_churn_cancels_inflight_and_resumes(small_setup):
         assert np.isfinite(np.asarray(leaf)).all()
     # the scheduler wires itself with the exact wire byte sizes of THIS
     # trainer's codecs without mutating the caller's scenario object
-    assert sched.payload_bytes["moments"] == 2 * cfg.n_rff * 4 + 29
+    assert sched.payload_bytes["moments"] == 2 * cfg.n_rff * 4 + 33  # header + CRC32
     assert links.payload_bytes == {}
 
 

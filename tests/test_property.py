@@ -242,3 +242,120 @@ def test_flash_attention_row_stochastic(seed):
     v = jnp.ones((1, 16, 2, 8))
     out = flash_attention(q, k, v, causal=True)
     assert np.allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+# ---- robust aggregation rules (repro.robust.rules) -------------------------
+
+from repro.robust.rules import (  # noqa: E402
+    FiniteMeanRule,
+    GeoMedianRule,
+    MeanRule,
+    NormClipRule,
+    TrimmedMeanRule,
+    finite_guard,
+)
+
+_ROBUST_RULES = (
+    FiniteMeanRule(),
+    NormClipRule(),
+    TrimmedMeanRule(0.2),
+    GeoMedianRule(16),
+)
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 10), d=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_robust_rules_permutation_invariant(seed, k, d):
+    """Client order is protocol noise: permuting (values, weights) jointly
+    must not move any rule's estimate."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(k,)).astype(np.float32))
+    perm = rng.permutation(k)
+    for rule in (MeanRule(),) + _ROBUST_RULES:
+        a = np.asarray(rule.estimate(v, w))
+        b = np.asarray(rule.estimate(v[perm], w[perm]))
+        assert np.allclose(a, b, atol=1e-4), rule.name
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 10), d=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_robust_rules_degenerate_to_weighted_mean_without_outliers(seed, k, d):
+    """With identical rows every estimator must return that row; with finite
+    well-conditioned rows, beta=0 trimming and the finite-guard mean must
+    equal the plain weighted mean."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(k,)).astype(np.float32))
+    row = rng.normal(size=(d,)).astype(np.float32)
+    same = jnp.asarray(np.tile(row, (k, 1)))
+    for rule in (MeanRule(),) + _ROBUST_RULES:
+        assert np.allclose(np.asarray(rule.estimate(same, w)), row, atol=1e-3), rule.name
+    v = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    ref = np.einsum("k,kd->d", np.asarray(w), np.asarray(v)) / np.asarray(w).sum()
+    assert np.allclose(np.asarray(TrimmedMeanRule(0.0).estimate(v, w)), ref, atol=1e-4)
+    assert np.allclose(np.asarray(FiniteMeanRule().estimate(v, w)), ref, atol=1e-4)
+    assert np.allclose(np.asarray(MeanRule().estimate(v, w)), ref, atol=1e-4)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(5, 12),
+    d=st.integers(1, 6),
+    magnitude=st.floats(10.0, 1e6),
+)
+@settings(**SETTINGS)
+def test_trimmed_mean_breakdown_below_beta_fraction(seed, k, d, magnitude):
+    """f adversarial rows of total weight < beta * W cannot push any
+    coordinate of the trimmed mean outside the honest value range."""
+    rng = np.random.default_rng(seed)
+    beta = 0.4
+    f = max(int(beta * k) - 1, 1)  # strictly below the trim mass
+    honest = rng.uniform(-1.0, 1.0, size=(k - f, d)).astype(np.float32)
+    attack = np.full((f, d), magnitude, np.float32) * rng.choice([-1.0, 1.0])
+    v = jnp.asarray(np.concatenate([honest, attack]))
+    w = jnp.ones((k,), jnp.float32)
+    est = np.asarray(TrimmedMeanRule(beta).estimate(v, w))
+    lo, hi = honest.min(axis=0), honest.max(axis=0)
+    assert (est >= lo - 1e-4).all() and (est <= hi + 1e-4).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(5, 11), d=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_geomedian_breakdown_below_half(seed, k, d):
+    """f < K/2 arbitrarily-placed rows leave the geometric median within a
+    bounded neighbourhood of the honest points (breakdown point 1/2)."""
+    rng = np.random.default_rng(seed)
+    f = (k - 1) // 2
+    honest = rng.uniform(-1.0, 1.0, size=(k - f, d)).astype(np.float32)
+    attack = np.full((f, d), 1e4, np.float32)
+    v = jnp.asarray(np.concatenate([honest, attack]))
+    est = np.asarray(GeoMedianRule(64).estimate(v, jnp.ones((k,), jnp.float32)))
+    # within the honest bounding box inflated by its own diameter
+    diam = float(np.linalg.norm(honest.max(axis=0) - honest.min(axis=0))) + 1.0
+    assert np.linalg.norm(est - honest.mean(axis=0)) <= 2.0 * diam
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 8),
+    d=st.integers(1, 6),
+    data=st.data(),
+)
+@settings(**SETTINGS)
+def test_finite_guard_rules_always_finite(seed, k, d, data):
+    """Whatever mix of NaN/Inf rows arrives, every guarded rule's output is
+    finite — even when every row is poisoned (zero mass -> zero estimate)."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(k, d)).astype(np.float32)
+    poison = data.draw(st.lists(st.booleans(), min_size=k, max_size=k))
+    for i, bad in enumerate(poison):
+        if bad:
+            v[i, rng.integers(d)] = rng.choice([np.nan, np.inf, -np.inf])
+    w = jnp.ones((k,), jnp.float32)
+    gv, gw = finite_guard(jnp.asarray(v), w)
+    assert np.isfinite(np.asarray(gv)).all()
+    assert float(gw.sum()) == float(k - sum(poison))
+    for rule in _ROBUST_RULES:
+        s, m = rule.weighted_sum(jnp.asarray(v), w)
+        assert np.isfinite(np.asarray(s)).all(), rule.name
+        assert np.isfinite(float(m))

@@ -1,0 +1,470 @@
+"""Robustness layer: aggregation rules, fault injection, wire integrity,
+checkpoint/restore, and fedsim crash-restart semantics."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.netsim import (
+    BernoulliScenario,
+    CorruptionScenario,
+    LinkModel,
+    LinkScenario,
+    TraceScenario,
+)
+from repro.comm import wire
+from repro.comm.codecs import get_codec
+from repro.comm.transport import WireTransport, resolve_codecs
+from repro.comm.wire import WireDecodeError
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.aggregation import get_rule as get_rule_via_aggregation
+from repro.federated.network import RoundPlan
+from repro.fedsim import AsyncConfig, AsyncScheduler
+from repro.fleet import Topology
+from repro.robust import (
+    ByteFaultInjector,
+    FaultConfig,
+    FiniteMeanRule,
+    GeoMedianRule,
+    MeanRule,
+    NormClipRule,
+    TrimmedMeanRule,
+    build_fault_plan,
+    finite_guard,
+    get_rule,
+    make_corruptor,
+    rule_names,
+)
+from repro.data import make_domains
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    return doms[:3], doms[3], cfg
+
+
+def _proto(rounds=3, **kw):
+    kw.setdefault("t_c", 2)
+    kw.setdefault("warmup_rounds", 1)
+    kw.setdefault("batch_size", 32)
+    kw.setdefault("seed", 0)
+    ids = list(range(3))
+    kw.setdefault(
+        "scenario", TraceScenario([RoundPlan(ids, ids, ids)] * max(rounds, 1), cycle=True)
+    )
+    return ProtocolConfig(n_rounds=rounds, **kw)
+
+
+def _leaf_div(a, b):
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _all_finite(tree):
+    return all(np.isfinite(np.asarray(l)).all() for l in jax.tree_util.tree_leaves(tree))
+
+
+# ---- rules -----------------------------------------------------------------
+
+
+def test_get_rule_parsing_and_reexport():
+    assert isinstance(get_rule("mean"), MeanRule)
+    assert get_rule("mean").is_mean and not get_rule("finite_mean").is_mean
+    assert isinstance(get_rule("trimmed_mean:0.3"), TrimmedMeanRule)
+    assert get_rule("trimmed_mean:0.3").beta == 0.3
+    assert get_rule("norm_clip:2.5").clip == 2.5
+    assert get_rule("geomedian:4").iters == 4
+    rule = TrimmedMeanRule(0.1)
+    assert get_rule(rule) is rule  # instances pass through
+    with pytest.raises(ValueError, match="unknown aggregation rule"):
+        get_rule("krum")
+    with pytest.raises(ValueError, match="trim fraction"):
+        TrimmedMeanRule(0.5)
+    assert set(rule_names()) == {"mean", "finite_mean", "norm_clip", "trimmed_mean",
+                                 "geomedian"}
+    # federated.aggregation re-exports the seam
+    assert get_rule_via_aggregation is get_rule
+
+
+def test_mean_rule_is_bitwise_the_seed_contractions():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(5, 7, 3)).astype(np.float32))
+    s, m = jax.jit(MeanRule().weighted_sum)(v, w)
+    ref = jax.jit(lambda w, v: jnp.einsum("k,kij->ij", w, v))(w, v)
+    ref2 = jax.jit(lambda w, v: jnp.tensordot(w, v, axes=1))(w, v)
+    assert np.array_equal(np.asarray(s), np.asarray(ref))
+    assert np.array_equal(np.asarray(s), np.asarray(ref2))
+    assert float(m) == float(np.sum(np.asarray(w)))
+
+
+def test_finite_guard_quarantines_rows():
+    v = jnp.asarray([[1.0, 2.0], [np.nan, 0.0], [3.0, np.inf], [4.0, 5.0]])
+    w = jnp.ones((4,))
+    gv, gw = finite_guard(v, w)
+    assert np.array_equal(np.asarray(gw), [1.0, 0.0, 0.0, 1.0])
+    assert np.isfinite(np.asarray(gv)).all()
+    # the mass really drops: a NaN row cannot vote through the guard
+    s, m = FiniteMeanRule().weighted_sum(v, w)
+    assert np.allclose(np.asarray(s), [5.0, 7.0]) and float(m) == 2.0
+
+
+def test_trimmed_mean_known_values_and_beta0_degeneracy():
+    v = jnp.asarray([[0.0], [1.0], [2.0], [3.0], [1000.0]])
+    w = jnp.ones((5,))
+    est = TrimmedMeanRule(0.2).estimate(v, w)
+    assert float(est[0]) == pytest.approx(2.0)  # tails 0 and 1000 trimmed
+    # beta=0 recovers the weighted mean exactly
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.normal(size=(6, 4)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(6,)).astype(np.float32))
+    est0 = TrimmedMeanRule(0.0).estimate(v, w)
+    ref = np.einsum("k,kd->d", np.asarray(w), np.asarray(v)) / np.asarray(w).sum()
+    assert np.allclose(np.asarray(est0), ref, atol=1e-5)
+    # weight-0 rows occupy no quantile mass
+    v = jnp.asarray([[0.0], [1.0], [2.0], [1e9]])
+    w = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    est = TrimmedMeanRule(0.25).estimate(v, w)
+    assert float(est[0]) == pytest.approx(1.0)
+
+
+def test_norm_clip_bounds_the_outlier_pull():
+    honest = np.tile(np.array([1.0, 0.0], np.float32), (4, 1))
+    attack = np.array([[1e6, 1e6]], np.float32)
+    v = jnp.asarray(np.concatenate([honest, attack]))
+    w = jnp.ones((5,))
+    est = NormClipRule().estimate(v, w)  # median-norm radius == 1
+    assert float(jnp.linalg.norm(est)) <= 1.0 + 1e-5
+    est_fixed = NormClipRule(2.0).estimate(v, w)
+    assert np.isfinite(np.asarray(est_fixed)).all()
+    assert float(jnp.linalg.norm(est_fixed)) <= 2.0 + 1e-5
+
+
+def test_geomedian_resists_large_outlier():
+    honest = np.random.default_rng(2).normal(size=(6, 8)).astype(np.float32)
+    v = jnp.asarray(np.concatenate([honest, np.full((1, 8), 1e8, np.float32)]))
+    w = jnp.ones((7,))
+    est = np.asarray(GeoMedianRule(16).estimate(v, w))
+    lo, hi = honest.min(axis=0), honest.max(axis=0)
+    assert (est >= lo - 1.0).all() and (est <= hi + 1.0).all()
+
+
+# ---- value-level corruptors ------------------------------------------------
+
+
+def test_corruptors_fire_at_rate_one_and_never_at_zero():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(10,)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    for mode in ("bit_flip", "scale", "sign_flip", "nan", "truncate"):
+        out0 = make_corruptor(mode, 0.0, 100.0)(x, key)
+        assert np.array_equal(np.asarray(out0), np.asarray(x))  # gate closed
+    nan_out = np.asarray(make_corruptor("nan", 1.0, 100.0)(x, key))
+    assert np.isnan(nan_out).sum() == 1
+    flip_out = np.asarray(make_corruptor("sign_flip", 1.0, 100.0)(x, key))
+    assert np.array_equal(flip_out, -np.asarray(x))
+    scale_out = np.asarray(make_corruptor("scale", 1.0, 100.0)(x, key))
+    assert np.allclose(scale_out, 100.0 * np.asarray(x))
+    bit_out = np.asarray(make_corruptor("bit_flip", 1.0, 100.0)(x, key))
+    assert (bit_out != np.asarray(x)).sum() == 1  # exactly one element flipped
+    trunc_out = np.asarray(make_corruptor("truncate", 1.0, 100.0)(x, key))
+    nz = np.nonzero(trunc_out == 0.0)[0]
+    assert nz.size >= 1 and np.array_equal(nz, np.arange(10 - nz.size, 10))
+
+
+def test_fault_config_validation_and_noop():
+    assert FaultConfig().is_noop
+    assert build_fault_plan(FaultConfig(), k=3) is None  # bitwise-transparent
+    assert build_fault_plan(None, k=3) is None
+    with pytest.raises(ValueError, match="corruption mode"):
+        FaultConfig(corruption="gamma_ray")
+    with pytest.raises(ValueError, match="byzantine mode"):
+        FaultConfig(byzantine_mode="subtle")
+    with pytest.raises(ValueError, match="in \\[0, 1\\]"):
+        FaultConfig(corrupt_moments=1.5)
+    with pytest.raises(ValueError, match="out of range"):
+        build_fault_plan(FaultConfig(byzantine=(7,)), k=3)
+    plan = build_fault_plan(FaultConfig(byzantine=(1,), byzantine_mode="sign_flip"), k=3)
+    rows = jnp.ones((3, 4))
+    out = np.asarray(plan.apply("moments", rows, jax.random.PRNGKey(0)))
+    assert np.array_equal(out[1], -np.ones(4)) and np.array_equal(out[0], np.ones(4))
+
+
+# ---- wire integrity (CRC32) ------------------------------------------------
+
+
+def test_wire_checksum_rejects_every_single_byte_corruption():
+    codec = get_codec("float32")
+    vec = np.arange(6, dtype=np.float32)
+    frame = wire.serialize(wire.moments_message(vec, sender=1, round=2), codec)
+    spec = {"msg": ((6,), np.dtype(np.float32))}
+    assert len(frame) == wire.serialized_size("moments", spec, codec)
+    decoded, _ = wire.deserialize(frame)
+    assert np.array_equal(decoded.arrays["msg"], vec)
+    for i in range(len(frame)):
+        for bit in (0x01, 0x80):
+            bad = bytearray(frame)
+            bad[i] ^= bit
+            with pytest.raises(WireDecodeError):
+                wire.deserialize(bytes(bad))
+    for cut in (0, 1, len(frame) // 2, len(frame) - 1):
+        with pytest.raises(WireDecodeError):
+            wire.deserialize(frame[:cut])
+    assert issubclass(WireDecodeError, ValueError)  # legacy handlers still catch
+
+
+def test_transport_rejects_retransmits_and_gives_up():
+    vec = np.arange(4, dtype=np.float32)
+    # hopeless channel: every frame corrupted -> retries exhausted -> drop
+    t = WireTransport(
+        resolve_codecs("float32"),
+        fault_injector=ByteFaultInjector(rates={"moments": 1.0}, max_retries=3, seed=0),
+    )
+    assert t.transfer(wire.moments_message(vec, sender=0, round=1)) is None
+    assert t.log.drops_by_kind["moments"] == 1
+    assert t.log.rejects_by_kind["moments"] == 4  # 1 try + 3 retries
+    assert t.log.messages_by_kind["moments"] == 4  # every attempt cost real bytes
+    # half-corrupted channel: rejected frames retransmit and then deliver
+    t2 = WireTransport(
+        resolve_codecs("float32"),
+        fault_injector=ByteFaultInjector(rates={"moments": 0.5}, mode="garbage", seed=1),
+    )
+    for r in range(40):
+        out = t2.transfer(wire.moments_message(vec, sender=0, round=r))
+        assert out is not None and np.array_equal(out["msg"], vec)
+    assert t2.log.rejects_total > 0 and t2.log.drops_total == 0
+    assert t2.log.messages_by_kind["moments"] > 40
+
+
+def test_serial_wire_trainer_survives_frame_corruption(small_setup):
+    sources, target, cfg = small_setup
+    faults = FaultConfig(corrupt_moments=0.3, corrupt_w_rf=0.3, corrupt_classifier=0.3)
+    tr = FedRFTCATrainer(
+        sources, target, cfg,
+        _proto(rounds=3, engine="serial", transport="wire", faults=faults),
+    )
+    tr.train()
+    assert tr.comm.rejects_total > 0  # corruption really happened
+    assert _all_finite(tr.tgt_params)  # ...and never reached the aggregate
+    assert 0.0 <= tr.evaluate() <= 1.0
+
+
+def test_serial_engine_rejects_robust_rules(small_setup):
+    sources, target, cfg = small_setup
+    with pytest.raises(ValueError, match="batched engine"):
+        FedRFTCATrainer(
+            sources, target, cfg, _proto(rounds=2, engine="serial", rule="trimmed_mean")
+        )
+
+
+# ---- batched engine: degeneracy + quarantine + Byzantine -------------------
+
+
+def test_rule_mean_plus_noop_faults_is_bitwise_degenerate(small_setup):
+    sources, target, cfg = small_setup
+    tr_ref = FedRFTCATrainer(sources, target, cfg, _proto(rounds=3))
+    tr_ref.train()
+    tr = FedRFTCATrainer(
+        sources, target, cfg, _proto(rounds=3, rule="mean", faults=FaultConfig())
+    )
+    tr.train()
+    assert _leaf_div(tr_ref.tgt_params, tr.tgt_params) == 0.0
+    assert _leaf_div(tr_ref._src_stack, tr._src_stack) == 0.0
+
+
+def test_nan_corruption_poisons_mean_but_not_robust_rules(small_setup):
+    sources, target, cfg = small_setup
+    faults = FaultConfig(corrupt_moments=0.5, corrupt_w_rf=0.5, corruption="nan")
+    tr_mean = FedRFTCATrainer(
+        sources, target, cfg, _proto(rounds=3, rule="mean", faults=faults)
+    )
+    tr_mean.train()
+    assert not _all_finite(tr_mean.tgt_params)  # the fragility, demonstrated
+    for rule in ("finite_mean", "trimmed_mean", "geomedian", "norm_clip"):
+        tr = FedRFTCATrainer(
+            sources, target, cfg, _proto(rounds=3, rule=rule, faults=faults)
+        )
+        tr.train()
+        assert _all_finite(tr.tgt_params), rule
+        assert _all_finite(tr._src_stack), rule
+
+
+def test_byzantine_clients_held_by_robust_rules(small_setup):
+    sources, target, cfg = small_setup
+    faults = FaultConfig(byzantine=(0,), byzantine_mode="scale", byzantine_scale=100.0)
+    tr = FedRFTCATrainer(
+        sources, target, cfg, _proto(rounds=3, rule="trimmed_mean", faults=faults)
+    )
+    tr.train()
+    assert _all_finite(tr.tgt_params)
+    assert 0.0 <= tr.evaluate() <= 1.0
+
+
+# ---- netsim: bounded retransmits + corruption-as-erasure -------------------
+
+
+def test_uplink_gives_up_after_retry_budget():
+    dead = LinkScenario(
+        [LinkModel(drop=1.0)], retry_s=1.0, max_retries=3, retry_jitter=0.0
+    )
+    rng = np.random.default_rng(0)
+    delivered, elapsed = dead.uplink_outcome(rng, 0, 1000)
+    assert not delivered and elapsed == pytest.approx(1.0 + 2.0 + 4.0)
+    assert dead.uplink_time(np.random.default_rng(0), 0, 1000) == math.inf
+
+
+def test_corruption_scenario_zero_rates_is_rng_transparent():
+    base = BernoulliScenario(p_msg=0.2, p_w=0.2, p_c=0.2)
+    wrapped = CorruptionScenario(base=BernoulliScenario(p_msg=0.2, p_w=0.2, p_c=0.2))
+    for t in range(5):
+        a = base.plan(np.random.default_rng(t), 6, t)
+        b = wrapped.plan(np.random.default_rng(t), 6, t)
+        assert (a.msg_clients, a.w_clients, a.c_clients) == (
+            b.msg_clients, b.w_clients, b.c_clients,
+        )
+
+
+def test_corruption_scenario_certain_corruption_erases_kind():
+    sc = CorruptionScenario(
+        base=TraceScenario([RoundPlan([0, 1, 2], [0, 1, 2], [0, 1, 2])], cycle=True),
+        rates={"w_rf": 1.0},
+    )
+    plan = sc.plan(np.random.default_rng(0), 3, 1)
+    assert plan.msg_clients == [0, 1, 2]
+    assert plan.w_clients == [] and plan.c_clients == []  # nesting C subset B
+
+
+# ---- checkpointing ---------------------------------------------------------
+
+
+def test_trainer_checkpoint_bitwise_save_restore_continue(small_setup, tmp_path):
+    sources, target, cfg = small_setup
+    ids = list(range(3))
+    plan = RoundPlan(ids, ids, ids)
+
+    tr = FedRFTCATrainer(sources, target, cfg, _proto(rounds=0))
+    for t in range(1, 3):
+        tr.run_round(t, plan)
+    tr.save_state(str(tmp_path / "ck"), step=2)
+    for t in range(3, 5):
+        tr.run_round(t, plan)
+
+    tr2 = FedRFTCATrainer(sources, target, cfg, _proto(rounds=0))
+    tr2.restore_state(str(tmp_path / "ck"))
+    for t in range(3, 5):
+        tr2.run_round(t, plan)
+
+    assert _leaf_div(tr.tgt_params, tr2.tgt_params) == 0.0
+    assert _leaf_div(tr._src_stack, tr2._src_stack) == 0.0
+    assert _leaf_div(tr.tgt_opt, tr2.tgt_opt) == 0.0
+    host = json.loads((tmp_path / "ck" / "step_00000002.npz.host.json").read_text())
+    assert "rng" in host and len(host["iters"]) == 8
+
+
+# ---- fedsim crash-restart --------------------------------------------------
+
+
+def _sched(sources, target, cfg, **async_kw):
+    tr = FedRFTCATrainer(sources, target, cfg, _proto(rounds=0))
+    return tr, AsyncScheduler(tr, AsyncConfig(buffer_size=3, compute_s=1.0, **async_kw))
+
+
+def test_server_crash_recovers_within_checkpoint_interval(small_setup, tmp_path):
+    sources, target, cfg = small_setup
+    tr, sched = _sched(
+        sources, target, cfg,
+        server_crash_times=(7.5,), checkpoint_interval_s=3.0,
+        ckpt_dir=str(tmp_path / "ck"),
+    )
+    sched.run(10)
+    assert sched.flushes == 10  # the crashed run still completes its budget
+    (rec,) = sched.recoveries
+    assert 0.0 <= rec["rollback_s"] <= 3.0  # within one checkpoint interval
+    assert rec["restored_flush"] < 10
+    assert _all_finite(tr.tgt_params)
+
+
+def test_server_crash_replay_is_deterministic(small_setup, tmp_path):
+    sources, target, cfg = small_setup
+
+    def run(d):
+        tr, sched = _sched(
+            sources, target, cfg,
+            server_crash_times=(5.5,), checkpoint_interval_s=2.0, ckpt_dir=str(d),
+        )
+        hist = sched.run(8)
+        return tr, hist
+
+    tr_a, hist_a = run(tmp_path / "a")
+    tr_b, hist_b = run(tmp_path / "b")
+    assert hist_a == hist_b
+    assert _leaf_div(tr_a.tgt_params, tr_b.tgt_params) == 0.0
+    assert _leaf_div(tr_a._src_stack, tr_b._src_stack) == 0.0
+
+
+def test_crash_without_checkpoint_config_rolls_back_to_start(small_setup, tmp_path):
+    sources, target, cfg = small_setup
+    # no checkpoint_interval_s: only the t=0 snapshot exists
+    tr, sched = _sched(
+        sources, target, cfg, server_crash_times=(3.5,), ckpt_dir=str(tmp_path / "ck")
+    )
+    sched.run(6)
+    (rec,) = sched.recoveries
+    assert rec["restored_flush"] == 0 and rec["rollback_s"] == pytest.approx(3.5)
+    assert sched.flushes == 6
+
+
+def test_edge_crash_loses_buffer_and_inflight_uplinks(small_setup):
+    doms = make_domains(5, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    ids = list(range(4))
+
+    def run():
+        proto = ProtocolConfig(
+            n_rounds=0, t_c=2, warmup_rounds=1, batch_size=32, seed=0,
+            topology=Topology((0, 0, 1, 1)),
+            scenario=TraceScenario([RoundPlan(ids, ids, ids)], cycle=True),
+        )
+        tr = FedRFTCATrainer(doms[:4], doms[4], cfg, proto)
+        sched = AsyncScheduler(
+            tr,
+            AsyncConfig(buffer_size=2, compute_s=1.0, edge_crash_times=((2.0, 0),)),
+            links=LinkScenario(links=[LinkModel(latency_s=0.4 * (i + 1)) for i in ids]),
+            edge_links=LinkScenario(
+                links=[LinkModel(latency_s=0.3), LinkModel(latency_s=0.3)]
+            ),
+        )
+        hist = sched.run(6)
+        return tr, sched, hist
+
+    tr, sched, hist = run()
+    crash_rows = [h for h in hist if h.get("crash") == "edge"]
+    assert len(crash_rows) == 1
+    # edge 0 (clients 0, 1) flushed at t=1.8 and its merged uplink was still
+    # crossing the backhaul (lands 2.1) when the edge died at t=2.0
+    assert crash_rows[0]["lost"] == [0, 1]
+    assert sched.flushes == 6  # the lost clients re-dispatched and recovered
+    tr2, _, hist2 = run()
+    assert hist == hist2
+    assert _leaf_div(tr.tgt_params, tr2.tgt_params) == 0.0
+
+
+def test_async_dead_link_client_gives_up_not_blocks(small_setup):
+    sources, target, cfg = small_setup
+    tr = FedRFTCATrainer(sources, target, cfg, _proto(rounds=0))
+    links = LinkScenario(
+        links=[LinkModel(latency_s=0.3), LinkModel(latency_s=0.3), LinkModel(drop=1.0)],
+        retry_s=0.5, max_retries=2,
+    )
+    sched = AsyncScheduler(tr, AsyncConfig(buffer_size=2, compute_s=1.0), links=links)
+    hist = sched.run(6)
+    assert sched.flushes == 6 and math.isfinite(sched.clock.now)
+    assert sched.giveups >= 1
+    members = {m for h in hist if "members" in h for m in h["members"]}
+    assert 2 not in members  # the dead-link client never lands an update
