@@ -6,6 +6,8 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run --only fig3,table2
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny fig3 + wire
+    PYTHONPATH=src python -m benchmarks.run --profile --only async
+        # wrap each bench in a wall-clock tracer, write trace_<name>.json
 
 Four benches write machine-readable records at the repo root, tracked across
 PRs: ``fig3`` -> ``BENCH_rf_tca.json`` (fit wall-times dense/stream/lobpcg,
@@ -18,10 +20,14 @@ staleness-weighted buffering vs drop-the-stragglers, accuracy-vs-buffer-size,
 virtual time to target accuracy), ``fleet`` -> ``BENCH_fleet.json``
 (rounds/sec + chunk-bounded working-set proxy vs K up to 1024+, server-ingress
 bytes flat vs two-tier, two-tier-vs-flat divergence, accuracy vs edge codec),
-and ``robust`` -> ``BENCH_robust.json`` (fault injection: zero-fault bitwise
+``robust`` -> ``BENCH_robust.json`` (fault injection: zero-fault bitwise
 degeneracy of the AggregationRule refactor, accuracy vs corruption rate and
 vs Byzantine count for mean vs each robust rule, crash-recovery rollback vs
-checkpoint interval).
+checkpoint interval), and ``obs`` -> ``BENCH_obs.json`` + ``trace_obs.json``
+(telemetry: fully-on vs off rounds/sec gated at <= 5% slowdown, bitwise
+off-vs-on degeneracy for both engines, jit-retrace sentinels at exactly one
+trace per plane, and a churn + server-crash async run exported as a
+Perfetto-viewable Chrome trace).
 
 ``--smoke`` reruns exactly those record-writing benches at tiny sizes and
 schema-validates the emitted JSON (required keys present, wall-times positive,
@@ -49,11 +55,13 @@ from benchmarks import (
     bench_hard_voting,
     bench_kernels,
     bench_laplace,
+    bench_obs,
     bench_rf_tca,
     bench_robust,
     bench_robustness,
     bench_theory,
 )
+from repro.obs import Tracer, use_tracer, validate_trace_file
 
 BENCHES = {
     "fig3": ("Fig.3 + Tables X-XIII: RF-TCA vs DA baselines", bench_rf_tca.run),
@@ -70,6 +78,7 @@ BENCHES = {
     "fig6": ("Fig.6/Remark 3: gamma sensitivity", bench_gamma.run),
     "table14": ("App.D Tab.XIV/XV: Laplace vs Gaussian kernels", bench_laplace.run),
     "kernels": ("Pallas kernels vs oracles", bench_kernels.run),
+    "obs": ("Telemetry: overhead gate, degeneracy, sentinels, trace export", bench_obs.run),
 }
 
 
@@ -242,6 +251,34 @@ def validate_robust_record(record: dict) -> list[str]:
     return list(e)
 
 
+def validate_obs_record(record: dict) -> list[str]:
+    """BENCH_obs.json contract: telemetry fully on costs <= 5% rounds/sec,
+    is bitwise-off when disabled (both engines), keeps every compiled plane
+    at exactly one trace, and the exported churn + server-crash trace is a
+    valid Chrome trace holding the whole virtual-time story."""
+    e = _SchemaErrors(record)
+    e.need("overhead.rounds_per_s_off", _is_pos)
+    e.need("overhead.rounds_per_s_on", _is_pos)
+    e.need("overhead.slowdown", lambda v: isinstance(v, (int, float)) and 0.0 <= v <= 0.05)
+    e.need("degeneracy.batched_max_param_divergence", lambda v: v == 0.0)
+    e.need("degeneracy.serial_max_param_divergence", lambda v: v == 0.0)
+    e.need("sentinel.round_traces", lambda v: v == 1)
+    e.need("sentinel.flush_traces", lambda v: v == 1)
+    e.need("trace.n_events", _is_pos)
+    e.need("trace.validation_errors", lambda v: v == [])
+    e.need("trace.server_crashes", _is_pos)
+    for span in ("compute", "uplink", "flush", "server_crash", "recovery",
+                 "checkpoint", "eval"):
+        e.need(f"trace.spans.{span}", _is_pos)
+    # independently re-validate the trace file the record points at
+    trace_path = ROOT / str(record.get("trace", {}).get("file", "trace_obs.json"))
+    if not trace_path.exists():
+        e.append(f"{trace_path.name}: not written")
+    else:
+        e.extend(f"{trace_path.name}: {msg}" for msg in validate_trace_file(trace_path))
+    return list(e)
+
+
 def self_consistent_seed_replay(record: dict) -> bool:
     try:
         return (
@@ -260,6 +297,7 @@ def run_smoke() -> None:
         ("async", bench_async.run),
         ("fleet", bench_fleet.run),
         ("robust", bench_robust.run),
+        ("obs", bench_obs.run),
     ):
         print(f"# --- smoke {key} ---", flush=True)
         t0 = time.time()
@@ -272,6 +310,7 @@ def run_smoke() -> None:
         ("BENCH_async.json", validate_async_record),
         ("BENCH_fleet.json", validate_fleet_record),
         ("BENCH_robust.json", validate_robust_record),
+        ("BENCH_obs.json", validate_obs_record),
     ):
         path = ROOT / name
         if not path.exists():
@@ -282,7 +321,7 @@ def run_smoke() -> None:
         sys.exit("bench record schema violations:\n  " + "\n  ".join(errors))
     print(
         "# smoke: BENCH_rf_tca.json + BENCH_comm.json + BENCH_async.json + "
-        "BENCH_fleet.json + BENCH_robust.json schemas OK",
+        "BENCH_fleet.json + BENCH_robust.json + BENCH_obs.json schemas OK",
         flush=True,
     )
 
@@ -293,6 +332,12 @@ def main() -> None:
     ap.add_argument(
         "--smoke", action="store_true",
         help="tiny fig3+wire runs, then schema-validate the emitted JSON records",
+    )
+    ap.add_argument(
+        "--profile", action="store_true",
+        help="run each bench under a tracer and write trace_<name>.json "
+        "(wall-clock span per bench + any virtual-time spans the fedsim "
+        "schedulers emit while it runs); open at ui.perfetto.dev",
     )
     args = ap.parse_args()
     print("name,us_per_call,derived")
@@ -306,7 +351,14 @@ def main() -> None:
         print(f"# --- {key}: {title} ---", flush=True)
         t0 = time.time()
         try:
-            fn()
+            if args.profile:
+                tracer = Tracer()
+                with use_tracer(tracer), tracer.span(key):
+                    fn()
+                tracer.write(ROOT / f"trace_{key}.json")
+                print(f"# wrote trace_{key}.json ({len(tracer.events)} events)", flush=True)
+            else:
+                fn()
         except Exception:  # noqa: BLE001
             failed.append(key)
             traceback.print_exc()

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.federated import network
 from repro.federated.network import RoundPlan, sample_participants
+from repro.obs.registry import get_registry
 
 
 class Scenario:
@@ -205,6 +206,7 @@ class LinkScenario(Scenario):
         (possibly backhaul-contended) wire time.  ``drop=0`` draws no retry
         randomness, keeping fault-free rng streams bit-identical to the seed.
         """
+        reg = get_registry()
         link = self.links[client]
         t = 0.0
         if link.drop:
@@ -212,7 +214,9 @@ class LinkScenario(Scenario):
                 if rng.random() >= link.drop:
                     break
                 if attempt == self.max_retries:
+                    reg.counter("net.giveups").inc(client=client)
                     return False, t  # budget exhausted: no wait after last try
+                reg.counter("net.retries").inc(client=client)
                 wait = self.retry_s * (self.backoff**attempt)
                 if self.retry_jitter:
                     wait *= 1.0 + self.retry_jitter * (2.0 * rng.random() - 1.0)
@@ -221,7 +225,9 @@ class LinkScenario(Scenario):
         wire = nbytes / link.bandwidth_bps
         if math.isfinite(self.backhaul_bps):
             wire = max(wire, (nbytes + inflight_bytes) / self.backhaul_bps)
-        return True, t + link.latency_s + jitter + wire
+        elapsed = t + link.latency_s + jitter + wire
+        reg.histogram("net.uplink_s").observe(elapsed, client=client)
+        return True, elapsed
 
     def uplink_time(
         self,

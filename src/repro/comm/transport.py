@@ -30,6 +30,8 @@ import numpy as np
 
 from repro.comm import wire
 from repro.comm.codecs import Codec, get_codec
+from repro.obs.records import CommRecord
+from repro.obs.registry import get_registry
 
 KIND_FIELD = {"moments": "data_messages", "w_rf": "w_rf", "classifier": "classifier"}
 
@@ -83,14 +85,35 @@ class CommLog:
         setattr(self, KIND_FIELD[kind], getattr(self, KIND_FIELD[kind]) + n_floats)
         self.bytes_by_kind[kind] += nbytes
         self.messages_by_kind[kind] += 1
+        reg = get_registry()
+        reg.counter("comm.bytes").inc(nbytes, kind=kind)
+        reg.counter("comm.messages").inc(kind=kind)
+        reg.counter("comm.floats").inc(n_floats, kind=kind)
 
     def reject(self, kind: str) -> None:
         """One frame failed integrity and was discarded (will retransmit)."""
         self.rejects_by_kind[kind] += 1
+        get_registry().counter("comm.rejects").inc(kind=kind)
 
     def drop(self, kind: str) -> None:
         """One payload was given up on after exhausting its retry budget."""
         self.drops_by_kind[kind] += 1
+        get_registry().counter("comm.drops").inc(kind=kind)
+
+    def snapshot(self) -> CommRecord:
+        """The ledger as one typed record (see ``repro.obs.records``)."""
+        return CommRecord(
+            rounds=self.rounds,
+            data_messages=self.data_messages,
+            w_rf=self.w_rf,
+            classifier=self.classifier,
+            bytes_by_kind=dict(self.bytes_by_kind),
+            messages_by_kind=dict(self.messages_by_kind),
+            rejects_by_kind=dict(self.rejects_by_kind),
+            drops_by_kind=dict(self.drops_by_kind),
+            bytes_total=self.bytes_total,
+            floats_total=self.total,
+        )
 
 
 def resolve_codecs(

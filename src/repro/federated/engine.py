@@ -61,10 +61,24 @@ import jax.numpy as jnp
 from repro.federated.model import ClientConfig, client_message, source_loss, target_loss
 from repro.fleet import hierarchy
 from repro.fleet.sharding import chunked_vmap
+from repro.obs import sentinel
 from repro.optim import apply_updates
 from repro.robust.rules import MeanRule
 
 _MASS_EPS = 1e-12
+
+
+def client_delta_norms(new, old):
+    """Per-client L2 norm of a stacked-pytree parameter delta: (K,)."""
+    pairs = zip(jax.tree_util.tree_leaves(new), jax.tree_util.tree_leaves(old))
+    sq = sum(jnp.sum((a - b) ** 2, axis=tuple(range(1, a.ndim))) for a, b in pairs)
+    return jnp.sqrt(sq)
+
+
+def tree_delta_norm(new, old):
+    """Whole-pytree L2 norm of a parameter delta: () scalar."""
+    pairs = zip(jax.tree_util.tree_leaves(new), jax.tree_util.tree_leaves(old))
+    return jnp.sqrt(sum(jnp.sum((a - b) ** 2) for a, b in pairs))
 
 
 def stack_trees(trees: list):
@@ -101,6 +115,7 @@ class BatchedRoundEngine:
         client_chunk: int | None = None,
         rule=None,
         faults=None,
+        probe: bool = False,
     ):
         """``freeze_w_rf`` pins W_RF at its (shared, seed-derived) init:
         gradients through it are stopped and W-aggregation is skipped, so all
@@ -129,6 +144,20 @@ class BatchedRoundEngine:
         into the stacked client payloads after the channel — the undefended
         attack surface the robust rules are measured against.  Both default
         to the bit-exact fault-free seed program.
+
+        Observability: ``probe=True`` makes ``_round_fn``/``_flush_fn``
+        return a fifth output — a dict of in-graph health probes
+        (``moment_mass``, per-client ``update_norm``, ``tgt_update_norm``,
+        and the rule's ``attribution_moments`` / ``attribution_w_rf``
+        trim/quarantine indicators) — computed inside the same compiled
+        program, so both planes stay one dispatch each.  The flag is fixed
+        at construction (each variant compiles exactly once); the probe
+        outputs never feed back into the parameter computation, so the
+        trajectories are bitwise identical either way (test-gated).  The
+        three jitted planes are wrapped in :mod:`repro.obs.sentinel`
+        retrace counters (planes ``engine.round`` / ``engine.flush`` /
+        ``engine.warmup``) — a trace-time-only Python side effect that
+        detects silent recompilation without touching the compiled program.
         """
         self.cfg, self.opt, self.omega = cfg, opt, omega
         self.rule = rule if rule is not None else MeanRule()
@@ -141,14 +170,15 @@ class BatchedRoundEngine:
         self.topology = topology
         self.edge_channel = edge_channel or {}
         self.client_chunk = client_chunk
+        self.probe = probe
         if topology is not None:
             self._seg_ids = jnp.asarray(topology.segment_ids)
             self._n_edges = topology.n_edges
         else:
             self._seg_ids, self._n_edges = None, 0
-        self._round = jax.jit(self._round_fn)
-        self._warmup = jax.jit(self._warmup_fn)
-        self._flush = jax.jit(self._flush_fn)
+        self._round = jax.jit(sentinel.wrap("engine.round", self._round_fn))
+        self._warmup = jax.jit(sentinel.wrap("engine.warmup", self._warmup_fn))
+        self._flush = jax.jit(sentinel.wrap("engine.flush", self._flush_fn))
 
     # -- building blocks ----------------------------------------------------
 
@@ -232,14 +262,21 @@ class BatchedRoundEngine:
             msgs = self.faults.apply("moments", msgs, jax.random.fold_in(chan_key, 7))
         return msgs
 
-    def _merge_msgs(self, msgs, weights, chan_key):
+    def _merge_msgs(self, msgs, weights, chan_key, probes=None):
         """What the target trains on.  Flat plane: the rule's moment merge —
         (msgs, weights) unchanged for the mean (the seed's per-pair MMD),
         the single robust pooled moment row otherwise.  Two-tier plane:
         per-edge pooled moments + masses, robustly re-merged over edges when
         the rule is not the mean (an adversarial *edge* is then one outlier
-        row, exactly like an adversarial client in the flat plane)."""
+        row, exactly like an adversarial client in the flat plane).
+
+        ``probes`` (a dict, or None) collects in-graph health outputs: the
+        delivered moment mass and the rule's per-row (client in the flat
+        plane, edge in the two-tier plane) trim/quarantine attribution."""
         if self._seg_ids is None:
+            if probes is not None:
+                probes["moment_mass"] = jnp.sum(weights)
+                probes["attribution_moments"] = self.rule.attribution(msgs, weights)
             return self.rule.merge_moments(msgs, weights)
         pooled, masses = hierarchy.edge_moment_merge(
             msgs,
@@ -249,6 +286,9 @@ class BatchedRoundEngine:
             self.edge_channel.get("moments"),
             jax.random.fold_in(chan_key, 4),
         )
+        if probes is not None:
+            probes["moment_mass"] = jnp.sum(masses)
+            probes["attribution_moments"] = self.rule.attribution(pooled, masses)
         return self.rule.merge_moments(pooled, masses)
 
     def _target_scan(self, tgt_p, tgt_o, xt_steps, msgs, weights, any_gate):
@@ -284,7 +324,7 @@ class BatchedRoundEngine:
         rows = sums / jnp.maximum(shaped, _MASS_EPS)
         return self.rule.weighted_sum(rows, masses)
 
-    def _merge_w_rf(self, src_p, tgt_p, sel, wsel, chan_key):
+    def _merge_w_rf(self, src_p, tgt_p, sel, wsel, chan_key, probes=None):
         """Weighted W_RF merge over participants + the target (Alg. 4)."""
         k_clients = sel.shape[0]
         chan_w = self.channel.get("w_rf")
@@ -297,6 +337,9 @@ class BatchedRoundEngine:
         if self.faults is not None:
             w_up = self.faults.apply("w_rf", w_up, jax.random.fold_in(chan_key, 8))
         if self._seg_ids is None:
+            if probes is not None:
+                # post-channel / post-fault uplinks: exactly what the rule saw
+                probes["attribution_w_rf"] = self.rule.attribution(w_up, wsel)
             # rule-owned contraction; MeanRule is the seed einsum bit-for-bit
             w_sum, mass = self.rule.weighted_sum(w_up, wsel)
         else:
@@ -308,6 +351,10 @@ class BatchedRoundEngine:
                 self.edge_channel.get("w_rf"),
                 jax.random.fold_in(chan_key, 5),
             )
+            if probes is not None:
+                shaped = masses.reshape((-1,) + (1,) * (sums.ndim - 1))
+                rows = sums / jnp.maximum(shaped, _MASS_EPS)
+                probes["attribution_w_rf"] = self.rule.attribution(rows, masses)
             w_sum, mass = self._server_merge(sums, masses)
         w_avg = (w_sum + w_tgt_up) / (mass + 1.0)
         src_p["w_rf"] = jnp.where(
@@ -400,6 +447,8 @@ class BatchedRoundEngine:
     ):
         omega = self.omega
         chan_m = self.channel.get("moments")
+        probes = {} if self.probe else None
+        src_p0, tgt_p0 = (src_p, tgt_p) if self.probe else (None, None)
 
         # target broadcasts its message to the sources in S_t (the one
         # downlink the protocol accounts; distorted by the wire codec)
@@ -416,7 +465,7 @@ class BatchedRoundEngine:
         # backhaul uplink per edge) in the two-tier plane
         if self.exchange_messages:
             msgs = self._uplinked_msgs(src_p, x_msg, msg_mask, chan_key)
-            merged, tgt_w = self._merge_msgs(msgs, mmd_mask, chan_key)
+            merged, tgt_w = self._merge_msgs(msgs, mmd_mask, chan_key, probes)
             any_msg = jnp.sum(mmd_mask) > 0
             tgt_p, tgt_o = self._target_scan(
                 tgt_p, tgt_o, xt_steps, merged, tgt_w, any_msg
@@ -426,7 +475,9 @@ class BatchedRoundEngine:
         # Frozen-W mode (seed-replay wire codec) skips it: every client's
         # W_RF is already bit-identical to the shared init.
         if self.aggregate_w_rf and not self.freeze_w_rf:
-            src_p, tgt_p = self._merge_w_rf(src_p, tgt_p, w_mask, w_mask, chan_key)
+            src_p, tgt_p = self._merge_w_rf(
+                src_p, tgt_p, w_mask, w_mask, chan_key, probes
+            )
 
         # classifier aggregation every T_C rounds over plan.c_clients
         if self.aggregate_classifier:
@@ -434,6 +485,10 @@ class BatchedRoundEngine:
                 src_p, tgt_p, c_mask, c_mask, do_clf, chan_key, 1.0
             )
 
+        if probes is not None:
+            probes["update_norm"] = client_delta_norms(src_p, src_p0)
+            probes["tgt_update_norm"] = tree_delta_norm(tgt_p, tgt_p0)
+            return src_p, src_o, tgt_p, tgt_o, probes
         return src_p, src_o, tgt_p, tgt_o
 
     def round(self, src_p, src_o, tgt_p, tgt_o, batch, masks, chan_key=None):
@@ -513,6 +568,8 @@ class BatchedRoundEngine:
         the fedsim tests pin at <= 1e-6.
         """
         wsel = buf_mask * weights
+        probes = {} if self.probe else None
+        src_p0, tgt_p0 = (src_p, tgt_p) if self.probe else (None, None)
 
         # local source training at dispatch inputs; keep only buffered rows
         gates = buf_mask if self.exchange_messages else jnp.zeros_like(buf_mask)
@@ -524,7 +581,7 @@ class BatchedRoundEngine:
         # (per-edge pooled in the two-tier plane, like the sync round)
         if self.exchange_messages:
             msgs = self._uplinked_msgs(src_p, x_msg, msg_mask, chan_key)
-            merged, tgt_w = self._merge_msgs(msgs, wsel, chan_key)
+            merged, tgt_w = self._merge_msgs(msgs, wsel, chan_key, probes)
             any_msg = jnp.sum(buf_mask) > 0
             tgt_p, tgt_o = self._target_scan(
                 tgt_p, tgt_o, xt_steps, merged, tgt_w, any_msg
@@ -532,7 +589,9 @@ class BatchedRoundEngine:
 
         # staleness-weighted W_RF merge over the buffer + the server copy
         if self.aggregate_w_rf and not self.freeze_w_rf:
-            src_p, tgt_p = self._merge_w_rf(src_p, tgt_p, buf_mask, wsel, chan_key)
+            src_p, tgt_p = self._merge_w_rf(
+                src_p, tgt_p, buf_mask, wsel, chan_key, probes
+            )
 
         # staleness-weighted classifier merge on T_C-interval flushes
         if self.aggregate_classifier:
@@ -540,6 +599,10 @@ class BatchedRoundEngine:
                 src_p, tgt_p, buf_mask, wsel, do_clf, chan_key, 1e-9
             )
 
+        if probes is not None:
+            probes["update_norm"] = client_delta_norms(src_p, src_p0)
+            probes["tgt_update_norm"] = tree_delta_norm(tgt_p, tgt_p0)
+            return src_p, src_o, tgt_p, tgt_o, probes
         return src_p, src_o, tgt_p, tgt_o
 
     def flush(self, src_p, src_o, tgt_p, tgt_o, batch, masks, chan_key=None):

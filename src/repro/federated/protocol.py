@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import ckpt
 from repro.comm import autocodec, netsim, transport as comm_transport, wire
 from repro.comm.transport import CommLog  # noqa: F401  (seed-era import path)
@@ -91,6 +92,7 @@ from repro.federated.model import (
     target_loss,
     w_rf_key,
 )
+from repro.obs import sentinel
 from repro.optim import adam, apply_updates
 from repro.robust import ByteFaultInjector, build_fault_plan, get_rule
 from repro.utils.tree import tree_mean
@@ -153,6 +155,15 @@ class ProtocolConfig:
     # drop.  None (or an all-zero config) compiles the exact fault-free
     # program, bit-for-bit.
     faults: Any = None
+    # -- observability (repro.obs) -------------------------------------------
+    # ``probe``: in-graph health probes — the batched planes additionally
+    # return moment mass, per-client update norms and the rule's per-client
+    # trim/quarantine attribution, collected host-side after each dispatch
+    # (``trainer.last_probes``) and emitted into the active metrics registry.
+    # Adds outputs to the compiled planes, never dispatches: round/flush stay
+    # one compiled call each, and the parameter trajectory is bitwise
+    # identical either way (test-gated).
+    probe: bool = False
     seed: int = 0
 
 
@@ -307,6 +318,14 @@ class FedRFTCATrainer:
         # buffered merges.
         self.model_version = 0
         self.client_versions = np.zeros(self.k, dtype=np.int64)
+        # latest in-graph health probes (host numpy), set per round/flush
+        # when ``proto.probe`` is on (see repro.obs.probes).  Emission is
+        # pipelined one step deep: round t's probes are materialized after
+        # round t+1 has been dispatched, so the device->host sync never sits
+        # between two compiled dispatches (reading ``last_probes`` or
+        # finishing a run drains the pipeline).
+        self._last_probes: dict | None = None
+        self._pending_probes: tuple[str, dict] | None = None
         # Ragged client data: per-client batch sizes capped at each client's
         # own n_k.  The serial plane consumes them directly; the batched plane
         # pads every client to the max width and masks the padding (the seed
@@ -363,6 +382,7 @@ class FedRFTCATrainer:
                 client_chunk=proto.client_chunk,
                 rule=self.rule,
                 faults=self._fault_plan,
+                probe=proto.probe,
             )
             self._src_stack = stack_trees(src_params)
             self._src_opt_stack = jax.vmap(self.opt.init)(self._src_stack)
@@ -527,7 +547,11 @@ class FedRFTCATrainer:
             nbytes = wire.serialized_size(
                 kind, self._specs[kind], self.transport.codecs[kind]
             )
-            self.ingress_bytes[kind] += len(members) * nbytes
+            total = len(members) * nbytes
+            self.ingress_bytes[kind] += total
+            obs.metrics().counter("fleet.ingress_bytes").inc(
+                total, kind=kind, tier="flat"
+            )
         else:
             edges = self.topology.edges_of(members)
             self.edge_transport.account_spec(
@@ -536,7 +560,11 @@ class FedRFTCATrainer:
             nbytes = wire.serialized_size(
                 kind, self._edge_specs[kind], self.edge_transport.codecs[kind]
             )
-            self.ingress_bytes[kind] += len(edges) * nbytes
+            total = len(edges) * nbytes
+            self.ingress_bytes[kind] += total
+            obs.metrics().counter("fleet.ingress_bytes").inc(
+                total, kind=kind, tier="edge"
+            )
 
     def _account_comm(self, plan: network.RoundPlan, t: int) -> None:
         """Byte + float accounting for the planes whose exchange is in-graph
@@ -569,7 +597,6 @@ class FedRFTCATrainer:
         def maybe_freeze(p):
             return {**p, "w_rf": jax.lax.stop_gradient(p["w_rf"])} if frozen else p
 
-        @jax.jit
         def src_step_mmd(params, opt_state, x, y, tgt_msg):
             (loss, aux), grads = jax.value_and_grad(
                 lambda p: source_loss(
@@ -580,7 +607,6 @@ class FedRFTCATrainer:
             upd, opt_state = self.opt.update(grads, opt_state, params)
             return apply_updates(params, upd), opt_state, aux
 
-        @jax.jit
         def src_step_plain(params, opt_state, x, y):
             zero = jnp.zeros((2 * cfg.n_rff,))
             (loss, aux), grads = jax.value_and_grad(
@@ -592,7 +618,6 @@ class FedRFTCATrainer:
             upd, opt_state = self.opt.update(grads, opt_state, params)
             return apply_updates(params, upd), opt_state, aux
 
-        @jax.jit
         def tgt_step(params, opt_state, x, src_msgs):
             (loss, aux), grads = jax.value_and_grad(
                 lambda p: target_loss(maybe_freeze(p), omega, x, src_msgs, cfg),
@@ -601,12 +626,19 @@ class FedRFTCATrainer:
             upd, opt_state = self.opt.update(grads, opt_state, params)
             return apply_updates(params, upd), opt_state, aux
 
-        @jax.jit
         def msg_of(params, x, sign):
             return client_message(params, omega, x, sign)
 
-        self._src_step_mmd, self._src_step_plain = src_step_mmd, src_step_plain
-        self._tgt_step, self._msg_of = tgt_step, msg_of
+        # NOTE: the serial plane's steps legitimately retrace per distinct
+        # client batch shape (ragged clients dispatch at their true widths) —
+        # these sentinel planes are informative, never gated like the batched
+        # ``engine.*`` planes
+        self._src_step_mmd = jax.jit(sentinel.wrap("serial.src_step_mmd", src_step_mmd))
+        self._src_step_plain = jax.jit(
+            sentinel.wrap("serial.src_step_plain", src_step_plain)
+        )
+        self._tgt_step = jax.jit(sentinel.wrap("serial.tgt_step", tgt_step))
+        self._msg_of = jax.jit(sentinel.wrap("serial.msg_of", msg_of))
 
     # ---- one communication round (Alg. 5 body) -------------------------------
     def round(self, t: int) -> dict[str, Any]:
@@ -626,8 +658,10 @@ class FedRFTCATrainer:
             self._round_serial(t, plan)
             if not self.transport.applies_values:
                 self._account_comm(plan, t)  # wire serial accounts per transfer
+        obs.metrics().counter("fed.rounds").inc(engine=self.proto.engine)
         self.comm.rounds += 1
         self.model_version += 1
+        obs.metrics().gauge("fed.model_version").set(self.model_version)
         if plan.w_clients:  # clients whose aggregated W_RF was assigned back
             self.client_versions[list(plan.w_clients)] = self.model_version
         return {"plan": plan}
@@ -698,6 +732,27 @@ class FedRFTCATrainer:
             it.set_state(st)
         self.model_version = int(host["model_version"])
 
+    def stash_probes(self, plane: str, probes: dict) -> None:
+        """Queue a dispatch's device-side probes for host emission, emitting
+        whatever was queued before (the one-step pipeline: by the time the
+        next dispatch is enqueued, the previous one's outputs are ready, so
+        the transfer no longer stalls the device)."""
+        self.flush_probes()
+        self._pending_probes = (plane, probes)
+
+    def flush_probes(self) -> dict | None:
+        """Drain the probe pipeline: materialize + emit any queued probes."""
+        if self._pending_probes is not None:
+            plane, dev = self._pending_probes
+            self._pending_probes = None
+            self._last_probes = obs.emit_probes(dev, plane=plane)
+        return self._last_probes
+
+    @property
+    def last_probes(self) -> dict | None:
+        """Most recent round/flush probes as host numpy (drains the queue)."""
+        return self.flush_probes()
+
     def _round_batched(self, t: int, plan: network.RoundPlan) -> None:
         batch = self._round_batch()
         masks = {
@@ -707,12 +762,7 @@ class FedRFTCATrainer:
             "c": self._mask_of(plan.c_clients),
             "do_clf": jnp.asarray(t % self.proto.t_c == 0),
         }
-        (
-            self._src_stack,
-            self._src_opt_stack,
-            self.tgt_params,
-            self.tgt_opt,
-        ) = self._engine.round(
+        out = self._engine.round(
             self._src_stack,
             self._src_opt_stack,
             self.tgt_params,
@@ -721,6 +771,14 @@ class FedRFTCATrainer:
             masks,
             chan_key=jax.random.fold_in(self._chan_base, t),
         )
+        (
+            self._src_stack,
+            self._src_opt_stack,
+            self.tgt_params,
+            self.tgt_opt,
+        ) = out[:4]
+        if self._engine.probe:
+            self.stash_probes("round", out[4])
 
     def _round_serial(self, t: int, plan: network.RoundPlan) -> None:
         proto = self.proto
@@ -851,6 +909,7 @@ class FedRFTCATrainer:
             self.round(t)
             if eval_every and t % eval_every == 0:
                 accs.append(self.evaluate())
+        self.flush_probes()
         return accs
 
     # ---- evaluation -----------------------------------------------------------

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.comm import wire
 from repro.comm.netsim import LinkScenario, amortized_interval_bytes
 from repro.federated import aggregation
@@ -80,6 +81,7 @@ from repro.fedsim.events import (
     SyncBarrier,
     UplinkGaveUp,
 )
+from repro.obs.records import CrashRecord, EvalRecord, FlushRecord, RoundRecord
 
 
 def _per_client(value, k: int, what: str) -> np.ndarray:
@@ -92,7 +94,23 @@ def _per_client(value, k: int, what: str) -> np.ndarray:
 
 
 class _SchedulerBase:
-    """Shared plumbing: virtual clock, per-client compute times, link wiring."""
+    """Shared plumbing: virtual clock, per-client compute times, link wiring.
+
+    Telemetry: when a global :class:`repro.obs.Tracer` is installed
+    (``obs.use_tracer()``), both schedulers emit their episodes — sync
+    rounds; async compute / uplink / flush / crash / recovery /
+    checkpoint — as spans on the *virtual-time* track, keyed to the
+    VirtualClock (client ``i`` on lane ``tid=i+1``, the server on
+    ``tid=0``, edge backhauls above the client lanes), so an exported
+    Chrome trace reconstructs the whole timeline.  Metrics go to the
+    active ``obs`` registry; both default to no-ops.
+    """
+
+    @property
+    def tracer(self):
+        # resolved per use so ``obs.use_tracer()`` around run() works even
+        # when the scheduler was constructed outside the context
+        return obs.get_tracer()
 
     def __init__(self, trainer, *, availability, links, compute_s, seed):
         self.trainer = trainer
@@ -229,18 +247,27 @@ class SyncScheduler(_SchedulerBase):
                     [i for i in plan.w_clients if i in online],
                     [i for i in plan.c_clients if i in online],
                 )
+            start = self.clock.now
             tr.run_round(t, plan)
             self.queue.push(self.clock.now + self._round_duration(plan), SyncBarrier(t))
             barrier_t, _ = self.queue.pop()
             self.clock.advance_to(barrier_t)
-            row = {
-                "t": self.clock.now,
-                "round": t,
-                "participants": len(plan.msg_clients),
-            }
+            row = RoundRecord(
+                t=self.clock.now, round=t, participants=len(plan.msg_clients)
+            )
             if eval_every and t % eval_every == 0:
                 row["acc"] = tr.evaluate()
             self.history.append(row)
+            tracer = self.tracer
+            if tracer is not None:
+                tracer.begin(
+                    "round", start, args={"round": t, "participants": row.participants}
+                )
+                tracer.end("round", self.clock.now)
+            reg = obs.metrics()
+            reg.counter("fedsim.rounds").inc()
+            reg.histogram("fedsim.round_s").observe(self.clock.now - start)
+        tr.flush_probes()  # drain the one-step probe pipeline
         return self.history
 
 
@@ -363,6 +390,9 @@ class AsyncScheduler(_SchedulerBase):
         tgt_msg = np.asarray(tr.target_message(chan_key=chan_key))
         if tr.proto.exchange_messages:
             tr.transport.account_spec("moments", tr._specs["moments"], count=1)
+        tracer = self.tracer
+        reg = obs.metrics()
+        reg.counter("fedsim.dispatches").inc()
         for i in clients:
             xs, ys, x_msg = tr.draw_client_dispatch(i)
             self.pending[i] = {
@@ -374,6 +404,17 @@ class AsyncScheduler(_SchedulerBase):
                 "tgt_msg": tgt_msg,
             }
             delivered, delay = self._completion_delay(i, t)
+            reg.counter("fedsim.client_dispatches").inc(client=i)
+            if tracer is not None:
+                compute = float(self.compute_s[i])
+                tracer.complete(
+                    "compute", t, compute, tid=i + 1,
+                    args={"client": i, "version": self.version},
+                )
+                tracer.complete(
+                    "uplink" if delivered else "uplink_giveup",
+                    t + compute, delay - compute, tid=i + 1, args={"client": i},
+                )
             ev = (
                 ClientUpdateArrived(i, self.version, int(self.epoch[i]), t)
                 if delivered
@@ -404,10 +445,12 @@ class AsyncScheduler(_SchedulerBase):
         """Buffer the update at the client's edge; return the edge id when
         its buffer just filled (None otherwise)."""
         if ev.epoch != self.epoch[ev.client] or ev.client not in self.live:
+            obs.metrics().counter("fedsim.orphaned_arrivals").inc()
             return None  # churned away mid-flight: the update is lost
         entry = self.pending.pop(ev.client, None)
         if entry is None or entry["version"] != ev.version:
             return None  # superseded dispatch (defensive; churn covers this)
+        obs.metrics().counter("fedsim.arrivals").inc()
         if self.trainer.proto.exchange_messages:
             self.trainer.transport.account_spec(
                 "moments", self.trainer._specs["moments"], count=1
@@ -469,6 +512,9 @@ class AsyncScheduler(_SchedulerBase):
         ``FedRFTCATrainer.save_state``) tagged with the flush count."""
         self.trainer.save_state(self.ckpt_dir, step=self.flushes)
         self._ckpt_meta = {"t": t, "flushes": self.flushes}
+        obs.metrics().counter("fedsim.checkpoints").inc()
+        if self.tracer is not None:
+            self.tracer.instant("checkpoint", t, args={"flushes": self.flushes})
 
     def _maybe_checkpoint(self, t: float) -> None:
         if self._next_ckpt is None or t < self._next_ckpt:
@@ -509,14 +555,20 @@ class AsyncScheduler(_SchedulerBase):
         self._edge_uplinks.clear()
         self._inflight.clear()
         self._edge_inflight.clear()
-        row = {
-            "t": t,
-            "crash": "server",
-            "restored_flush": self.flushes,
-            "rollback_s": rollback,
-        }
+        row = CrashRecord(
+            t=t, crash="server", restored_flush=self.flushes, rollback_s=rollback
+        )
         self.recoveries.append(row)
         self.history.append(row)
+        reg = obs.metrics()
+        reg.counter("fedsim.server_crashes").inc()
+        reg.histogram("fedsim.rollback_s").observe(rollback)
+        if self.tracer is not None:
+            self.tracer.instant("server_crash", t, args={"rollback_s": rollback})
+            self.tracer.begin(
+                "recovery", t, args={"restored_flush": self.flushes}
+            )
+            self.tracer.end("recovery", t + self.cfg.restart_delay_s)
         self._redispatch_later(self.live, t)
 
     def _crash_edge(self, t: float, edge: int) -> None:
@@ -529,7 +581,10 @@ class AsyncScheduler(_SchedulerBase):
             if e_id == edge:
                 lost += [e["client"] for e in entries]
                 del self._edge_uplinks[seq]
-        self.history.append({"t": t, "crash": "edge", "edge": edge, "lost": sorted(lost)})
+        self.history.append(CrashRecord(t=t, crash="edge", edge=edge, lost=sorted(lost)))
+        obs.metrics().counter("fedsim.edge_crashes").inc(edge=edge)
+        if self.tracer is not None:
+            self.tracer.instant("edge_crash", t, args={"edge": edge, "lost": len(lost)})
         self._redispatch_later(lost, t)
 
     # -- the buffered flush -------------------------------------------------
@@ -575,7 +630,7 @@ class AsyncScheduler(_SchedulerBase):
             "weights": jnp.asarray(wts),
             "do_clf": jnp.asarray(f % tr.proto.t_c == 0),
         }
-        (tr._src_stack, tr._src_opt_stack, tr.tgt_params, tr.tgt_opt) = tr._engine.flush(
+        out = tr._engine.flush(
             tr._src_stack,
             tr._src_opt_stack,
             tr.tgt_params,
@@ -584,6 +639,9 @@ class AsyncScheduler(_SchedulerBase):
             masks,
             chan_key=jax.random.fold_in(tr._chan_base, f),
         )
+        (tr._src_stack, tr._src_opt_stack, tr.tgt_params, tr.tgt_opt) = out[:4]
+        if tr._engine.probe:
+            tr.stash_probes("flush", out[4])
         # host-side accounting, same message counts as the sync round body;
         # the ingress leg collapses to one merged uplink per active edge in
         # the two-tier plane (here: the one edge whose buffer flushed)
@@ -602,15 +660,26 @@ class AsyncScheduler(_SchedulerBase):
         self.version += 1
         tr.model_version = self.version
         tr.client_versions[members] = self.version
-        row = {
-            "t": t,
-            "flush": f,
-            "version": self.version,
-            "members": sorted(members),
-            "staleness": staleness.tolist(),
-            "weights": w_members.tolist(),
-        }
+        row = FlushRecord(
+            t=t,
+            flush=f,
+            version=self.version,
+            members=sorted(members),
+            staleness=staleness.tolist(),
+            weights=w_members.tolist(),
+        )
         self.history.append(row)
+        reg = obs.metrics()
+        reg.counter("fedsim.flushes").inc()
+        reg.histogram("fedsim.flush_members").observe(len(members))
+        for s in row.staleness:
+            reg.histogram("fedsim.staleness").observe(s)
+        if self.tracer is not None:
+            self.tracer.begin(
+                "flush", t,
+                args={"flush": f, "members": row.members, "staleness": row.staleness},
+            )
+            self.tracer.end("flush", t)
         return row
 
     # -- event loop ---------------------------------------------------------
@@ -675,6 +744,7 @@ class AsyncScheduler(_SchedulerBase):
                         continue
                     del self.pending[ev.client]
                     self.giveups += 1
+                    obs.metrics().counter("fedsim.giveups").inc(kind="uplink")
                     joined.append(ev.client)  # lost, not looping: dispatch fresh
             if joined:
                 self._dispatch(dict.fromkeys(joined), t)
@@ -684,7 +754,10 @@ class AsyncScheduler(_SchedulerBase):
                     # the tick's own time is exact; keep ticking only while
                     # progress is still possible (else the chain would spin
                     # an otherwise-drained queue forever)
-                    self.history.append({"t": t, "eval": ev.index, "acc": tr.evaluate()})
+                    acc = tr.evaluate()
+                    self.history.append(EvalRecord(t=t, eval=ev.index, acc=acc))
+                    if self.tracer is not None:
+                        self.tracer.instant("eval", t, args={"acc": float(acc)})
                     if self.queue or self.pending or self._edge_uplinks:
                         self.queue.push(
                             t + self.cfg.eval_interval, EvalTick(ev.index + 1)
@@ -702,6 +775,11 @@ class AsyncScheduler(_SchedulerBase):
                         # the edge merges its buffer and ships ONE uplink;
                         # the server flushes when it crosses the backhaul
                         delivered, delay = self._edge_uplink_delay(edge, t)
+                        if self.tracer is not None:
+                            self.tracer.complete(
+                                "edge_uplink" if delivered else "edge_uplink_giveup",
+                                t, delay, tid=tr.k + 1 + edge, args={"edge": edge},
+                            )
                         if delivered:
                             self._edge_seq += 1
                             self._edge_uplinks[self._edge_seq] = (edge, entries)
@@ -712,6 +790,7 @@ class AsyncScheduler(_SchedulerBase):
                             # backhaul gave up: the merged buffer is lost and
                             # its clients re-dispatch at the give-up instant
                             self.giveups += 1
+                            obs.metrics().counter("fedsim.giveups").inc(kind="backhaul")
                             for i in sorted({e["client"] for e in entries}):
                                 self.queue.push(t + delay, ClientJoined(i))
                         continue
@@ -729,4 +808,5 @@ class AsyncScheduler(_SchedulerBase):
                 if self.flushes >= n_flushes:
                     break
                 self._dispatch(row["members"], t)
+        tr.flush_probes()  # drain the one-step probe pipeline
         return self.history

@@ -41,6 +41,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.obs.registry import get_registry
+
 _MASS_EPS = 1e-9  # empty-edge guard; a zero mass also zeroes the merge weight
 
 
@@ -50,6 +52,11 @@ def _sums_and_mass(flat, weights, seg_ids, n_edges):
     # the engine, which imports this module — resolve the cycle at trace time
     from repro.federated.aggregation import edge_weighted_sums
 
+    # runs at trace time only (the merges live inside the jitted planes), so
+    # this counts segment-reduce *instantiations per compile*, not executions
+    get_registry().counter("fleet.edge_merges").inc(
+        clients=flat.shape[0], edges=n_edges
+    )
     aug = jnp.concatenate([flat, jnp.ones((flat.shape[0], 1), flat.dtype)], axis=1)
     out = edge_weighted_sums(aug, seg_ids, weights, n_edges)
     return out[:, :-1], out[:, -1]

@@ -1,0 +1,79 @@
+"""Unified telemetry layer: metrics, virtual-time tracing, health probes.
+
+One spine for the stack's observability (see each submodule's docstring):
+
+- :mod:`repro.obs.registry` — labeled counters/gauges/histograms with a
+  no-op default (telemetry off costs one attribute lookup + empty call).
+- :mod:`repro.obs.tracing` — virtual/wall-clock spans exported as Chrome
+  trace-event JSON (Perfetto-viewable).
+- :mod:`repro.obs.sentinel` — jit retrace counters per compiled plane.
+- :mod:`repro.obs.records` — typed history/ledger records with dict views.
+- :mod:`repro.obs.probes` — host-side emission of in-graph health probes.
+"""
+from repro.obs import sentinel
+from repro.obs.probes import emit_probes, quarantine_totals
+from repro.obs.records import (
+    CommRecord,
+    CrashRecord,
+    EvalRecord,
+    FlushRecord,
+    Record,
+    RoundRecord,
+    as_rows,
+)
+from repro.obs.registry import (
+    NULL,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    get_registry,
+    set_registry,
+    use_registry,
+)
+from repro.obs.tracing import (
+    PID_VIRTUAL,
+    PID_WALL,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    use_tracer,
+    validate_trace,
+    validate_trace_file,
+)
+
+# `metrics()` reads better than `get_registry()` at instrumentation sites:
+#   metrics().counter("comm.bytes").inc(n, kind=kind)
+metrics = get_registry
+
+__all__ = [
+    "NULL",
+    "PID_VIRTUAL",
+    "PID_WALL",
+    "CommRecord",
+    "Counter",
+    "CrashRecord",
+    "EvalRecord",
+    "FlushRecord",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullRegistry",
+    "Record",
+    "RoundRecord",
+    "Tracer",
+    "as_rows",
+    "emit_probes",
+    "get_registry",
+    "get_tracer",
+    "metrics",
+    "quarantine_totals",
+    "sentinel",
+    "set_registry",
+    "set_tracer",
+    "use_registry",
+    "use_tracer",
+    "validate_trace",
+    "validate_trace_file",
+]

@@ -1,0 +1,80 @@
+"""Host-side collection of in-graph health probes.
+
+The compiled planes (``BatchedRoundEngine._round_fn`` / ``_flush_fn``) can
+optionally return a probes dict as an extra output — moment mass, per-client
+update norms, and the :meth:`repro.robust.rules.AggregationRule.attribution`
+trim/quarantine indicators.  Everything in that dict is computed *inside*
+the existing single dispatch; this module is the other half of the contract:
+it materializes the device arrays once, at the dispatch boundary, and fans
+them into the metrics registry.
+
+Emission schema (all under the active registry):
+
+- ``probe.<name>`` gauge — scalar probes (e.g. ``moment_mass``), labeled
+  ``plane=round|flush``.
+- ``probe.<name>`` histogram + ``probe.<name>.mean`` gauge — vector probes
+  (e.g. per-client ``update_norm``): the histogram observes the max per
+  emission (the straggler/outlier signal), the gauge tracks the mean.
+- ``robust.trim_quarantine`` counter — attribution probes
+  (``attribution_moments`` / ``attribution_w_rf`` / ...), accumulated per
+  member with labels ``kind=<payload> member=<i>``.  This is the per-client
+  cumulative fault ledger: a client that keeps getting trimmed or
+  quarantined grows this counter round over round (the
+  reputation-weighted-scheduling precursor from the ROADMAP).
+
+Returns the probes as host numpy arrays so callers (trainer, schedulers,
+benches, tests) can also inspect the raw values.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs.registry import get_registry
+
+ATTRIBUTION_PREFIX = "attribution_"
+
+
+def emit_probes(probes: dict, *, plane: str, registry=None) -> dict:
+    """Materialize ``probes`` (device arrays) and emit them as metrics."""
+    try:  # one batched device->host transfer for the whole dict
+        import jax
+
+        host = {k: np.asarray(v) for k, v in jax.device_get(probes).items()}
+    except ImportError:  # pure-numpy callers
+        host = {k: np.asarray(v) for k, v in probes.items()}
+    reg = get_registry() if registry is None else registry
+    if not reg.collecting:
+        return host
+    for name, arr in sorted(host.items()):
+        if name.startswith(ATTRIBUTION_PREFIX):
+            kind = name[len(ATTRIBUTION_PREFIX):]
+            ledger = reg.counter("robust.trim_quarantine")
+            for i, v in enumerate(arr.reshape(-1).tolist()):
+                if v > 0:
+                    ledger.inc(float(v), kind=kind, member=i)
+        elif arr.ndim == 0:
+            reg.gauge(f"probe.{name}").set(float(arr), plane=plane)
+        else:
+            flat = arr.reshape(-1)
+            reg.histogram(f"probe.{name}").observe(float(flat.max()), plane=plane)
+            reg.gauge(f"probe.{name}.mean").set(float(flat.mean()), plane=plane)
+    return host
+
+
+def quarantine_totals(registry=None, *, kind: str | None = None) -> dict[int, float]:
+    """Per-member cumulative trim/quarantine mass from the fault ledger.
+
+    Sums the ``robust.trim_quarantine`` counter across payload kinds (or one
+    ``kind``), keyed by member index — the host-side view of "which client
+    was trimmed how often".
+    """
+    reg = get_registry() if registry is None else registry
+    totals: dict[int, float] = {}
+    counter = reg.counter("robust.trim_quarantine")
+    for key, value in getattr(counter, "series", {}).items():
+        labels = dict(part.split("=", 1) for part in key.split(",") if "=" in part)
+        if kind is not None and labels.get("kind") != kind:
+            continue
+        member = int(labels["member"])
+        totals[member] = totals.get(member, 0.0) + value
+    return totals

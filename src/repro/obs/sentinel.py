@@ -1,0 +1,80 @@
+"""Compilation sentinels: count jit (re)traces per compiled plane.
+
+PR 1/4/5 worked hard to make each hot path exactly ONE compiled dispatch —
+the batched round, the async flush, the warm-up scan.  Nothing in the repo
+*detected* a silent regression: a shape- or dtype-unstable argument would
+make XLA retrace every call and the round loop would quietly become 100x
+slower while staying numerically correct.
+
+The sentinel exploits the one reliable, version-independent retrace signal:
+the Python body of a jitted function executes exactly once per trace (and
+never at execution time).  Wrapping the body with a counter bump therefore
+counts cache misses without touching any jax internals::
+
+    self._round = jax.jit(SENTINEL.wrap("engine.round", self._round_fn))
+
+Every bump also lands in the metrics registry (counter ``jit.retraces``
+labeled by plane), and :func:`assert_stable` turns "a round loop retraced"
+into a hard failure — the test gate this PR adds.
+
+Counts are process-global and monotone; callers that need a per-run delta
+snapshot with :func:`counts` before and after (the pattern the tests and
+``benchmarks/bench_obs.py`` use).  The bump is trace-time-only, so the
+compiled program and its outputs are bit-identical with or without the
+sentinel installed.
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.obs import registry as _registry
+
+_COUNTS: dict[str, int] = {}
+
+
+def bump(plane: str) -> None:
+    """Record one trace of ``plane`` (call from inside a jitted body)."""
+    _COUNTS[plane] = _COUNTS.get(plane, 0) + 1
+    _registry.get_registry().counter("jit.retraces").inc(plane=plane)
+
+
+def wrap(plane: str, fn):
+    """``fn`` with a trace-time bump — pass the result to ``jax.jit``."""
+
+    @functools.wraps(fn)
+    def traced(*args, **kwargs):
+        bump(plane)
+        return fn(*args, **kwargs)
+
+    return traced
+
+
+def counts() -> dict[str, int]:
+    """Snapshot of traces per plane since process start (or last reset)."""
+    return dict(_COUNTS)
+
+
+def count(plane: str) -> int:
+    return _COUNTS.get(plane, 0)
+
+
+def reset() -> None:
+    _COUNTS.clear()
+
+
+def assert_stable(before: dict[str, int], planes: tuple[str, ...], *,
+                  expect: int = 1) -> None:
+    """Fail unless each plane traced exactly ``expect`` times since
+    ``before`` (a :func:`counts` snapshot).  ``expect=1``: the plane
+    compiled once and every subsequent call hit the cache."""
+    after = counts()
+    bad = {
+        p: after.get(p, 0) - before.get(p, 0)
+        for p in planes
+        if after.get(p, 0) - before.get(p, 0) != expect
+    }
+    if bad:
+        raise AssertionError(
+            f"compiled planes retraced: {bad} (expected {expect} trace(s) each) "
+            "— a shape/dtype-unstable argument is defeating the jit cache"
+        )

@@ -91,6 +91,18 @@ class AggregationRule:
         pooled = s / jnp.maximum(m, _EPS)
         return pooled[None, :], m[None]
 
+    def attribution(self, values: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+        """Per-row trim/quarantine indicator in [0, 1] — the health probe.
+
+        (K, ...) values x (K,) weights -> (K,): how much of row k this rule
+        discounted.  0 = fully trusted (or not delivered — absent rows are
+        the transport's business, not the rule's), 1 = fully quarantined /
+        trimmed away.  Runs in-graph next to :meth:`weighted_sum` so the
+        probe adds outputs, never dispatches.  The mean rule discounts
+        nothing by construction.
+        """
+        return jnp.zeros(values.shape[0], dtype=values.dtype)
+
 
 class MeanRule(AggregationRule):
     """The seed's exact-union weighted mean — bitwise today's pipeline."""
@@ -114,6 +126,13 @@ class FiniteMeanRule(AggregationRule):
     def weighted_sum(self, values, weights):
         values, weights = finite_guard(values, weights)
         return jnp.einsum("k,k...->...", weights, values), jnp.sum(weights)
+
+    def attribution(self, values, weights):
+        flat = values.reshape(values.shape[0], -1)
+        bad = jnp.any(~jnp.isfinite(flat), axis=1)
+        # only delivered rows can be *quarantined* — weight-0 rows were
+        # never candidates for the sum in the first place
+        return (bad & (weights > 0)).astype(flat.dtype)
 
 
 class NormClipRule(AggregationRule):
@@ -150,6 +169,24 @@ class NormClipRule(AggregationRule):
         s = jnp.einsum("k,kd->d", weights, clipped)
         return s.reshape(values.shape[1:]), jnp.sum(weights)
 
+    def attribution(self, values, weights):
+        raw, guarded = finite_guard(values, weights)
+        flat = raw.reshape(raw.shape[0], -1)
+        norms = jnp.linalg.norm(flat, axis=1)
+        if self.clip is None:
+            masked = jnp.where(guarded > 0, norms, jnp.inf)
+            order = jnp.sort(masked)
+            n_live = jnp.sum(guarded > 0).astype(jnp.int32)
+            mid = jnp.maximum(n_live - 1, 0) // 2
+            radius = jnp.where(n_live > 0, order[mid], 0.0)
+        else:
+            radius = jnp.asarray(self.clip, flat.dtype)
+        scale = jnp.minimum(1.0, radius / jnp.maximum(norms, _EPS))
+        # fraction of the row's norm clipped away; quarantined rows score 1
+        trimmed = (1.0 - scale) * (guarded > 0)
+        quarantined = (weights > 0) & (guarded <= 0)
+        return jnp.where(quarantined, 1.0, trimmed) * (weights > 0)
+
 
 class TrimmedMeanRule(AggregationRule):
     """Coordinate-wise weighted trimmed mean (trim fraction ``beta`` per tail).
@@ -185,6 +222,25 @@ class TrimmedMeanRule(AggregationRule):
         mass = jnp.sum(weights)
         return (est * mass).reshape(values.shape[1:]), mass
 
+    def attribution(self, values, weights):
+        raw_w = weights
+        values, weights = finite_guard(values, weights)
+        flat = values.reshape(values.shape[0], -1)  # (K, D)
+        order = jnp.argsort(flat, axis=0)
+        w_s = weights[order]
+        cw = jnp.cumsum(w_s, axis=0)
+        total = cw[-1]
+        lo, hi = self.beta * total, (1.0 - self.beta) * total
+        eff = jnp.clip(jnp.minimum(cw, hi) - jnp.maximum(cw - w_s, lo), 0.0, None)
+        # scatter per-coordinate retained weight back to original row order
+        inv = jnp.argsort(order, axis=0)
+        eff_orig = jnp.take_along_axis(eff, inv, axis=0)  # (K, D)
+        d = flat.shape[1]
+        retained = jnp.sum(eff_orig, axis=1) / jnp.maximum(weights * d, _EPS)
+        trimmed = (1.0 - jnp.clip(retained, 0.0, 1.0)) * (weights > 0)
+        quarantined = (raw_w > 0) & (weights <= 0)
+        return jnp.where(quarantined, 1.0, trimmed) * (raw_w > 0)
+
 
 class GeoMedianRule(AggregationRule):
     """Smoothed geometric median (Weiszfeld iterations, fixed count).
@@ -214,6 +270,25 @@ class GeoMedianRule(AggregationRule):
             wz = weights / jnp.maximum(d, 1e-6)
             b = jnp.einsum("k,kd->d", wz, flat) / jnp.maximum(jnp.sum(wz), _EPS)
         return (b * mass).reshape(values.shape[1:]), mass
+
+    def attribution(self, values, weights):
+        raw_w = weights
+        values, weights = finite_guard(values, weights)
+        flat = values.reshape(values.shape[0], -1)
+        mass = jnp.sum(weights)
+        b = jnp.einsum("k,kd->d", weights, flat) / jnp.maximum(mass, _EPS)
+        for _ in range(self.iters):
+            d = jnp.linalg.norm(flat - b[None, :], axis=1)
+            wz = weights / jnp.maximum(d, 1e-6)
+            b = jnp.einsum("k,kd->d", wz, flat) / jnp.maximum(jnp.sum(wz), _EPS)
+        # outlyingness relative to the worst delivered row: the median's
+        # implicit downweighting is 1/distance, so distance itself is the
+        # natural "how much was this row ignored" signal
+        d = jnp.linalg.norm(flat - b[None, :], axis=1)
+        d = d * (weights > 0)
+        rel = d / jnp.maximum(jnp.max(d), _EPS)
+        quarantined = (raw_w > 0) & (weights <= 0)
+        return jnp.where(quarantined, 1.0, rel) * (raw_w > 0)
 
 
 _FACTORIES = {

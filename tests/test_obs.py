@@ -1,0 +1,352 @@
+"""Unified telemetry layer: registry semantics, trace validity + determinism,
+jit-retrace sentinels, bitwise off/on degeneracy, and in-graph health probes."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.netsim import LinkModel, LinkScenario, TraceScenario
+from repro.data import make_domains
+from repro.federated import ClientConfig, FedRFTCATrainer, ProtocolConfig
+from repro.federated.network import RoundPlan
+from repro.fedsim import AsyncConfig, AsyncScheduler, SyncScheduler, markov_trace
+from repro.obs import (
+    NULL,
+    CrashRecord,
+    EvalRecord,
+    FlushRecord,
+    MetricsRegistry,
+    RoundRecord,
+    Tracer,
+    get_registry,
+    quarantine_totals,
+    sentinel,
+    use_registry,
+    use_tracer,
+    validate_trace,
+    validate_trace_file,
+)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    doms = make_domains(4, 120, shift=0.5, seed=1, dim=8, n_classes=3)
+    cfg = ClientConfig(input_dim=8, n_classes=3, n_rff=32, m=8, extractor_widths=(16, 8))
+    return doms[:3], doms[3], cfg
+
+
+def _leaf_err(a, b):
+    return max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def _trainer(setup, rounds, **proto_kw):
+    sources, target, cfg = setup
+    k = len(sources)
+    ids = list(range(k))
+    proto = ProtocolConfig(
+        n_rounds=rounds, t_c=2, warmup_rounds=rounds, lr=1e-2, batch_size=32,
+        seed=0, scenario=TraceScenario([RoundPlan(ids, ids, ids)] * rounds, cycle=True),
+        **proto_kw,
+    )
+    return FedRFTCATrainer(sources, target, cfg, proto)
+
+
+# ---- metrics registry ------------------------------------------------------
+
+
+def test_counter_labels_and_values():
+    reg = MetricsRegistry()
+    c = reg.counter("comm.bytes")
+    c.inc(10, kind="moments")
+    c.inc(5, kind="moments")
+    c.inc(3, kind="w_rf")
+    assert c.value(kind="moments") == 15
+    assert c.value(kind="w_rf") == 3
+    assert c.value(kind="classifier") == 0
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_and_histogram():
+    reg = MetricsRegistry()
+    reg.gauge("fed.model_version").set(3)
+    h = reg.histogram("net.uplink_s")
+    for v in (1.0, 3.0, 2.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["fed.model_version"][""] == 3
+    hs = snap["net.uplink_s"][""]
+    assert hs["count"] == 3 and hs["min"] == 1.0 and hs["max"] == 3.0
+    assert hs["mean"] == 2.0
+    with pytest.raises(ValueError):
+        h.observe(float("nan"))
+
+
+def test_kind_mismatch_rejected():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_null_registry_is_inert_default():
+    assert get_registry() is NULL
+    assert not NULL.collecting
+    # every op is a no-op that returns without recording
+    NULL.counter("a").inc(5, kind="k")
+    NULL.gauge("b").set(1.0)
+    NULL.histogram("c").observe(2.0)
+    assert NULL.snapshot() == {}
+
+
+def test_use_registry_scopes_collection():
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        assert get_registry() is reg
+        get_registry().counter("scoped").inc()
+    assert get_registry() is NULL
+    assert reg.counter("scoped").value() == 1
+
+
+# ---- tracer + trace validation ---------------------------------------------
+
+
+def test_tracer_roundtrip_and_validation(tmp_path):
+    tr = Tracer()
+    tr.begin("round", 1.0, args={"round": 1})
+    tr.end("round", 2.5)
+    tr.complete("compute", 1.0, 0.5, tid=3)
+    tr.instant("crash", 2.0)
+    assert validate_trace(tr.events) == []
+    path = tmp_path / "t.json"
+    tr.write(path)
+    assert validate_trace_file(path) == []
+    doc = json.loads(path.read_text())
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert names == ["round", "round", "compute", "crash"]
+    # ts is microseconds in the export
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "B"]
+    assert evs[0]["ts"] == 1_000_000.0
+
+
+def test_trace_validation_catches_malformed():
+    tr = Tracer()
+    tr.begin("round", 1.0)
+    assert any("unclosed" in e for e in validate_trace(tr.events))
+    tr2 = Tracer()
+    tr2.begin("a", 2.0)
+    tr2.end("b", 3.0)
+    assert validate_trace(tr2.events)
+    tr3 = Tracer()
+    with pytest.raises(ValueError):
+        tr3.complete("x", 0.0, -1.0)
+    assert validate_trace([{"name": "x"}])  # missing required keys
+
+
+def test_wall_span_contextmanager():
+    tr = Tracer()
+    with tr.span("bench"):
+        pass
+    assert [e["ph"] for e in tr.events] == ["B", "E"]
+    assert validate_trace(tr.events) == []
+
+
+# ---- sentinel ---------------------------------------------------------------
+
+
+def test_sentinel_counts_retraces():
+    calls = sentinel.count("unit.f")
+    f = jax.jit(sentinel.wrap("unit.f", lambda x: x * 2))
+    f(jnp.ones(3))
+    f(jnp.ones(3))  # cache hit: no retrace
+    assert sentinel.count("unit.f") == calls + 1
+    f(jnp.ones(5))  # new shape: retrace
+    assert sentinel.count("unit.f") == calls + 2
+
+
+def test_sentinel_assert_stable():
+    before = sentinel.counts()
+    g = jax.jit(sentinel.wrap("unit.g", lambda x: x + 1))
+    g(jnp.ones(2))
+    sentinel.assert_stable(before, ("unit.g",), expect=1)
+    g(jnp.ones(4))
+    with pytest.raises(AssertionError):
+        sentinel.assert_stable(before, ("unit.g",), expect=1)
+
+
+def test_engine_round_plane_traces_once(small_setup):
+    before = sentinel.counts()
+    tr = _trainer(small_setup, 4)
+    SyncScheduler(tr).run(4)
+    sentinel.assert_stable(before, ("engine.round",), expect=1)
+
+
+def test_probe_plane_traces_once_and_flush(small_setup):
+    before = sentinel.counts()
+    tr = _trainer(small_setup, 3, probe=True)
+    sched = AsyncScheduler(tr, AsyncConfig(buffer_size=len(small_setup[0])))
+    sched.run(3)
+    sentinel.assert_stable(before, ("engine.flush",), expect=1)
+
+
+# ---- bitwise off/on degeneracy ----------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["batched", "serial"])
+def test_telemetry_off_is_bitwise(small_setup, engine):
+    rounds = 3
+    tr_off = _trainer(small_setup, rounds, engine=engine)
+    SyncScheduler(tr_off).run(rounds)
+    tr_on = _trainer(small_setup, rounds, engine=engine, probe=True)
+    with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+        SyncScheduler(tr_on).run(rounds)
+    assert _leaf_err(tr_off.tgt_params, tr_on.tgt_params) == 0.0
+    if engine == "batched":
+        assert _leaf_err(tr_off._src_stack, tr_on._src_stack) == 0.0
+    else:
+        assert _leaf_err(tr_off.src_params, tr_on.src_params) == 0.0
+
+
+def test_async_telemetry_off_is_bitwise(small_setup):
+    sources, _, _ = small_setup
+    k = len(sources)
+
+    def run_once(telemetry):
+        tr = _trainer(small_setup, 4, probe=telemetry)
+        sched = AsyncScheduler(
+            tr, AsyncConfig(buffer_size=2),
+            links=LinkScenario(links=[LinkModel(latency_s=0.2 * (i + 1)) for i in range(k)]),
+        )
+        if telemetry:
+            with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+                sched.run(4)
+        else:
+            sched.run(4)
+        return tr
+
+    a, b = run_once(False), run_once(True)
+    assert _leaf_err(a.tgt_params, b.tgt_params) == 0.0
+    assert _leaf_err(a._src_stack, b._src_stack) == 0.0
+
+
+# ---- async trace determinism ------------------------------------------------
+
+
+def test_async_trace_runs_twice_identical(small_setup):
+    sources, _, _ = small_setup
+    k = len(sources)
+
+    def run_once():
+        tr = _trainer(small_setup, 5, probe=True)
+        avail = markov_trace(k, horizon=1e4, mean_on=8.0, mean_off=3.0, seed=7)
+        sched = AsyncScheduler(
+            tr,
+            AsyncConfig(
+                buffer_size=2, staleness="polynomial", eval_interval=2.0,
+                server_crash_times=(4.0,), checkpoint_interval_s=2.0,
+                restart_delay_s=0.5,
+            ),
+            availability=avail,
+            links=LinkScenario(links=[LinkModel(latency_s=0.2 * (i + 1)) for i in range(k)]),
+        )
+        tracer = Tracer()
+        with use_tracer(tracer):
+            sched.run(5)
+        return tracer, sched
+
+    t1, s1 = run_once()
+    t2, s2 = run_once()
+    assert t1.events == t2.events  # bit-identical virtual-time story
+    assert validate_trace(t1.events) == []
+    names = {e["name"] for e in t1.events}
+    assert {"compute", "uplink", "flush", "server_crash", "recovery",
+            "checkpoint"} <= names
+    assert len(s1.recoveries) == 1
+
+
+# ---- health probes ----------------------------------------------------------
+
+
+def test_round_probes_shapes_and_mass(small_setup):
+    sources, _, _ = small_setup
+    k = len(sources)
+    tr = _trainer(small_setup, 2, probe=True)
+    tr.round(1)
+    probes = tr.last_probes
+    assert probes is not None
+    assert float(probes["moment_mass"]) == pytest.approx(k)
+    assert probes["update_norm"].shape == (k,)
+    assert np.all(probes["update_norm"] > 0)
+    assert float(probes["tgt_update_norm"]) > 0
+    # plain mean discounts nobody
+    assert np.all(probes["attribution_moments"] == 0.0)
+    assert np.all(probes["attribution_w_rf"] == 0.0)
+
+
+def test_probe_metrics_and_fault_ledger(small_setup):
+    rounds = 4
+    reg = MetricsRegistry()
+    tr = _trainer(small_setup, rounds, probe=True, rule="trimmed_mean")
+    with use_registry(reg):
+        SyncScheduler(tr).run(rounds)
+    snap = reg.snapshot()
+    assert snap["probe.update_norm"]["plane=round"]["count"] == rounds
+    # trimmed mean always discounts the extremes: the ledger must be populated
+    totals = quarantine_totals(reg)
+    assert totals and all(v > 0 for v in totals.values())
+
+
+def test_last_probes_pipeline_drains(small_setup):
+    tr = _trainer(small_setup, 3, probe=True)
+    sched = SyncScheduler(tr)
+    sched.run(3)
+    # the run drained the one-step pipeline; reading again is stable
+    p1 = tr.last_probes
+    p2 = tr.last_probes
+    assert p1 is p2 and p1 is not None
+
+
+# ---- typed history records --------------------------------------------------
+
+
+def test_record_dict_view():
+    row = RoundRecord(t=1.5, round=2, participants=3)
+    assert row["t"] == 1.5 and row["participants"] == 3
+    assert "acc" not in row  # None-valued fields stay hidden
+    row["acc"] = 0.9
+    assert row["acc"] == 0.9 and "acc" in row
+    assert row.get("missing") is None
+    with pytest.raises(KeyError):
+        row["nope"] = 1.0
+    assert set(dict(row)) == {"t", "round", "participants", "acc"}
+
+
+def test_scheduler_history_is_typed(small_setup):
+    sources, _, _ = small_setup
+    k = len(sources)
+    tr = _trainer(small_setup, 3)
+    sched = AsyncScheduler(
+        tr,
+        AsyncConfig(buffer_size=k, eval_interval=2.0, server_crash_times=(2.5,),
+                    checkpoint_interval_s=1.0),
+    )
+    hist = sched.run(3, eval_every=1)
+    kinds = {type(h) for h in hist}
+    assert FlushRecord in kinds and CrashRecord in kinds and EvalRecord in kinds
+    flushes = [h for h in hist if isinstance(h, FlushRecord)]
+    assert all(h["staleness"] == [0] * len(h["members"]) for h in flushes)
+    crash = next(h for h in hist if isinstance(h, CrashRecord))
+    assert crash["crash"] == "server" and crash["rollback_s"] >= 0.0
+
+
+def test_commlog_snapshot_record(small_setup):
+    tr = _trainer(small_setup, 2)
+    tr.round(1)
+    rec = tr.transport.log.snapshot()
+    assert rec["bytes_total"] == tr.transport.log.bytes_total > 0
+    assert rec["bytes_by_kind"]["moments"] > 0
