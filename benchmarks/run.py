@@ -11,8 +11,10 @@ section header per bench. See EXPERIMENTS.md for the claim-by-claim mapping.
 
 Four benches write machine-readable records at the repo root, tracked across
 PRs: ``fig3`` -> ``BENCH_rf_tca.json`` (fit wall-times dense/stream/lobpcg,
-speedups, peak-memory proxy, tiled large-N kernel agreement, round-engine
-per-round times serial/batched/ragged, accuracies), ``wire`` ->
+speedups, peak-memory proxy, tiled large-N kernel agreement, seed-fused
+kernel 0-ULP twin agreement + ensemble degeneracy + fused-vs-materialized
+memory ladder + fused accuracy re-sweep with the N-anomaly resolution row,
+round-engine per-round times serial/batched/ragged, accuracies), ``wire`` ->
 ``BENCH_comm.json`` (bytes-on-wire per payload per codec, accuracy-vs-loss-rate
 and accuracy-vs-codec curves), ``async`` -> ``BENCH_async.json`` (fedsim
 runtime: sync-vs-async degeneracy divergence, accuracy-vs-churn-rate with
@@ -126,6 +128,32 @@ def validate_rf_tca_record(record: dict) -> list[str]:
     e.need("ragged_rounds.max_param_divergence", lambda v: 0.0 <= v <= 1e-3)
     e.need("ragged_rounds.client_sizes", lambda v: isinstance(v, list) and len(set(v)) > 1)
     e.need("accuracy", acc01)
+    # seed-fused gates: bit-for-bit vs the XLA generator twin in BOTH
+    # layouts, ensemble=1 bitwise-degenerate to the single-draw path, and
+    # the fused peak-memory proxy strictly below materialized from N >= 2048
+    e.need("fused.ulp_untiled", lambda v: v == 0)
+    e.need("fused.ulp_tiled", lambda v: v == 0)
+    e.need("fused.ensemble1_max_abs_diff", lambda v: v == 0.0)
+    e.need("fused.ensemble_rel_err_vs_oracle", lambda v: 0.0 <= v <= 1e-4)
+    e.need("fused.fused_s", _is_pos)
+    proxies = (record.get("fused") or {}).get("memory_proxy_bytes") or {}
+    if not any(int(k) >= 2048 for k in proxies):
+        e.append("fused.memory_proxy_bytes: no ladder entry at N >= 2048")
+    for k, row in proxies.items():
+        if int(k) >= 2048 and not (
+            isinstance(row, dict)
+            and _is_pos(row.get("fused"))
+            and _is_pos(row.get("materialized"))
+            and row["fused"] < row["materialized"]
+        ):
+            e.append(f"fused.memory_proxy_bytes.{k}: fused not strictly below "
+                     f"materialized ({row!r})")
+    e.need("accuracy_resweep.fused", acc01)
+    e.need("accuracy_resweep.ensemble", acc01)
+    e.need(
+        "accuracy_resweep.anomaly_small_vs_large_n.status",
+        lambda v: v in ("resolved", "persists"),
+    )
     return list(e)
 
 

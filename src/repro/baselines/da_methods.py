@@ -104,8 +104,13 @@ def rf_tca_baseline(
     sigma: float = 1.0,
     classifier: str = "mlp",
     seed: int = 0,
+    **rf_tca_kw,
 ) -> float:
-    """RF-TCA (Algorithm 1) pipeline — the paper's single-machine method."""
+    """RF-TCA (Algorithm 1) pipeline — the paper's single-machine method.
+
+    Extra keyword args pass through to :func:`rf_tca` — e.g.
+    ``w_rf="fused:<seed>"`` / ``ensemble=S`` for the seed-fused statistics
+    pass, or ``solver`` / ``mode`` overrides for benchmark sweeps."""
     src = _unit(_concat(sources))
     target = _unit(target)
     f_s, f_t, _ = rf_tca(
@@ -116,6 +121,7 @@ def rf_tca_baseline(
         gamma=gamma,
         sigma=sigma,
         seed=seed,
+        **rf_tca_kw,
     )
     return _transductive_eval(
         np.asarray(f_s).T, src.y, np.asarray(f_t).T, target.y, classifier, seed

@@ -85,6 +85,24 @@ def _w_rf_init(key_data: np.ndarray, shape, dtype) -> np.ndarray:
 register_replay_generator("w_rf_init", _w_rf_init)
 
 
+def _omega_fused(key_data: np.ndarray, shape, dtype) -> np.ndarray:
+    """Replay of the seed-fused counter stream: ``key_data = (seed,
+    ensemble_index)`` and the payload is :func:`repro.kernels.prng.fused_omega`
+    — the same bits the fused Pallas kernels draw in-kernel, so a receiver
+    that *does* want the materialized Omega (plots, dense baselines) gets it
+    bit-identically from the 8-byte key.  Receivers on the fused path never
+    call this at all: the key itself is the weight."""
+    from repro.kernels.prng import fused_omega
+
+    arr = fused_omega(
+        int(key_data[0]), shape[0], shape[1], ensemble_index=int(key_data[1])
+    )
+    return np.asarray(arr, dtype=dtype)
+
+
+register_replay_generator("omega_fused", _omega_fused)
+
+
 # ---------------------------------------------------------------------------
 # codec base + registry
 # ---------------------------------------------------------------------------
@@ -284,6 +302,15 @@ class SeedReplayCodec(Codec):
     wire_id = 6
     name = "seed_replay"
 
+    # decode memoization: a replayed payload is a pure function of
+    # (wire bytes, shape, dtype), so a receiver decoding the same key twice
+    # (every round re-announces the shared W_RF/Omega) reconstructs *nothing*
+    # after the first time — it hands back the cached read-only array.
+    # ``regenerations`` counts actual generator invocations (pinned by tests).
+    _cache: dict[tuple, np.ndarray] = {}
+    _CACHE_MAX = 64
+    regenerations: int = 0
+
     def encode(self, arr, *, rng=None, replay=None) -> bytes:
         if replay is None:
             raise ValueError(
@@ -297,10 +324,21 @@ class SeedReplayCodec(Codec):
         return struct.pack("<B", _REPLAY_IDS[gen]) + key.tobytes()
 
     def decode(self, data, shape, dtype):
+        cls = SeedReplayCodec
+        cache_key = (bytes(data[:9]), tuple(shape), np.dtype(dtype).str)
+        hit = cls._cache.get(cache_key)
+        if hit is not None:
+            return hit
         (gen_id,) = struct.unpack_from("<B", data, 0)
         key = np.frombuffer(data, np.uint32, count=2, offset=1)
         name = {v: k for k, v in _REPLAY_IDS.items()}[gen_id]
-        return REPLAY_GENERATORS[name](key, shape, np.dtype(dtype))
+        arr = np.array(REPLAY_GENERATORS[name](key, shape, np.dtype(dtype)))
+        arr.setflags(write=False)
+        cls.regenerations += 1
+        if len(cls._cache) >= cls._CACHE_MAX:
+            cls._cache.pop(next(iter(cls._cache)))
+        cls._cache[cache_key] = arr
+        return arr
 
     def nbytes(self, shape, dtype) -> int:
         return 1 + 8  # generator id + raw uint32[2] key — shape-independent

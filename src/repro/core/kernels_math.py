@@ -85,6 +85,47 @@ def assemble_streamed_gram(
     return 0.5 * (g_h + g_h.T), u
 
 
+def assemble_streamed_gram_ensemble(
+    gcc: jnp.ndarray,
+    gcs: jnp.ndarray,
+    gss: jnp.ndarray,
+    mc: jnp.ndarray,
+    ms: jnp.ndarray,
+    *,
+    n: int,
+    ensemble: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(G_H, u) averaged over S independently-drawn random-feature maps.
+
+    The seed-fused kernels accumulate the raw Gram blocks *pooled* over draws
+    (features carry 1/sqrt(N S), so the quadratic contraction is already the
+    mean over draws) but keep the moments *per draw*: ``mc``/``ms`` are
+    ``(N, 2S)`` with columns ``(2e, 2e+1)`` holding draw ``e``'s ell-moment
+    and feature column sum, each scaled by 1/sqrt(S).  Centering is quadratic
+    in the column sums, so the mean of the per-draw *centered* Grams needs
+
+        G_H = mean_e [G_e - s_e s_e^T / n] = G_pooled - (1/n) sum_e cs_e cs_e^T
+
+    with ``cs_e`` the stored (1/sqrt(S)-scaled) column sums — a pooled column
+    sum would center with the square of the mean instead of the mean of the
+    squares.  ``ensemble=1`` delegates to :func:`assemble_streamed_gram`
+    unchanged (bitwise-degenerate to the single-draw path).
+    """
+    if ensemble == 1:
+        return assemble_streamed_gram(
+            gcc, gcs, gss, mc[:, 0], ms[:, 0], mc[:, 1], ms[:, 1], n=n
+        )
+    g = jnp.concatenate(
+        [jnp.concatenate([gcc, gcs], axis=1), jnp.concatenate([gcs.T, gss], axis=1)],
+        axis=0,
+    )
+    inv_s = 1.0 / jnp.sqrt(jnp.float32(ensemble))
+    u = jnp.concatenate([mc[:, 0::2].sum(axis=1), ms[:, 0::2].sum(axis=1)]) * inv_s
+    cs = jnp.concatenate([mc[:, 1::2], ms[:, 1::2]], axis=0)  # (2N, S)
+    g_h = g - (cs @ cs.T) / n  # rank-S centering: one rank-one term per draw
+    return 0.5 * (g_h + g_h.T), u
+
+
 def ell_vector(n_s: int, n_t: int) -> jnp.ndarray:
     """Paper eq. (2): ell_i = 1/n_S for source columns, -1/n_T for target columns."""
     return jnp.concatenate(

@@ -51,7 +51,11 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels_math import assemble_streamed_gram, ell_vector
+from repro.core.kernels_math import (
+    assemble_streamed_gram,
+    assemble_streamed_gram_ensemble,
+    ell_vector,
+)
 from repro.core.rff import draw_omega, rff_features
 
 try:  # SciPy is optional: only used for the host-side subset-eigh fast path
@@ -61,9 +65,12 @@ except ImportError:  # pragma: no cover - container always ships SciPy
 
 
 class RFTCAState(NamedTuple):
-    omega: jnp.ndarray  # (N, p) shared-seed frequency matrix
+    omega: jnp.ndarray | None  # (N, p) frequency matrix; None on the fused path
     w_rf: jnp.ndarray  # (2N, m) aligner
     eigvals: jnp.ndarray  # (m,)
+    # seed-fused spec (seed, ensemble, sigma, kernel) when omega is None: the
+    # frequency matrix is a pure function of these and is re-drawn on demand
+    fused: tuple | None = None
 
 
 # --------------------------------------------------------------------------
@@ -218,6 +225,187 @@ def _gram_stream_tiled_body(
 
 
 _gram_stream_tiled_xla = jax.jit(_gram_stream_tiled_body, static_argnames=("block", "tile"))
+
+
+# --------------------------------------------------------------------------
+# seed-fused statistics: XLA generator twins of the fused Pallas kernels
+# --------------------------------------------------------------------------
+
+
+def _fused_blocks(x, ell, *, block: int, nf_mult: int, n_features: int):
+    """Mirror ``kernels.ops.rff_gram_stream_fused``'s padding exactly:
+    (sample-blocked x (nb, p_pad, bk), lm blocks (nb, 2, bk), nf_pad).
+    Identical padded shapes are a precondition for bit-for-bit agreement —
+    the fused draw covers padded rows/cols too, and only identical block
+    geometry makes the twin trace the same float ops as the kernel."""
+    p, n = x.shape
+    pad_n = (-n) % block
+    lm = jnp.stack([ell.astype(x.dtype), jnp.ones((n,), x.dtype)])  # (2, n)
+    xp = jnp.pad(x, ((0, (-p) % block), (0, pad_n)))
+    lmp = jnp.pad(lm, ((0, 0), (0, pad_n)))
+    nb = (n + pad_n) // block
+    xb = xp.reshape(xp.shape[0], nb, block).transpose(1, 0, 2)  # (nb, p_pad, bk)
+    lmb = lmp.reshape(2, nb, block).transpose(1, 0, 2)  # (nb, 2, bk)
+    nf_pad = n_features + (-n_features) % nf_mult
+    return xb, lmb, nf_pad
+
+
+def _gram_stream_fused_body(
+    x, ell, *, n_features: int, seed: int, ensemble: int, sigma: float,
+    rf_kernel: str, block: int,
+):
+    """Bit-exact XLA twin of the untiled seed-fused Pallas path.
+
+    Same padded geometry as the ``ops`` wrapper, same per-step math
+    (:func:`repro.kernels.rff_gram_stream.fused_step_stats`, shared verbatim),
+    same sequential accumulation order over sample blocks — so the twin and
+    the interpret-mode kernel execute the identical float op sequence and
+    agree to 0 ULP.  No (N, p) weight tensor exists here either: the draw is
+    re-generated per sample block from the counter stream.
+    """
+    from repro.kernels.rff_gram_stream import fused_step_stats
+
+    n = x.shape[1]
+    xb, lmb, nf_pad = _fused_blocks(
+        x, ell, block=block, nf_mult=block, n_features=n_features
+    )
+    mw = 2 * ensemble
+
+    def body(carry, inp):
+        xblk, lmk = inp
+        d = fused_step_stats(
+            xblk, lmk, nf=nf_pad, n_features=n_features, seed=seed,
+            ensemble=ensemble, sigma=sigma, rf_kernel=rf_kernel,
+        )
+        return tuple(a + t for a, t in zip(carry, d)), None
+
+    init = (
+        jnp.zeros((nf_pad, nf_pad), jnp.float32),
+        jnp.zeros((nf_pad, nf_pad), jnp.float32),
+        jnp.zeros((nf_pad, nf_pad), jnp.float32),
+        jnp.zeros((nf_pad, mw), jnp.float32),
+        jnp.zeros((nf_pad, mw), jnp.float32),
+    )
+    (cc, cs, ss, mc, ms), _ = jax.lax.scan(body, init, (xb, lmb))
+    nf = n_features
+    return assemble_streamed_gram_ensemble(
+        cc[:nf, :nf], cs[:nf, :nf], ss[:nf, :nf], mc[:nf], ms[:nf],
+        n=n, ensemble=ensemble,
+    )
+
+
+_gram_stream_fused_xla = jax.jit(
+    _gram_stream_fused_body,
+    static_argnames=("n_features", "seed", "ensemble", "sigma", "rf_kernel", "block"),
+)
+
+
+def _gram_stream_fused_tiled_body(
+    x, ell, *, n_features: int, seed: int, ensemble: int, sigma: float,
+    rf_kernel: str, block: int, tile: int,
+):
+    """Tiled-layout XLA twin of the seed-fused Pallas kernel: ``lax.map`` over
+    (i, j) feature-tile pairs with the sample scan innermost, each pair
+    re-drawing its two (t, p_pad) weight slabs per step from the counter
+    stream — the tiled kernel's loop nest and memory profile, nothing N-sized
+    live beyond the output statistics."""
+    from repro.kernels.rff_gram_stream import (
+        fused_tile_moment_step,
+        fused_tile_pair_step,
+    )
+
+    n = x.shape[1]
+    xb, lmb, nf_pad = _fused_blocks(
+        x, ell, block=block, nf_mult=tile, n_features=n_features
+    )
+    ni = nf_pad // tile
+    mw = 2 * ensemble
+    kw = dict(
+        tile=tile, n_features=n_features, seed=seed, ensemble=ensemble,
+        sigma=sigma, rf_kernel=rf_kernel,
+    )
+
+    def pair_stats(ij):
+        row_i = (ij // ni) * tile
+        row_j = (ij % ni) * tile
+
+        def body(carry, inp):
+            xblk, lmk = inp
+            d = fused_tile_pair_step(xblk, lmk, row_i, row_j, **kw)
+            return tuple(a + t for a, t in zip(carry, d)), None
+
+        init = tuple(jnp.zeros((tile, tile), jnp.float32) for _ in range(3))
+        out, _ = jax.lax.scan(body, init, (xb, lmb))
+        return jnp.stack(out)
+
+    def row_moments(i):
+        def body(carry, inp):
+            xblk, lmk = inp
+            d = fused_tile_moment_step(xblk, lmk, i * tile, **kw)
+            return tuple(a + t for a, t in zip(carry, d)), None
+
+        init = tuple(jnp.zeros((tile, mw), jnp.float32) for _ in range(2))
+        out, _ = jax.lax.scan(body, init, (xb, lmb))
+        return jnp.stack(out)
+
+    blocks = jax.lax.map(pair_stats, jnp.arange(ni * ni))  # (ni^2, 3, t, t)
+    blocks = blocks.reshape(ni, ni, 3, tile, tile).transpose(2, 0, 3, 1, 4)
+    blocks = blocks.reshape(3, ni * tile, ni * tile)
+    mom = jax.lax.map(row_moments, jnp.arange(ni))  # (ni, 2, t, 2S)
+    mom = mom.transpose(1, 0, 2, 3).reshape(2, ni * tile, mw)
+    nf = n_features
+    return assemble_streamed_gram_ensemble(
+        blocks[0, :nf, :nf], blocks[1, :nf, :nf], blocks[2, :nf, :nf],
+        mom[0, :nf], mom[1, :nf], n=n, ensemble=ensemble,
+    )
+
+
+_gram_stream_fused_tiled_xla = jax.jit(
+    _gram_stream_fused_tiled_body,
+    static_argnames=(
+        "n_features", "seed", "ensemble", "sigma", "rf_kernel", "block", "tile"
+    ),
+)
+
+
+def fused_streaming_gram(
+    x: jnp.ndarray,
+    ell: jnp.ndarray,
+    *,
+    n_features: int,
+    seed: int,
+    ensemble: int = 1,
+    sigma: float = 1.0,
+    rf_kernel: str = "gauss",
+    use_pallas: bool = False,
+    block: int = 128,
+    tile: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Seed-fused (G_H (2N, 2N), u (2N,)) — no omega operand anywhere.
+
+    Dispatches to the fused Pallas kernel (``use_pallas=True``) or its XLA
+    generator twin; both draw W_RF inside the pass from
+    ``threefry(seed, row, col)`` and agree bit-for-bit.  The layout (untiled
+    vs (t, t)-tiled) follows ``kernels.ops.gram_tile_plan`` on both paths so
+    Pallas and twin always pick the same geometry.
+    """
+    from repro.kernels import ops as kops
+
+    if use_pallas:
+        return kops.rff_gram_stream_fused(
+            x, ell, n_features=n_features, seed=seed, ensemble=ensemble,
+            sigma_rf=sigma, rf_kernel=rf_kernel, block=block, tile=tile,
+        )
+    plan_tile = kops.gram_tile_plan(n_features, tile=tile)["tile"]
+    if plan_tile is None:
+        return _gram_stream_fused_xla(
+            x, ell, n_features=n_features, seed=seed, ensemble=ensemble,
+            sigma=sigma, rf_kernel=rf_kernel, block=block,
+        )
+    return _gram_stream_fused_tiled_xla(
+        x, ell, n_features=n_features, seed=seed, ensemble=ensemble,
+        sigma=sigma, rf_kernel=rf_kernel, block=block, tile=plan_tile,
+    )
 
 
 def streaming_gram(
@@ -486,6 +674,17 @@ def _fit_stream_lobpcg(
     return omega, w_rf, vals
 
 
+def _parse_fused_spec(w_rf) -> int | None:
+    """``w_rf="fused:<seed>"`` -> seed; None passes through; else error."""
+    if w_rf is None:
+        return None
+    if isinstance(w_rf, str) and w_rf.startswith("fused:"):
+        return int(w_rf.split(":", 1)[1])
+    raise ValueError(
+        f'w_rf must be None or "fused:<seed>", got {w_rf!r}'
+    )
+
+
 def rf_tca_fit(
     x_s: jnp.ndarray,
     x_t: jnp.ndarray,
@@ -500,12 +699,22 @@ def rf_tca_fit(
     mode: str = "stream",
     solver: str = "eigh",
     block: int = 1024,
+    w_rf: str | None = None,
+    ensemble: int = 1,
 ) -> RFTCAState:
     """Algorithm 1: fit W_RF on source (p, n_S) and target (p, n_T) data.
 
     mode="stream" (default) never materializes the (2N, n) RFF matrix;
     mode="dense" is the original materializing path (solver "cholesky"
     reproduces the seed implementation exactly).
+
+    ``w_rf="fused:<seed>"`` switches the statistics pass to the seed-fused
+    generators: the frequency matrix is drawn *inside* the kernel (or its XLA
+    twin) from a counter-based stream and never exists as a tensor — the
+    returned state has ``omega=None`` and carries the spec instead.
+    ``ensemble=S`` then averages the (G_H, u) statistics over S
+    independently-keyed draws in the same pass (S=1 is bitwise the
+    single-draw path); out-of-sample transforms use draw 0's feature map.
     """
     if mode not in ("stream", "dense"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -515,6 +724,23 @@ def rf_tca_fit(
         raise ValueError(
             'solver="cholesky" factorizes the explicit-Sigma path and requires '
             'mode="dense"; the streaming solvers are "eigh" and "lobpcg"'
+        )
+    fused_seed = _parse_fused_spec(w_rf)
+    if ensemble != 1 and fused_seed is None:
+        raise ValueError('ensemble > 1 requires w_rf="fused:<seed>"')
+    if fused_seed is not None:
+        if mode != "stream":
+            raise ValueError('w_rf="fused:<seed>" requires mode="stream"')
+        x = jnp.concatenate([x_s, x_t], axis=1)
+        ell = ell_vector(x_s.shape[1], x_t.shape[1])
+        g_h, u = fused_streaming_gram(
+            x, ell, n_features=n_features, seed=fused_seed, ensemble=ensemble,
+            sigma=sigma, rf_kernel=kernel, use_pallas=use_pallas,
+        )
+        w, vals = solve_w_rf_gram(g_h, u, gamma, m, solver=solver, seed=seed)
+        return RFTCAState(
+            omega=None, w_rf=w, eigvals=vals,
+            fused=(fused_seed, ensemble, sigma, kernel),
         )
     if mode == "stream" and not use_pallas:
         key = jax.random.PRNGKey(seed)
@@ -547,8 +773,23 @@ def rf_tca_fit(
 
 
 def rf_tca_transform(state: RFTCAState, x: jnp.ndarray) -> jnp.ndarray:
-    """F = W_RF^T Sigma(X) in R^{m x n} — works on unseen data (out-of-sample)."""
-    return state.w_rf.T @ rff_features(x, state.omega)
+    """F = W_RF^T Sigma(X) in R^{m x n} — works on unseen data (out-of-sample).
+
+    On the seed-fused path (``state.omega is None``) the frequency matrix is
+    re-drawn from the counter stream on demand (draw 0 when the fit averaged
+    an ensemble) — small out-of-sample batches may materialize it here; the
+    fit-time statistics never did.
+    """
+    omega = state.omega
+    if omega is None:
+        from repro.kernels.prng import fused_omega
+
+        f_seed, _, f_sigma, f_kernel = state.fused
+        omega = fused_omega(
+            f_seed, state.w_rf.shape[0] // 2, x.shape[0],
+            sigma=f_sigma, rf_kernel=f_kernel,
+        )
+    return state.w_rf.T @ rff_features(x, omega)
 
 
 def rf_tca(

@@ -27,6 +27,12 @@ class ClientConfig:
     m: int = 32  # aligned feature dim
     rff_sigma: float = 1.0
     rff_seed: int = 1234  # the shared seed S of Algorithm 5
+    # "materialized": jax.random draw (the seed behavior); "fused": the
+    # counter-based stream of repro.kernels.prng — the same bits the
+    # seed-fused Pallas kernels draw in-kernel, so a client on this setting
+    # shares Omega with the fused Gram/featurize path (and with any receiver
+    # replaying the "omega_fused" seed_replay generator) bit-for-bit.
+    rff_impl: str = "materialized"
     lambda_mmd: float = 1.0
     # The paper normalises features to unit Euclidean norm (App. D-A) — this
     # also keeps the extractor output inside the RFF kernel's resolvable scale
@@ -37,6 +43,14 @@ class ClientConfig:
 
 def make_omega(cfg: ClientConfig) -> jnp.ndarray:
     """Shared-seed Omega: every client derives the identical matrix (Alg. 2/3)."""
+    if cfg.rff_impl == "fused":
+        from repro.kernels.prng import fused_omega
+
+        return fused_omega(
+            cfg.rff_seed, cfg.n_rff, cfg.extractor_widths[-1], sigma=cfg.rff_sigma
+        )
+    if cfg.rff_impl != "materialized":
+        raise ValueError(f"unknown rff_impl {cfg.rff_impl!r}")
     return draw_omega(cfg.rff_seed, cfg.n_rff, cfg.extractor_widths[-1], sigma=cfg.rff_sigma)
 
 

@@ -14,8 +14,10 @@ import jax.numpy as jnp
 from repro.kernels.centered_gram import centered_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.quantize import fake_quant_pallas
-from repro.kernels.rff import rff_pallas
+from repro.kernels.rff import rff_fused_pallas, rff_pallas
 from repro.kernels.rff_gram_stream import (
+    rff_gram_stream_fused_pallas,
+    rff_gram_stream_fused_tiled_pallas,
     rff_gram_stream_pallas,
     rff_gram_stream_tiled_pallas,
 )
@@ -160,6 +162,104 @@ def rff_gram_stream(
         gcc[:n_feat, :n_feat], gcs[:n_feat, :n_feat], gss[:n_feat, :n_feat],
         mc[:n_feat, 0], ms[:n_feat, 0], mc[:n_feat, 1], ms[:n_feat, 1],
         n=n,  # fold_n=None: the kernels fold 1/sqrt(N) into cos/sin already
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_features", "seed", "ensemble_index", "sigma_rf", "rf_kernel",
+        "block", "interpret",
+    ),
+)
+def rff_fused(
+    x: jax.Array,
+    *,
+    n_features: int,
+    seed: int,
+    ensemble_index: int = 0,
+    sigma_rf: float = 1.0,
+    rf_kernel: str = "gauss",
+    block: int = 128,
+    interpret: bool | None = None,
+):
+    """Seed-fused Sigma (2N, n) from X (p, n) — no omega operand; the weight
+    blocks are drawn inside the kernel from ``threefry(seed, row, col)``."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n_orig = x.shape[1]
+    x, _ = _pad_to(x, 1, block)
+    x, _ = _pad_to(x, 0, block)
+    nf_pad = n_features + (-n_features) % block
+    out = rff_fused_pallas(
+        x, nf_pad=nf_pad, scale_n=n_features, seed=seed,
+        ensemble_index=ensemble_index, sigma=sigma_rf, rf_kernel=rf_kernel,
+        block_n=block, block_m=block, block_p=block, interpret=interpret,
+    )
+    cos = out[:nf_pad][:n_features]
+    sin = out[nf_pad:][:n_features]
+    return jnp.concatenate([cos, sin], axis=0)[:, :n_orig]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_features", "seed", "ensemble", "sigma_rf", "rf_kernel",
+        "block", "tile", "interpret",
+    ),
+)
+def rff_gram_stream_fused(
+    x: jax.Array,
+    ell: jax.Array,
+    *,
+    n_features: int,
+    seed: int,
+    ensemble: int = 1,
+    sigma_rf: float = 1.0,
+    rf_kernel: str = "gauss",
+    block: int = 128,
+    tile: int | None = None,
+    interpret: bool | None = None,
+):
+    """Seed-fused (G_H (2N, 2N) fp32, u = Sigma ell (2N,) fp32) from X (p, n).
+
+    Like :func:`rff_gram_stream` but with no omega operand at all: W_RF rows
+    are drawn inside the kernel from the counter-based threefry stream, so
+    neither the (2N, n) feature matrix nor the (N, p) weight matrix ever
+    exists in HBM — peak memory is O(N^2 + N b) stats only, and the only
+    W_RF "state" anywhere is the integer seed.  ``ensemble=S`` averages the
+    statistics over S independently-keyed draws in the same pass (S=1 traces
+    the identical single-draw program).  ``tile`` picks the layout exactly as
+    in :func:`rff_gram_stream`.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = x.shape[1]
+    plan_tile = gram_tile_plan(n_features, tile=tile)["tile"]
+    lm = jnp.stack([ell.astype(x.dtype), jnp.ones((n,), x.dtype)])  # (2, n)
+    x, _ = _pad_to(x, 1, block)
+    lm, _ = _pad_to(lm, 1, block)  # zero-pads ell AND the column mask
+    x, _ = _pad_to(x, 0, block)
+    if plan_tile is None:
+        nf_pad = n_features + (-n_features) % block
+        gcc, gcs, gss, mc, ms = rff_gram_stream_fused_pallas(
+            x, lm, nf_pad=nf_pad, scale_n=n_features, seed=seed,
+            ensemble=ensemble, sigma=sigma_rf, rf_kernel=rf_kernel,
+            block_k=block, interpret=interpret,
+        )
+    else:
+        nf_pad = n_features + (-n_features) % plan_tile
+        gcc, gcs, gss, mc, ms = rff_gram_stream_fused_tiled_pallas(
+            x, lm, nf_pad=nf_pad, scale_n=n_features, tile=plan_tile, seed=seed,
+            ensemble=ensemble, sigma=sigma_rf, rf_kernel=rf_kernel,
+            block_k=block, interpret=interpret,
+        )
+    from repro.core.kernels_math import assemble_streamed_gram_ensemble
+
+    nf = n_features
+    # the kernel folds 1/sqrt(N S) into the features; mc/ms carry draw e's
+    # per-draw moment columns at (2e, 2e+1) for the rank-S centering
+    return assemble_streamed_gram_ensemble(
+        gcc[:nf, :nf], gcs[:nf, :nf], gss[:nf, :nf], mc[:nf], ms[:nf],
+        n=n, ensemble=ensemble,
     )
 
 

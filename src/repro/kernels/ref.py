@@ -27,6 +27,40 @@ def rff_gram_stream_ref(x: jax.Array, omega: jax.Array, ell: jax.Array):
     return 0.5 * (g_h + g_h.T), sigma @ ell.astype(jnp.float32)
 
 
+def rff_gram_stream_fused_ref(
+    x: jax.Array,
+    ell: jax.Array,
+    *,
+    n_features: int,
+    seed: int,
+    ensemble: int = 1,
+    sigma: float = 1.0,
+    rf_kernel: str = "gauss",
+):
+    """Dense oracle for ops.rff_gram_stream_fused: the mean over S draws of
+    the per-draw *centered* Gram and moment,
+
+        G_H = mean_e [Sigma_e H Sigma_e^T],   u = mean_e [Sigma_e ell],
+
+    with Sigma_e built from the materialized generator twin
+    (:func:`repro.kernels.prng.fused_omega`) at ensemble key ``e``.  The
+    mean-of-centered (not centered-pooled) form is the semantics the fused
+    kernels implement via their per-draw moment columns."""
+    from repro.kernels.prng import fused_omega
+
+    g_h = None
+    u = None
+    for e in range(ensemble):
+        omega = fused_omega(
+            seed, n_features, x.shape[0],
+            ensemble_index=e, sigma=sigma, rf_kernel=rf_kernel,
+        )
+        g_e, u_e = rff_gram_stream_ref(x, omega, ell)
+        g_h = g_e if g_h is None else g_h + g_e
+        u = u_e if u is None else u + u_e
+    return g_h / ensemble, u / ensemble
+
+
 def fake_quant_ref(x: jax.Array, u: jax.Array, *, bits: int) -> jax.Array:
     """XLA twin of ops.fake_quant: stochastic-round quantize->dequantize with
     a per-tensor absmax scale.  Bit-identical to the Pallas kernel (and to

@@ -28,6 +28,20 @@ Two layouts share the kernel math:
   output tiling — which removes the N ceiling entirely.
 
 ``kernels.ops.rff_gram_stream`` auto-selects between them from N.
+
+**Seed-fused variants** (`rff_gram_stream_fused_pallas`,
+`rff_gram_stream_fused_tiled_pallas`): no ``omega`` operand at all — each
+program instance draws its W_RF rows *inside* the kernel from the
+counter-based threefry stream of :mod:`repro.kernels.prng`
+(``threefry(seed, feature_row, column)`` per element), so the ``(N, p)``
+weight tensor never exists in HBM on either side of the federation.  The
+per-step math lives in :func:`fused_step_stats` /
+:func:`fused_tile_pair_step` / :func:`fused_tile_moment_step`, shared
+verbatim by the kernels and their XLA generator twins in ``core/rf_tca.py``
+— fused-vs-twin agreement is bit-for-bit by construction.  ``ensemble=S``
+averages the Gram/moment statistics over S independently-keyed draws in the
+same pass (near-free variance reduction: the draws ride the already-streamed
+sample blocks); ``S=1`` traces the identical program as the single-draw path.
 """
 from __future__ import annotations
 
@@ -37,6 +51,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prng import fused_omega_block
 
 
 def _rff_gram_kernel(
@@ -277,3 +293,356 @@ def rff_gram_stream_pallas(
         ],
         interpret=interpret,
     )(omega, x, lm)
+
+
+# --------------------------------------------------------------------------
+# seed-fused layouts: W_RF rows drawn inside the kernel, no omega operand
+# --------------------------------------------------------------------------
+
+_CONTRACT = (((1,), (1,)), ((), ()))
+
+
+def _fused_feature_scales(lm, *, n_features: int, ensemble: int):
+    """(mask, per-feature scale, fp32 lm) for one sample block.
+
+    Features carry 1/sqrt(N S): quadratic contractions (the Gram blocks) then
+    accumulate the *mean over draws* directly, while the per-draw moment
+    columns come out scaled by 1/sqrt(S) — exactly what the ensemble assembly
+    (``assemble_streamed_gram_ensemble``) expects for averaging the centered
+    per-draw Grams.  At ``S=1`` no extra op is traced — the single-draw
+    program is unchanged.
+    """
+    inv = 1.0 / jnp.sqrt(jnp.float32(n_features))
+    lmf = lm.astype(jnp.float32)  # (2, bk): row 0 = ell, row 1 = mask
+    mask = lmf[1:2, :]  # (1, bk); zero on padded sample columns
+    if ensemble > 1:
+        inv = inv * jax.lax.rsqrt(jnp.float32(ensemble))
+    return mask, inv, lmf
+
+
+def fused_step_stats(
+    xblk, lm, *, nf: int, n_features: int, seed: int, ensemble: int,
+    sigma: float, rf_kernel: str,
+):
+    """One sample block's five stat contributions, W_RF rows drawn in-step.
+
+    ``xblk`` (p_pad, bk), ``lm`` (2, bk) -> (dcc (nf, nf), dcs, dss,
+    dmc (nf, 2S), dms).  The Gram contributions are pooled over draws (the
+    1/sqrt(S) feature scale makes the sum the mean); the moment columns stay
+    per draw — centering is quadratic in the column sums, so the assembly
+    (:func:`repro.core.kernels_math.assemble_streamed_gram_ensemble`) needs
+    draw ``e``'s columns at ``(2e, 2e+1)``.  Shared verbatim by the untiled
+    fused kernel and its XLA twin so both trace the identical float ops.
+    """
+    mask, inv, lm_m = _fused_feature_scales(lm, n_features=n_features, ensemble=ensemble)
+    dcc = dcs = dss = None
+    dmc_cols = []
+    dms_cols = []
+    for e in range(ensemble):
+        om = fused_omega_block(
+            seed, nf, xblk.shape[0], ensemble_index=e, sigma=sigma, rf_kernel=rf_kernel
+        )
+        z = jnp.dot(om, xblk, preferred_element_type=jnp.float32)
+        c = jnp.cos(z) * inv * mask
+        s = jnp.sin(z) * inv * mask
+        terms = (
+            jax.lax.dot_general(c, c, _CONTRACT, preferred_element_type=jnp.float32),
+            jax.lax.dot_general(c, s, _CONTRACT, preferred_element_type=jnp.float32),
+            jax.lax.dot_general(s, s, _CONTRACT, preferred_element_type=jnp.float32),
+        )
+        if dcc is None:
+            dcc, dcs, dss = terms
+        else:
+            dcc, dcs, dss = (a + t for a, t in zip((dcc, dcs, dss), terms))
+        dmc_cols.append(
+            jax.lax.dot_general(c, lm_m, _CONTRACT, preferred_element_type=jnp.float32)
+        )
+        dms_cols.append(
+            jax.lax.dot_general(s, lm_m, _CONTRACT, preferred_element_type=jnp.float32)
+        )
+    dmc = dmc_cols[0] if ensemble == 1 else jnp.concatenate(dmc_cols, axis=1)
+    dms = dms_cols[0] if ensemble == 1 else jnp.concatenate(dms_cols, axis=1)
+    return dcc, dcs, dss, dmc, dms
+
+
+def fused_tile_pair_step(
+    xblk, lm, row_i, row_j, *, tile: int, n_features: int, seed: int,
+    ensemble: int, sigma: float, rf_kernel: str,
+):
+    """One (i, j) feature-tile pair's Gram contributions on one sample block.
+
+    ``row_i`` / ``row_j`` are the tiles' absolute row offsets (traced in the
+    kernel: ``program_id * tile``).  Returns (dcc, dcs, dss), each (t, t).
+    """
+    mask, inv, _ = _fused_feature_scales(lm, n_features=n_features, ensemble=ensemble)
+    dcc = dcs = dss = None
+    for e in range(ensemble):
+        om_i = fused_omega_block(
+            seed, tile, xblk.shape[0], row0=row_i,
+            ensemble_index=e, sigma=sigma, rf_kernel=rf_kernel,
+        )
+        om_j = fused_omega_block(
+            seed, tile, xblk.shape[0], row0=row_j,
+            ensemble_index=e, sigma=sigma, rf_kernel=rf_kernel,
+        )
+        z_i = jnp.dot(om_i, xblk, preferred_element_type=jnp.float32)
+        z_j = jnp.dot(om_j, xblk, preferred_element_type=jnp.float32)
+        c_i = jnp.cos(z_i) * inv * mask
+        s_i = jnp.sin(z_i) * inv * mask
+        c_j = jnp.cos(z_j) * inv * mask
+        s_j = jnp.sin(z_j) * inv * mask
+        terms = (
+            jax.lax.dot_general(c_i, c_j, _CONTRACT, preferred_element_type=jnp.float32),
+            jax.lax.dot_general(c_i, s_j, _CONTRACT, preferred_element_type=jnp.float32),
+            jax.lax.dot_general(s_i, s_j, _CONTRACT, preferred_element_type=jnp.float32),
+        )
+        if dcc is None:
+            dcc, dcs, dss = terms
+        else:
+            dcc, dcs, dss = (a + t for a, t in zip((dcc, dcs, dss), terms))
+    return dcc, dcs, dss
+
+
+def fused_tile_moment_step(
+    xblk, lm, row_i, *, tile: int, n_features: int, seed: int, ensemble: int,
+    sigma: float, rf_kernel: str,
+):
+    """One row tile's (t, 2S) per-draw moment contributions on one sample
+    block — draw ``e``'s (ell-moment, column-sum) land in columns
+    ``(2e, 2e+1)``, matching :func:`fused_step_stats`."""
+    mask, inv, lm_m = _fused_feature_scales(lm, n_features=n_features, ensemble=ensemble)
+    dmc_cols = []
+    dms_cols = []
+    for e in range(ensemble):
+        om_i = fused_omega_block(
+            seed, tile, xblk.shape[0], row0=row_i,
+            ensemble_index=e, sigma=sigma, rf_kernel=rf_kernel,
+        )
+        z_i = jnp.dot(om_i, xblk, preferred_element_type=jnp.float32)
+        c_i = jnp.cos(z_i) * inv * mask
+        s_i = jnp.sin(z_i) * inv * mask
+        dmc_cols.append(
+            jax.lax.dot_general(c_i, lm_m, _CONTRACT, preferred_element_type=jnp.float32)
+        )
+        dms_cols.append(
+            jax.lax.dot_general(s_i, lm_m, _CONTRACT, preferred_element_type=jnp.float32)
+        )
+    dmc = dmc_cols[0] if ensemble == 1 else jnp.concatenate(dmc_cols, axis=1)
+    dms = dms_cols[0] if ensemble == 1 else jnp.concatenate(dms_cols, axis=1)
+    return dmc, dms
+
+
+def _rff_gram_fused_kernel(
+    x_ref, lm_ref, gcc_ref, gcs_ref, gss_ref, mc_ref, ms_ref,
+    acc_cc, acc_cs, acc_ss, acc_mc, acc_ms,
+    *, n_features: int, k_steps: int, seed: int, ensemble: int,
+    sigma: float, rf_kernel: str,
+):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_cc[...] = jnp.zeros_like(acc_cc)
+        acc_cs[...] = jnp.zeros_like(acc_cs)
+        acc_ss[...] = jnp.zeros_like(acc_ss)
+        acc_mc[...] = jnp.zeros_like(acc_mc)
+        acc_ms[...] = jnp.zeros_like(acc_ms)
+
+    dcc, dcs, dss, dmc, dms = fused_step_stats(
+        x_ref[...], lm_ref[...], nf=acc_cc.shape[0], n_features=n_features,
+        seed=seed, ensemble=ensemble, sigma=sigma, rf_kernel=rf_kernel,
+    )
+    acc_cc[...] += dcc
+    acc_cs[...] += dcs
+    acc_ss[...] += dss
+    acc_mc[...] += dmc
+    acc_ms[...] += dms
+
+    @pl.when(k == k_steps - 1)
+    def _write():
+        gcc_ref[...] = acc_cc[...]
+        gcs_ref[...] = acc_cs[...]
+        gss_ref[...] = acc_ss[...]
+        mc_ref[...] = acc_mc[...]
+        ms_ref[...] = acc_ms[...]
+
+
+def _rff_gram_fused_tiled_kernel(
+    x_ref, lm_ref, gcc_ref, gcs_ref, gss_ref, mc_ref, ms_ref,
+    acc_cc, acc_cs, acc_ss, acc_mc, acc_ms,
+    *, n_features: int, k_steps: int, tile: int, seed: int, ensemble: int,
+    sigma: float, rf_kernel: str,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_cc[...] = jnp.zeros_like(acc_cc)
+        acc_cs[...] = jnp.zeros_like(acc_cs)
+        acc_ss[...] = jnp.zeros_like(acc_ss)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init_moments():
+        acc_mc[...] = jnp.zeros_like(acc_mc)
+        acc_ms[...] = jnp.zeros_like(acc_ms)
+
+    x = x_ref[...]
+    lm = lm_ref[...]
+    dcc, dcs, dss = fused_tile_pair_step(
+        x, lm, i * tile, j * tile, tile=tile, n_features=n_features,
+        seed=seed, ensemble=ensemble, sigma=sigma, rf_kernel=rf_kernel,
+    )
+    acc_cc[...] += dcc
+    acc_cs[...] += dcs
+    acc_ss[...] += dss
+
+    # the (t, 2) moment blocks only depend on the row tile i: accumulate them
+    # once per i, on the j == 0 sweep (the row slab is re-drawn — same bits)
+    @pl.when(j == 0)
+    def _moments():
+        dmc, dms = fused_tile_moment_step(
+            x, lm, i * tile, tile=tile, n_features=n_features,
+            seed=seed, ensemble=ensemble, sigma=sigma, rf_kernel=rf_kernel,
+        )
+        acc_mc[...] += dmc
+        acc_ms[...] += dms
+
+    @pl.when(k == k_steps - 1)
+    def _write():
+        gcc_ref[...] = acc_cc[...]
+        gcs_ref[...] = acc_cs[...]
+        gss_ref[...] = acc_ss[...]
+
+    @pl.when((k == k_steps - 1) & (j == 0))
+    def _write_moments():
+        mc_ref[...] = acc_mc[...]
+        ms_ref[...] = acc_ms[...]
+
+
+def rff_gram_stream_fused_pallas(
+    x: jax.Array,  # (p_pad, n), zero-padded feature rows
+    lm: jax.Array,  # (2, n): stacked [ell; column-mask]
+    *,
+    nf_pad: int,  # padded feature-row count (the kernel's draw height)
+    scale_n: int,  # true N for the 1/sqrt(N) feature normalization
+    seed: int,
+    ensemble: int = 1,
+    sigma: float = 1.0,
+    rf_kernel: str = "gauss",
+    block_k: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Seed-fused untiled layout: same five outputs, no omega operand.
+
+    Rows ``[scale_n, nf_pad)`` of the outputs are padding garbage (drawn but
+    meaningless) — the wrapper slices them off, exactly as the materialized
+    kernel's zero-padded omega rows are sliced.
+    """
+    p, n = x.shape
+    bk = min(block_k, n)
+    if n % bk or lm.shape[1] != n:
+        raise ValueError(f"n={n} must tile by {bk} and match lm {lm.shape}")
+    k_steps = n // bk
+
+    kernel = functools.partial(
+        _rff_gram_fused_kernel, n_features=scale_n, k_steps=k_steps,
+        seed=seed, ensemble=ensemble, sigma=sigma, rf_kernel=rf_kernel,
+    )
+    nf = nf_pad
+    mw = 2 * ensemble  # per-draw moment columns: (2e, 2e+1) for draw e
+    return pl.pallas_call(
+        kernel,
+        grid=(k_steps,),
+        in_specs=[
+            pl.BlockSpec((p, bk), lambda k: (0, k)),
+            pl.BlockSpec((2, bk), lambda k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nf, nf), lambda k: (0, 0)),
+            pl.BlockSpec((nf, nf), lambda k: (0, 0)),
+            pl.BlockSpec((nf, nf), lambda k: (0, 0)),
+            pl.BlockSpec((nf, mw), lambda k: (0, 0)),
+            pl.BlockSpec((nf, mw), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nf, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nf, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nf, nf), jnp.float32),
+            jax.ShapeDtypeStruct((nf, mw), jnp.float32),
+            jax.ShapeDtypeStruct((nf, mw), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nf, nf), jnp.float32),
+            pltpu.VMEM((nf, nf), jnp.float32),
+            pltpu.VMEM((nf, nf), jnp.float32),
+            pltpu.VMEM((nf, mw), jnp.float32),
+            pltpu.VMEM((nf, mw), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, lm)
+
+
+def rff_gram_stream_fused_tiled_pallas(
+    x: jax.Array,  # (p_pad, n)
+    lm: jax.Array,  # (2, n)
+    *,
+    nf_pad: int,
+    scale_n: int,
+    tile: int = 512,
+    seed: int,
+    ensemble: int = 1,
+    sigma: float = 1.0,
+    rf_kernel: str = "gauss",
+    block_k: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Seed-fused tiled layout: grid (N/t, N/t, n/bk), W_RF rows drawn per
+    tile from ``threefry(seed, tile_row_offset + r, col)`` — VMEM per
+    instance is the usual 3 t^2 fp32 accumulators plus the two (t, p) draw
+    slabs; nothing N-sized exists anywhere."""
+    p, n = x.shape
+    bk = min(block_k, n)
+    if n % bk or lm.shape[1] != n:
+        raise ValueError(f"n={n} must tile by {bk} and match lm {lm.shape}")
+    if nf_pad % tile:
+        raise ValueError(f"nf_pad={nf_pad} must tile by {tile}")
+    n_tiles = nf_pad // tile
+    k_steps = n // bk
+
+    kernel = functools.partial(
+        _rff_gram_fused_tiled_kernel, n_features=scale_n, k_steps=k_steps,
+        tile=tile, seed=seed, ensemble=ensemble, sigma=sigma, rf_kernel=rf_kernel,
+    )
+    mw = 2 * ensemble  # per-draw moment columns: (2e, 2e+1) for draw e
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles, n_tiles, k_steps),
+        in_specs=[
+            pl.BlockSpec((p, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((2, bk), lambda i, j, k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile, mw), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((tile, mw), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nf_pad, nf_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nf_pad, nf_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nf_pad, nf_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nf_pad, mw), jnp.float32),
+            jax.ShapeDtypeStruct((nf_pad, mw), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile, tile), jnp.float32),
+            pltpu.VMEM((tile, tile), jnp.float32),
+            pltpu.VMEM((tile, tile), jnp.float32),
+            pltpu.VMEM((tile, mw), jnp.float32),
+            pltpu.VMEM((tile, mw), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, lm)

@@ -455,3 +455,44 @@ def test_protocol_resolves_auto_codec(tiny_setup, tmp_path, monkeypatch):
     assert tr._frozen_w  # the pick really flowed into the transport
     tr2 = _train(s, t, cfg, codec="auto:0.12")
     assert tr2.resolved_codec == "qint4"
+
+
+def test_seed_replay_omega_fused_bit_identity():
+    """The "omega_fused" generator replays the fused counter stream: a
+    receiver that wants the materialized Omega gets the exact bits the fused
+    kernels draw in-kernel, from the 9-byte wire payload."""
+    from repro.kernels.prng import fused_omega
+
+    codec = get_codec("seed_replay")
+    key = np.asarray([321, 2], np.uint32)  # (seed, ensemble_index)
+    om = np.asarray(fused_omega(321, 48, 8, ensemble_index=2))
+    msg = w_rf_message(om, sender=0, round=0, replay=("omega_fused", key))
+    data = serialize(msg, codec)
+    out, _ = deserialize(data)
+    assert np.array_equal(out.arrays["w_rf"], om)
+    assert codec.nbytes(om.shape, np.float32) == 9  # id + uint32[2] key
+
+
+def test_seed_replay_decode_memoized():
+    """Every round re-announces the same key; the receiver must reconstruct
+    only once and hand back the cached read-only array afterwards."""
+    from repro.comm.codecs import SeedReplayCodec
+    from repro.kernels.prng import fused_omega
+
+    codec = get_codec("seed_replay")
+    key = np.asarray([3735928559, 1], np.uint32)  # unique: cold cache entry
+    data = codec.encode(None, replay=("omega_fused", key))
+    before = SeedReplayCodec.regenerations
+    a = codec.decode(data, (32, 8), np.float32)
+    assert SeedReplayCodec.regenerations == before + 1  # one real reconstruction
+    b = codec.decode(data, (32, 8), np.float32)
+    assert SeedReplayCodec.regenerations == before + 1  # repeat decode: cache hit
+    assert b is a  # the identical cached object, not a fresh allocation
+    assert not a.flags.writeable  # shared cache entry must be immutable
+    with pytest.raises(ValueError):
+        a[0, 0] = 1.0
+    assert np.array_equal(a, np.asarray(fused_omega(3735928559, 32, 8, ensemble_index=1)))
+    # a different shape under the same key is a distinct cache entry
+    c = codec.decode(data, (16, 8), np.float32)
+    assert SeedReplayCodec.regenerations == before + 2
+    assert c.shape == (16, 8)

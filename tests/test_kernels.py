@@ -1,4 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape x dtype sweeps (interpret mode)."""
+import importlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -195,6 +197,131 @@ def test_rff_kernel_feeds_rf_tca():
     _, _, s1 = rf_tca(xs, xt, n_features=64, m=8, gamma=1e-2, use_pallas=True)
     _, _, s2 = rf_tca(xs, xt, n_features=64, m=8, gamma=1e-2, use_pallas=False)
     np.testing.assert_allclose(np.asarray(s1.eigvals), np.asarray(s2.eigvals), rtol=1e-2)
+
+
+# ---- seed-fused RFF kernels (W_RF drawn inside the kernel) -----------------
+
+
+def _rf_tca_module():
+    # repro.core re-exports the rf_tca *function*, which shadows the submodule
+    # on attribute access — import the module explicitly.
+    return importlib.import_module("repro.core.rf_tca")
+
+
+def _fused_case(p=7, n=150, key_seed=0):
+    from repro.core.kernels_math import ell_vector
+
+    key = jax.random.PRNGKey(key_seed)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    return x, ell
+
+
+@pytest.mark.parametrize("ensemble", [1, 3])
+@pytest.mark.parametrize("tile", [0, 128])
+def test_fused_gram_pallas_matches_twin_bitwise(ensemble, tile):
+    """Acceptance: the seed-fused Pallas kernel equals its XLA generator twin
+    at 0 ULP in both layouts — same counter draws, same padded geometry, same
+    sequential accumulation order, hence the identical float op sequence."""
+    rf = _rf_tca_module()
+    x, ell = _fused_case(key_seed=tile + ensemble)
+    kw = dict(n_features=96, seed=11, ensemble=ensemble, tile=tile)
+    g_p, u_p = rf.fused_streaming_gram(x, ell, use_pallas=True, **kw)
+    g_x, u_x = rf.fused_streaming_gram(x, ell, use_pallas=False, **kw)
+    assert bool(jnp.array_equal(g_p, g_x)), float(jnp.abs(g_p - g_x).max())
+    assert bool(jnp.array_equal(u_p, u_x)), float(jnp.abs(u_p - u_x).max())
+
+
+def test_fused_ensemble1_degenerate_to_materialized():
+    """ensemble=1 is bitwise the single-draw program: the fused kernel with
+    S=1 equals the materialized kernel fed the generator twin's omega."""
+    from repro.core.kernels_math import ell_vector
+    from repro.kernels.prng import fused_omega
+
+    p, n, nf, seed = 9, 130, 64, 4
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    g_f, u_f = ops.rff_gram_stream_fused(x, ell, n_features=nf, seed=seed)
+    g_m, u_m = ops.rff_gram_stream(x, fused_omega(seed, nf, p), ell)
+    assert bool(jnp.array_equal(g_f, g_m)), float(jnp.abs(g_f - g_m).max())
+    assert bool(jnp.array_equal(u_f, u_m)), float(jnp.abs(u_f - u_m).max())
+
+
+def test_fused_ensemble_matches_dense_oracle():
+    """ensemble=S averages the per-draw *centered* statistics: the fused pass
+    must match the mean over S materialized single-draw oracles."""
+    rf = _rf_tca_module()
+    x, ell = _fused_case(p=6, n=110, key_seed=5)
+    kw = dict(n_features=64, seed=3, ensemble=3)
+    g, u = rf.fused_streaming_gram(x, ell, **kw)
+    ge, ue = ref.rff_gram_stream_fused_ref(x, ell, **kw)
+    scale = float(jnp.abs(ge).max())
+    np.testing.assert_allclose(np.asarray(g) / scale, np.asarray(ge) / scale, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(ue), atol=3e-5)
+
+
+@pytest.mark.parametrize("p,n,nf", [(16, 64, 32), (7, 130, 96)])
+def test_rff_fused_featurize_matches_materialized(p, n, nf):
+    """Seed-fused featurize kernel vs rff_ref on the materialized twin omega
+    (per-block accumulation vs one matmul: allclose, not bitwise)."""
+    from repro.kernels.prng import fused_omega
+
+    key = jax.random.PRNGKey(p * n)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    sig = ops.rff_fused(x, n_features=nf, seed=2)
+    exp = ref.rff_ref(x, fused_omega(2, nf, p))
+    np.testing.assert_allclose(np.asarray(sig), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_fused_path_weightless_jaxpr():
+    """Acceptance: W_RF is absent from the fused path's jaxpr — the pass
+    consumes only (x, ell), bakes in no weight-sized constants, and never
+    materializes the (2N, n) feature matrix; the only weight state anywhere
+    is the static integer seed.  (Per-sample-block transient draws inside the
+    scan body are the point of the design and stay within the size bound.)"""
+    rf = _rf_tca_module()
+    from repro.core.kernels_math import ell_vector
+
+    p, n, nf, block = 8, 1000, 256, 128
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (p, n), jnp.float32)
+    ell = ell_vector(n // 2, n - n // 2)
+    closed = jax.make_jaxpr(
+        lambda a, e: rf.fused_streaming_gram(
+            a, e, n_features=nf, seed=5, use_pallas=False, block=block
+        )
+    )(x, ell)
+    # no weight operand: x and ell are the entire input
+    assert len(closed.jaxpr.invars) == 2
+    # no weight-sized constants baked into the program
+    for c in closed.consts:
+        assert np.size(c) < nf * p, f"const of shape {np.shape(c)} smells like omega"
+    nf_pad, n_pad, p_pad = 256, 1024, 128
+    # stats + assembly (2N, 2N) blocks and the blocked input are the biggest
+    # legitimate buffers; a materialized Sigma (2N_pad, n_pad) would exceed it
+    limit = max(4 * nf_pad * nf_pad, p_pad * n_pad)
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                size = int(np.prod(v.aval.shape)) if v.aval.shape else 1
+                assert size <= limit, f"intermediate {v.aval.shape} exceeds fused bound"
+        for sub in jax.core.subjaxprs(jx):
+            walk(sub)
+
+    walk(closed.jaxpr)
+    assert 2 * nf_pad * n_pad > limit  # the bound would catch a materialized Sigma
+
+    # the Pallas lowering is equally weightless: same 2-operand surface
+    closed_p = jax.make_jaxpr(
+        lambda a, e: rf.fused_streaming_gram(
+            a, e, n_features=nf, seed=5, use_pallas=True, block=block
+        )
+    )(x, ell)
+    assert len(closed_p.jaxpr.invars) == 2
+    for c in closed_p.consts:
+        assert np.size(c) < nf * p
 
 
 @pytest.mark.parametrize("shape", [(512,), (512, 32), (7, 13), (1,), (1024, 5)])

@@ -7,6 +7,7 @@ import pytest
 from repro.core import (
     ell_vector,
     rf_tca_fit,
+    rf_tca_transform,
     solve_w_rf,
     solve_w_rf_cholesky,
     solve_w_rf_gram,
@@ -195,3 +196,56 @@ def test_streaming_never_materializes_sigma(data):
 
     walk(jaxpr.jaxpr)
     assert two_n * n > limit  # the bound would catch a materialized Sigma
+
+
+# ---- seed-fused fit path (w_rf="fused:<seed>") -----------------------------
+
+
+def test_fused_fit_state_and_transform(data):
+    """w_rf="fused:<seed>": the state carries no omega tensor — only the
+    (seed, ensemble, sigma, kernel) spec — and out-of-sample transform
+    re-derives draw 0 from the counter stream on demand."""
+    from repro.kernels.prng import fused_omega
+
+    xs, xt = data
+    st = rf_tca_fit(xs, xt, n_features=48, m=6, gamma=1e-2, w_rf="fused:7")
+    assert st.omega is None
+    assert st.fused == (7, 1, 1.0, "gauss")
+    f = rf_tca_transform(st, xs)
+    assert f.shape == (6, xs.shape[1]) and bool(jnp.isfinite(f).all())
+    om = fused_omega(7, 48, xs.shape[0])
+    exp = st.w_rf.T @ rff_features(xs, om)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(exp), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_fit_pallas_twin_agree(data):
+    """The fused fit through the Pallas kernel and through the XLA twin see
+    bit-identical (G_H, u), so the deterministic eigensolve agrees exactly."""
+    xs, xt = data
+    kw = dict(n_features=48, m=6, gamma=1e-2, w_rf="fused:3")
+    v_p = rf_tca_fit(xs, xt, use_pallas=True, **kw).eigvals
+    v_x = rf_tca_fit(xs, xt, use_pallas=False, **kw).eigvals
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_x))
+
+
+def test_fused_ensemble_fit_and_transform(data):
+    """ensemble=S fit runs end to end; the spec round-trips into the state
+    and the ensemble-averaged projector still transforms unseen data."""
+    xs, xt = data
+    st = rf_tca_fit(xs, xt, n_features=32, m=4, gamma=1e-2, w_rf="fused:1", ensemble=4)
+    assert st.fused == (1, 4, 1.0, "gauss")
+    assert bool(jnp.isfinite(st.eigvals).all())
+    f_t = rf_tca_transform(st, xt)
+    assert f_t.shape == (4, xt.shape[1]) and bool(jnp.isfinite(f_t).all())
+
+
+def test_fused_fit_validation(data):
+    """The lever's misuse modes fail fast with actionable messages."""
+    xs, xt = data
+    kw = dict(n_features=16, m=2)
+    with pytest.raises(ValueError, match="ensemble"):
+        rf_tca_fit(xs, xt, ensemble=2, **kw)
+    with pytest.raises(ValueError, match='mode="stream"'):
+        rf_tca_fit(xs, xt, w_rf="fused:0", mode="dense", **kw)
+    with pytest.raises(ValueError, match="fused"):
+        rf_tca_fit(xs, xt, w_rf="not-a-spec", **kw)
