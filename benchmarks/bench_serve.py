@@ -1,0 +1,150 @@
+"""Serving benchmark — the adaptation-as-a-service latency/throughput record.
+
+Claims measured (and recorded in ``BENCH_serve.json``):
+
+- **load curve** — p50/p99 latency and achieved throughput of the aligner
+  server under an open-loop Poisson arrival process at several offered
+  loads (>= 3 levels in the full run), driven through the fedsim virtual
+  clock with *measured* wall-clock service times: higher load fills the
+  dispatcher's buckets, so throughput climbs until the single server
+  saturates and queueing blows up the tail — the classic open-loop story;
+- **batching** — the requests-per-dispatch and bucket-width histograms of
+  the batching dispatcher across the whole run;
+- **cache** — store hit rate with more live domain pairs than store
+  capacity: LRU misses re-solve in the request path and the bench survives;
+- **admission** — a new client admitted over the real wire (CRC frames,
+  codec, retries) gets an aligner whose transforms agree with a
+  from-scratch refit to <= 1e-3 while no cached version changes and no
+  refit runs (the refit-free gate);
+- **sentinel** — each (mode, bucket) compiled plane traces exactly once
+  across warmup + every load level: batched serving never silently
+  retraces.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.rf_tca import fused_omega_cache_info, rf_tca_fit, rf_tca_transform
+from repro.obs import sentinel
+from repro.serve import AlignerServer, run_open_loop, synth_requests
+
+ROOT = Path(__file__).resolve().parent.parent
+JSON_PATH = ROOT / "BENCH_serve.json"
+
+
+def _domain_pair(seed: int, dim: int, n: int):
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((dim, n)).astype(np.float32)
+    xt = (rng.standard_normal((dim, n - n // 8)) + 0.9).astype(np.float32)
+    return xs, xt
+
+
+def run(smoke: bool = False) -> dict:
+    dim = 8 if smoke else 16
+    n = 120 if smoke else 480
+    fit_kw = dict(n_features=32 if smoke else 128, m=8 if smoke else 16, seed=0)
+    n_pairs, capacity = 4, 3  # one more live pair than capacity: real misses
+    rates = [300.0, 1200.0] if smoke else [250.0, 1000.0, 4000.0]
+    n_requests = 60 if smoke else 400
+
+    server = AlignerServer(capacity=capacity, min_bucket=8, max_bucket=64)
+    pairs = [("src", f"tgt{i}") for i in range(n_pairs)]
+    domains = {}
+    for i, pair in enumerate(pairs):
+        xs, xt = _domain_pair(100 + i, dim, n)
+        domains[pair] = (xs, xt)
+        server.fit_domain(pair, xs, xt, **fit_kw)
+
+    # -- sentinel gate opens before ANY serving dispatch ---------------------
+    before = sentinel.counts()
+    server.warmup(pairs[0])  # all pairs share shapes, so all share planes
+    # cache statistics should describe the load runs, not the warmup
+    server.store.hits = server.store.misses = server.store.evictions = 0
+
+    # -- admission: refit-free, over the real wire ---------------------------
+    rng = np.random.default_rng(7)
+    x_new = rng.standard_normal((dim, 64)).astype(np.float32)
+    pair0 = pairs[0]
+    v_before = server.store.latest_version(pair0)
+    refits_before = server.refits
+    adm = server.admit(pair0, x_new, role="source", sender=42)
+    assert adm.delivered, "admission wire legs must deliver (no faults injected)"
+    scratch = rf_tca_fit(
+        jnp.asarray(domains[pair0][0]), jnp.asarray(domains[pair0][1]),
+        w_rf=f"fused:{server.fused_seed}", **fit_kw,
+    )
+    probe = rng.standard_normal((dim, 25)).astype(np.float32)
+    served = np.asarray(rf_tca_transform(adm.state, jnp.asarray(probe)))
+    refit = np.asarray(rf_tca_transform(scratch, jnp.asarray(probe)))
+    admission = {
+        "max_divergence_vs_refit": float(np.max(np.abs(served - refit))),
+        "store_version_changed": server.store.latest_version(pair0) != v_before,
+        "refit_ran": server.refits != refits_before,
+        "bytes_up": adm.bytes_up,
+        "bytes_down": adm.bytes_down,
+        "moments_merged": server.store.get(pair0).stats.admitted,
+    }
+    emit("serve_admission_divergence", 0.0, f"{admission['max_divergence_vs_refit']:.2e}")
+
+    # -- open-loop Poisson load sweep ----------------------------------------
+    load_curve = {}
+    for li, rate in enumerate(rates):
+        reqs = synth_requests(
+            pairs, dim=dim, n_requests=n_requests, seed=10 + li,
+            cols_lo=4, cols_hi=24,
+        )
+        res = run_open_loop(server, reqs, rate=rate, seed=20 + li)
+        s = res.summary()
+        load_curve[f"{rate:g}"] = s
+        emit(
+            f"serve_load_{rate:g}rps", s["p50_ms"] * 1e3,
+            f"p99={s['p99_ms']:.2f}ms thru={s['throughput_rps']:.0f}rps "
+            f"batch={s['mean_batch']:.1f}",
+        )
+    top = load_curve[f"{rates[-1]:g}"]
+    saturation = {
+        "offered_rps": rates[-1],
+        "throughput_rps": top["throughput_rps"],
+    }
+
+    # -- gates: one trace per bucket rung, memoized fused omega --------------
+    after = sentinel.counts()
+    traces_per_bucket = {
+        plane: after[plane] - before.get(plane, 0)
+        for plane in after
+        if plane.startswith("serve.") and after[plane] != before.get(plane, 0)
+    }
+    sentinel.assert_stable(before, tuple(traces_per_bucket), expect=1)
+
+    record = {
+        "smoke": smoke,
+        "config": {
+            "dim": dim, "n": n, **fit_kw, "n_pairs": n_pairs,
+            "capacity": capacity, "min_bucket": 8, "max_bucket": 64,
+            "n_requests_per_level": n_requests,
+        },
+        "load_curve": load_curve,
+        "saturation": saturation,
+        "batch_histogram": server.dispatcher.histogram(),
+        "cache": server.store.snapshot(),
+        "refits_in_path": server.refits - refits_before,
+        "admission": admission,
+        "sentinel": {"traces_per_bucket": traces_per_bucket},
+        "fused_omega": fused_omega_cache_info(),
+        "wire": {
+            "bytes_total": int(server.admission.transport.log.bytes_total),
+            "rejects_total": int(server.admission.transport.log.rejects_total),
+        },
+    }
+    JSON_PATH.write_text(json.dumps(record, indent=2, sort_keys=True))
+    emit("serve_record", 0.0, f"wrote {JSON_PATH.name}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

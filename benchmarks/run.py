@@ -29,7 +29,10 @@ checkpoint interval), and ``obs`` -> ``BENCH_obs.json`` + ``trace_obs.json``
 (telemetry: fully-on vs off rounds/sec gated at <= 5% slowdown, bitwise
 off-vs-on degeneracy for both engines, jit-retrace sentinels at exactly one
 trace per plane, and a churn + server-crash async run exported as a
-Perfetto-viewable Chrome trace).
+Perfetto-viewable Chrome trace), and ``serve`` -> ``BENCH_serve.json``
+(adaptation-as-a-service: p50/p99 latency + throughput vs offered Poisson
+load, batch-size histograms, store hit rate under LRU pressure, the
+refit-free live-admission gate at <= 1e-3, one jit trace per batch bucket).
 
 ``--smoke`` reruns exactly those record-writing benches at tiny sizes and
 schema-validates the emitted JSON (required keys present, wall-times positive,
@@ -61,6 +64,7 @@ from benchmarks import (
     bench_rf_tca,
     bench_robust,
     bench_robustness,
+    bench_serve,
     bench_theory,
 )
 from repro.obs import Tracer, use_tracer, validate_trace_file
@@ -81,6 +85,7 @@ BENCHES = {
     "table14": ("App.D Tab.XIV/XV: Laplace vs Gaussian kernels", bench_laplace.run),
     "kernels": ("Pallas kernels vs oracles", bench_kernels.run),
     "obs": ("Telemetry: overhead gate, degeneracy, sentinels, trace export", bench_obs.run),
+    "serve": ("Serving: Poisson load curves, batching, cache, live admission", bench_serve.run),
 }
 
 
@@ -307,6 +312,42 @@ def validate_obs_record(record: dict) -> list[str]:
     return list(e)
 
 
+def validate_serve_record(record: dict) -> list[str]:
+    """BENCH_serve.json contract: positive latencies with p99 >= p50 at every
+    offered load (>= 3 levels in the full run), positive saturation
+    throughput, a cache hit rate in [0, 1], a nonempty batch histogram, the
+    admission-equals-refit gate at <= 1e-3 with no version change and no
+    refit, and exactly one jit trace per batch bucket."""
+    e = _SchemaErrors(record)
+    min_levels = 1 if record.get("smoke") else 3
+    curve = record.get("load_curve") or {}
+    if not (isinstance(curve, dict) and len(curve) >= min_levels):
+        e.append(f"load_curve: want >= {min_levels} offered-load levels, got {len(curve)}")
+    for rate, row in curve.items():
+        if not isinstance(row, dict):
+            e.append(f"load_curve.{rate}: not a dict")
+            continue
+        for k in ("p50_ms", "p99_ms", "throughput_rps", "completed"):
+            if not _is_pos(row.get(k)):
+                e.append(f"load_curve.{rate}.{k}: {row.get(k)!r} not positive")
+        if not row.get("p99_ms", 0) >= row.get("p50_ms", 0):
+            e.append(f"load_curve.{rate}: p99 {row.get('p99_ms')!r} < p50 {row.get('p50_ms')!r}")
+    e.need("saturation.throughput_rps", _is_pos)
+    e.need("cache.hit_rate", lambda v: isinstance(v, (int, float)) and 0.0 <= v <= 1.0)
+    e.need("batch_histogram.dispatches", _is_pos)
+    e.need("batch_histogram.requests_per_dispatch", lambda d: isinstance(d, dict) and d)
+    e.need("batch_histogram.bucket_widths", lambda d: isinstance(d, dict) and d)
+    e.need("admission.max_divergence_vs_refit", lambda v: 0.0 <= v <= 1e-3)
+    e.need("admission.store_version_changed", lambda v: v is False)
+    e.need("admission.refit_ran", lambda v: v is False)
+    e.need("admission.bytes_up", _is_pos)
+    e.need("admission.bytes_down", _is_pos)
+    e.need("sentinel.traces_per_bucket", lambda d: isinstance(d, dict) and d and all(
+        v == 1 for v in d.values()
+    ))
+    return list(e)
+
+
 def self_consistent_seed_replay(record: dict) -> bool:
     try:
         return (
@@ -326,6 +367,7 @@ def run_smoke() -> None:
         ("fleet", bench_fleet.run),
         ("robust", bench_robust.run),
         ("obs", bench_obs.run),
+        ("serve", bench_serve.run),
     ):
         print(f"# --- smoke {key} ---", flush=True)
         t0 = time.time()
@@ -339,6 +381,7 @@ def run_smoke() -> None:
         ("BENCH_fleet.json", validate_fleet_record),
         ("BENCH_robust.json", validate_robust_record),
         ("BENCH_obs.json", validate_obs_record),
+        ("BENCH_serve.json", validate_serve_record),
     ):
         path = ROOT / name
         if not path.exists():
@@ -349,7 +392,8 @@ def run_smoke() -> None:
         sys.exit("bench record schema violations:\n  " + "\n  ".join(errors))
     print(
         "# smoke: BENCH_rf_tca.json + BENCH_comm.json + BENCH_async.json + "
-        "BENCH_fleet.json + BENCH_robust.json + BENCH_obs.json schemas OK",
+        "BENCH_fleet.json + BENCH_robust.json + BENCH_obs.json + "
+        "BENCH_serve.json schemas OK",
         flush=True,
     )
 

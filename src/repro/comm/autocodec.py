@@ -36,14 +36,31 @@ def load_record(path=None) -> dict:
 
 def codec_table(record: dict) -> dict[str, dict]:
     """Per-codec {gap, bytes} from a BENCH_comm.json record (gap = identity
-    accuracy minus codec accuracy; bytes = total on-wire bytes of its run)."""
-    base = float(record["identity"]["acc"])
-    table = {}
-    for name, row in record["accuracy_vs_codec"].items():
-        table[name] = {
-            "gap": base - float(row["acc"]),
-            "bytes": int(sum(row["bytes"].values())),
-        }
+    accuracy minus codec accuracy; bytes = total on-wire bytes of its run).
+
+    A record written by an older bench (missing keys, reshaped rows) raises
+    a ``ValueError`` naming the rerun command — never a bare ``KeyError``
+    deep in a trainer constructor.
+    """
+    try:
+        base = float(record["identity"]["acc"])
+        table = {}
+        for name, row in record["accuracy_vs_codec"].items():
+            table[name] = {
+                "gap": base - float(row["acc"]),
+                "bytes": int(sum(row["bytes"].values())),
+            }
+    except (KeyError, TypeError, AttributeError) as exc:
+        raise ValueError(
+            "BENCH_comm.json record does not match the current schema "
+            f"(missing/reshaped field: {exc!r}) — regenerate it with "
+            "`PYTHONPATH=src python -m benchmarks.run --only wire`"
+        ) from exc
+    if not table:
+        raise ValueError(
+            "BENCH_comm.json record measured no codecs — regenerate it with "
+            "`PYTHONPATH=src python -m benchmarks.run --only wire`"
+        )
     return table
 
 

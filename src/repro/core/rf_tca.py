@@ -772,23 +772,61 @@ def rf_tca_fit(
     return RFTCAState(omega=omega, w_rf=w_rf, eigvals=vals)
 
 
+# Fused-path transform omega memo: the draw is a pure function of the spec
+# (seed, N, p, sigma, kernel), so repeated serving transforms must not redraw
+# it per call.  FIFO-capped cache with a ``regenerations`` counter, mirroring
+# ``comm.codecs.SeedReplayCodec.decode`` (the wire-side twin of this memo).
+_FUSED_OMEGA_CACHE: dict[tuple, jnp.ndarray] = {}
+_FUSED_OMEGA_CACHE_MAX = 16
+fused_omega_regenerations: int = 0
+
+
+def fused_transform_omega(state: RFTCAState, dim: int) -> jnp.ndarray:
+    """Draw-0 frequency matrix of a seed-fused state, memoized per spec.
+
+    ``dim`` is the data dimension p of the batch about to be featurized.  The
+    first call per ``(seed, N, p, sigma, kernel)`` materializes the (N, p)
+    matrix from the counter stream and counts one regeneration; subsequent
+    transforms (the serving hot path) hit the cache.
+    """
+    global fused_omega_regenerations
+    f_seed, _, f_sigma, f_kernel = state.fused
+    n_features = state.w_rf.shape[0] // 2
+    key = (int(f_seed), int(n_features), int(dim), float(f_sigma), str(f_kernel))
+    hit = _FUSED_OMEGA_CACHE.get(key)
+    if hit is not None:
+        return hit
+    from repro.kernels.prng import fused_omega
+
+    omega = fused_omega(f_seed, n_features, dim, sigma=f_sigma, rf_kernel=f_kernel)
+    fused_omega_regenerations += 1
+    if len(_FUSED_OMEGA_CACHE) >= _FUSED_OMEGA_CACHE_MAX:
+        _FUSED_OMEGA_CACHE.pop(next(iter(_FUSED_OMEGA_CACHE)))
+    _FUSED_OMEGA_CACHE[key] = omega
+    return omega
+
+
+def fused_omega_cache_info() -> dict[str, int]:
+    """{"size", "max", "regenerations"} — the memo's observable state."""
+    return {
+        "size": len(_FUSED_OMEGA_CACHE),
+        "max": _FUSED_OMEGA_CACHE_MAX,
+        "regenerations": fused_omega_regenerations,
+    }
+
+
 def rf_tca_transform(state: RFTCAState, x: jnp.ndarray) -> jnp.ndarray:
     """F = W_RF^T Sigma(X) in R^{m x n} — works on unseen data (out-of-sample).
 
     On the seed-fused path (``state.omega is None``) the frequency matrix is
     re-drawn from the counter stream on demand (draw 0 when the fit averaged
-    an ensemble) — small out-of-sample batches may materialize it here; the
-    fit-time statistics never did.
+    an ensemble) and memoized per spec (:func:`fused_transform_omega`) — the
+    fit-time statistics never materialized it, and repeated out-of-sample
+    transforms materialize it exactly once.
     """
     omega = state.omega
     if omega is None:
-        from repro.kernels.prng import fused_omega
-
-        f_seed, _, f_sigma, f_kernel = state.fused
-        omega = fused_omega(
-            f_seed, state.w_rf.shape[0] // 2, x.shape[0],
-            sigma=f_sigma, rf_kernel=f_kernel,
-        )
+        omega = fused_transform_omega(state, x.shape[0])
     return state.w_rf.T @ rff_features(x, omega)
 
 

@@ -88,6 +88,23 @@ class EvalTick(Event):
 
 
 @dataclass(frozen=True)
+class RequestArrived(Event):
+    """Serving plane (``repro.serve``): one inference/transform request of an
+    open-loop arrival process lands at the aligner server.  ``request`` keys
+    the load generator's request table (arrays stay host-side, as always)."""
+
+    request: int
+
+
+@dataclass(frozen=True)
+class RequestCompleted(Event):
+    """Serving plane: the batched dispatch holding ``request`` finished at
+    this virtual time — per-request latency is completion minus arrival."""
+
+    request: int
+
+
+@dataclass(frozen=True)
 class UplinkGaveUp(Event):
     client: int
     version: int  # server model version the client was dispatched from

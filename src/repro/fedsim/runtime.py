@@ -161,6 +161,27 @@ class _SchedulerBase:
             )
         return nbytes
 
+    def _edge_uplink_nbytes(self) -> float:
+        """Exact wire bytes of one merged edge -> server uplink: the partial
+        merges + masses at the tier-2 codec, with the classifier partial's
+        T_C-amortized share.  Shared by both schedulers: the async backhaul
+        events and the sync barrier's per-edge leg price the same frame."""
+        tr = self.trainer
+        nbytes = sum(
+            wire.serialized_size(k, tr._edge_specs[k], tr.edge_transport.codecs[k])
+            for k in self._uplink_kinds()
+        )
+        if tr.proto.aggregate_classifier:
+            nbytes += amortized_interval_bytes(
+                wire.serialized_size(
+                    "classifier",
+                    tr._edge_specs["classifier"],
+                    tr.edge_transport.codecs["classifier"],
+                ),
+                tr.proto.t_c,
+            )
+        return nbytes
+
 
 @dataclass
 class AsyncConfig:
@@ -204,6 +225,12 @@ class SyncScheduler(_SchedulerBase):
     hook, then advance the clock to the barrier: the deadline if a link
     scenario enforces one, else the slowest participant's completion, else
     ``round_s``.
+
+    With ``edge_links`` (two-tier topologies), each active edge adds an
+    explicit backhaul leg: the edge forwards its merged round payload to the
+    server only after its slowest member completes, so the barrier is
+    ``max over edges (slowest member + edge uplink)`` — previously the
+    backhaul was silently folded into client links only.
     """
 
     def __init__(
@@ -212,6 +239,7 @@ class SyncScheduler(_SchedulerBase):
         *,
         availability: AvailabilityTrace | None = None,
         links: LinkScenario | None = None,
+        edge_links: LinkScenario | None = None,
         round_s: float = 1.0,
         compute_s: Any = 1.0,
         seed: int = 0,
@@ -219,21 +247,47 @@ class SyncScheduler(_SchedulerBase):
         super().__init__(
             trainer, availability=availability, links=links, compute_s=compute_s, seed=seed
         )
+        if edge_links is not None:
+            if trainer.topology is None:
+                raise ValueError("edge_links need a fleet topology on the trainer")
+            if len(edge_links.links) < trainer.topology.n_edges:
+                raise ValueError(
+                    f"{len(edge_links.links)} edge links for "
+                    f"{trainer.topology.n_edges} edges"
+                )
+        self.edge_links = edge_links
         self.round_s = float(round_s)
 
     def _round_duration(self, plan: RoundPlan) -> float:
-        if self.links is None:
+        if self.links is None and self.edge_links is None:
             return self.round_s
-        if np.isfinite(self.links.deadline_s):
+        if self.links is not None and np.isfinite(self.links.deadline_s):
             return float(self.links.deadline_s)  # the barrier waits out the deadline
-        nbytes = self._uplink_nbytes()
+        nbytes = self._uplink_nbytes() if self.links is not None else 0.0
         # a gave-up uplink (inf) is a straggler LOST to the round, not one
         # the barrier waits forever for
-        times = [
-            t
-            for i in plan.msg_clients
-            if math.isfinite(t := self.compute_s[i] + self.links.uplink_time(self.rng, i, nbytes))
-        ]
+        done: dict[int, float] = {}
+        for i in plan.msg_clients:
+            t = self.compute_s[i] + (
+                self.links.uplink_time(self.rng, i, nbytes)
+                if self.links is not None
+                else 0.0
+            )
+            if math.isfinite(t):
+                done[i] = t
+        if self.edge_links is None:
+            return max(done.values(), default=self.round_s)
+        # explicit per-edge backhaul leg: each active edge forwards its merged
+        # payload once its slowest surviving member lands; an edge whose
+        # backhaul gives up (inf) loses the round like a straggler client
+        topo = self.trainer.topology
+        e_bytes = self._edge_uplink_nbytes()
+        times = []
+        for e in topo.edges_of(list(done)):
+            slowest = max(done[i] for i in done if topo.edge_of(i) == e)
+            leg = self.edge_links.uplink_time(self.rng, e, e_bytes)
+            if math.isfinite(leg):
+                times.append(slowest + leg)
         return max(times, default=self.round_s)
 
     def run(self, n_rounds: int, eval_every: int = 0) -> list[dict[str, Any]]:
@@ -463,26 +517,8 @@ class AsyncScheduler(_SchedulerBase):
         return edge if len(buf) >= self.cfg.buffer_size else None
 
     # -- the edge backhaul (two-tier topologies) ----------------------------
-
-    def _edge_uplink_nbytes(self) -> float:
-        """Exact wire bytes of one merged edge -> server uplink: the partial
-        merges + masses at the tier-2 codec, with the classifier partial's
-        T_C-amortized share."""
-        tr = self.trainer
-        nbytes = sum(
-            wire.serialized_size(k, tr._edge_specs[k], tr.edge_transport.codecs[k])
-            for k in self._uplink_kinds()
-        )
-        if tr.proto.aggregate_classifier:
-            nbytes += amortized_interval_bytes(
-                wire.serialized_size(
-                    "classifier",
-                    tr._edge_specs["classifier"],
-                    tr.edge_transport.codecs["classifier"],
-                ),
-                tr.proto.t_c,
-            )
-        return nbytes
+    # (_edge_uplink_nbytes lives on _SchedulerBase — shared with the sync
+    # barrier's per-edge backhaul leg)
 
     def _edge_uplink_delay(self, edge: int, t: float) -> tuple[bool, float]:
         """(delivered, backhaul crossing seconds) of a merged edge uplink

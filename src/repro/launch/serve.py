@@ -15,6 +15,26 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import LM, ShardRules
 
+# every attention-cache leaf grows along axis 2 (the sequence axis), whether
+# it is a plain KV pair, a windowed variant, or an MLA latent/rope column
+_CACHE_GROW_KEYS = ("k", "v", "attn_k", "attn_v", "c", "kr")
+
+
+def grow_cache(tree, extra: int, *, keys: tuple[str, ...] = _CACHE_GROW_KEYS):
+    """Pad every cache leaf under a growable key by ``extra`` slots on the
+    sequence axis (axis 2), recursing through nested dicts."""
+    out = {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            out[k] = grow_cache(v, extra, keys=keys)
+        elif k in keys:
+            pad = [(0, 0)] * v.ndim
+            pad[2] = (0, extra)
+            out[k] = jnp.pad(v, pad)
+        else:
+            out[k] = v
+    return out
+
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
@@ -45,23 +65,7 @@ def main(argv=None) -> dict:
     prefill = jax.jit(model.prefill)
     logits, cache = prefill(params, batch)
     # grow attention caches to hold generated tokens
-    def grow(path_key, leaf):
-        if path_key in ("k", "v", "attn_k", "attn_v"):
-            pad = [(0, 0)] * leaf.ndim
-            pad[2] = (0, args.gen)
-            return jnp.pad(leaf, pad)
-        if path_key in ("c", "kr"):
-            pad = [(0, 0)] * leaf.ndim
-            pad[2] = (0, args.gen)
-            return jnp.pad(leaf, pad)
-        return leaf
-
-    def walk(tree):
-        return {
-            k: walk(v) if isinstance(v, dict) else grow(k, v) for k, v in tree.items()
-        }
-
-    cache = walk(cache)
+    cache = grow_cache(cache, args.gen)
     t_prefill = time.time() - t0
 
     decode = jax.jit(model.decode_step)

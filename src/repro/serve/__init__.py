@@ -1,0 +1,37 @@
+"""Adaptation-as-a-service: a persistent aligner server over fitted RF-TCA
+states.
+
+The training stack fits aligners; this package *serves* them: a model store
+(LRU + version-tagged invalidation), a batching dispatcher that coalesces
+concurrent requests into bucketed compiled dispatches, a live-admission path
+that joins new clients over the real wire with an incremental moment merge
+(no refit), and an open-loop Poisson load generator over the fedsim virtual
+clock for the latency/throughput bench (``benchmarks/bench_serve.py``).
+"""
+from repro.serve.admission import (
+    AdmissionGateway,
+    AdmissionResult,
+    admission_message,
+    client_moment,
+)
+from repro.serve.dispatcher import BatchingDispatcher, Request
+from repro.serve.loadgen import LoadResult, poisson_arrivals, run_open_loop, synth_requests
+from repro.serve.server import AlignerServer
+from repro.serve.store import ModelStore, MomentStats, StoreEntry
+
+__all__ = [
+    "AdmissionGateway",
+    "AdmissionResult",
+    "AlignerServer",
+    "BatchingDispatcher",
+    "LoadResult",
+    "ModelStore",
+    "MomentStats",
+    "Request",
+    "StoreEntry",
+    "admission_message",
+    "client_moment",
+    "poisson_arrivals",
+    "run_open_loop",
+    "synth_requests",
+]

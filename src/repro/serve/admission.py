@@ -1,0 +1,159 @@
+"""Live client admission: join the federation without a global refit.
+
+The deployment story behind FedRF-TCA's O(1) communication: a *new* device
+suffering domain shift streams its Sigma-ell moment vector (2N floats, eq. 2)
+to the server and gets back a fitted aligner — total traffic a few KB,
+independent of the device's sample count, and the server never re-solves
+anything.
+
+The path is real wire end to end (``comm/wire.py``): the client's moments and
+the server's aligner response are serialized frames with CRC32 trailers
+through a :class:`~repro.comm.transport.WireTransport`, so codecs, integrity
+rejects and retry budgets all apply.  Server-side, the moment folds into the
+store entry's :class:`~repro.serve.store.MomentStats` by *incremental merge*
+(the weighted-mean associativity the fleet hierarchy already exploits) — the
+cached aligner's version does not change, which is the refit-free contract
+the bench gates.
+
+The aligner states are seed-fused (``w_rf="fused:<seed>"``): the response
+carries only the solved (2N, m) matrix plus the fused spec the client already
+shares, so the *server* never materializes the (N, p) frequency matrix per
+admission — the admitted client re-derives draw-0 omega from the shared seed
+(memoized, ``core.rf_tca.fused_transform_omega``) exactly like any fused
+transform.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wire
+from repro.comm.transport import Transport, WireTransport, resolve_codecs
+from repro.core.rf_tca import RFTCAState
+from repro.core.rff import rff_features
+from repro.obs import metrics
+from repro.serve.store import ModelStore
+
+
+def client_moment(
+    x,
+    *,
+    n_features: int,
+    fused_seed: int,
+    sigma: float = 1.0,
+    kernel: str = "gauss",
+    role: str = "source",
+) -> np.ndarray:
+    """The joining device's only data-dependent message: sign * mean RFF row.
+
+    Drawn against the shared fused seed, so the client's omega is bit-exactly
+    the fit's draw-0 matrix (``kernels.prng.fused_omega``) — the device
+    materializes its own (N, p) omega locally; the server never does.
+    """
+    if role not in ("source", "target"):
+        raise ValueError(f"role must be 'source' or 'target', got {role!r}")
+    from repro.kernels.prng import fused_omega
+
+    omega = fused_omega(fused_seed, n_features, x.shape[0], sigma=sigma, rf_kernel=kernel)
+    sign = 1.0 if role == "source" else -1.0
+    return sign * np.asarray(jnp.mean(rff_features(jnp.asarray(x), omega), axis=1))
+
+
+def admission_message(moment, *, sender: int, version: int = 0) -> wire.Message:
+    """Frame the moment vector for the uplink (round = the version the client
+    saw advertised; the server echoes its actual latest back)."""
+    return wire.moments_message(
+        np.asarray(moment, np.float32), sender=sender, round=max(version, 0)
+    )
+
+
+@dataclass
+class AdmissionResult:
+    """Outcome of one admission: the client's aligner (decoded off the wire)
+    plus the accounting the bench gates on."""
+
+    delivered: bool
+    state: RFTCAState | None  # the admitted client's aligner (fused spec kept)
+    version: int | None  # store version served (unchanged by the admission)
+    bytes_up: int = 0  # moments frame bytes (retransmits included)
+    bytes_down: int = 0  # aligner response bytes
+
+
+class AdmissionGateway:
+    """Server-side admission endpoint over a model store + wire transport."""
+
+    def __init__(self, store: ModelStore, *, transport: Transport | None = None,
+                 seed: int = 0):
+        if transport is None:
+            transport = WireTransport(resolve_codecs("float32"), seed=seed)
+        if transport.codecs["w_rf"].name == "seed_replay":
+            # seed_replay replays the seed-derived *init*; admission ships the
+            # SOLVED aligner, which is data-dependent and cannot be replayed
+            raise ValueError(
+                "admission responses carry the solved W_RF; the seed_replay "
+                "codec would reconstruct the init instead"
+            )
+        self.store = store
+        self.transport = transport
+        self.admissions = 0
+        self.failures = 0
+
+    def _bytes(self) -> int:
+        return int(self.transport.log.bytes_total)
+
+    def admit(
+        self,
+        domain_pair,
+        moment_msg: wire.Message,
+        *,
+        n_samples: int,
+        role: str = "source",
+        codec: str = "float32",
+    ) -> AdmissionResult:
+        """Admit one client: merge its moments, return the cached aligner.
+
+        Refit-free by construction — the entry's stats update in place and
+        the store version is untouched.  ``delivered=False`` means a wire leg
+        exhausted its retry budget (fault injection); the moment is NOT
+        merged unless its uplink actually decoded.
+        """
+        entry = self.store.get(domain_pair, codec)
+        if entry is None:
+            raise KeyError(f"no fitted aligner for domain pair {domain_pair!r}")
+        if entry.state.fused is None:
+            raise ValueError(
+                "admission requires a seed-fused aligner state "
+                '(rf_tca_fit(w_rf="fused:<seed>")) so the client can re-derive '
+                "omega from the shared seed"
+            )
+        version = self.store.latest_version(domain_pair, codec) or 0
+        b0 = self._bytes()
+        arrays = self.transport.transfer(moment_msg)
+        bytes_up = self._bytes() - b0
+        if arrays is None:
+            self.failures += 1
+            metrics().counter("serve.admission_failures").inc(leg="uplink")
+            return AdmissionResult(False, None, version, bytes_up, 0)
+        entry.stats.merge(arrays["msg"], n_samples, role=role)
+        response = wire.w_rf_message(
+            np.asarray(entry.state.w_rf, np.float32),
+            sender=-1, round=version, downlink=True,
+        )
+        b1 = self._bytes()
+        decoded = self.transport.transfer(response)
+        bytes_down = self._bytes() - b1
+        if decoded is None:
+            self.failures += 1
+            metrics().counter("serve.admission_failures").inc(leg="downlink")
+            return AdmissionResult(False, None, version, bytes_up, bytes_down)
+        client_state = RFTCAState(
+            omega=None,
+            w_rf=jnp.asarray(decoded["w_rf"]),
+            eigvals=entry.state.eigvals,
+            fused=entry.state.fused,
+        )
+        self.admissions += 1
+        metrics().counter("serve.admissions").inc(role=role)
+        return AdmissionResult(True, client_state, version, bytes_up, bytes_down)

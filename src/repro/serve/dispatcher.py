@@ -1,0 +1,185 @@
+"""Batching dispatcher: coalesce concurrent requests into one compiled call.
+
+The serving analogue of the batched round engine's one-dispatch-per-round
+trick: N concurrent transform/predict requests against the same cached
+aligner become ONE jit-compiled dispatch over their concatenated sample
+columns, padded to a *bucketed* batch width so the jit cache sees a small
+closed set of shapes.
+
+- **Buckets.**  ``bucket_for(n)`` rounds the total column count up to the
+  next power-of-two rung of the ladder ``min_bucket .. max_bucket``; a burst
+  larger than ``max_bucket`` is split across several dispatches.  Each rung
+  owns its own compiled plane, wrapped in a jit-retrace sentinel
+  (``serve.<mode>.b<bucket>``) so the compile cache is pinned: a rung traces
+  exactly once, and the bench/smoke gate fails if a shape-unstable argument
+  ever defeats it.
+- **Validity masks.**  Padding reuses the ragged-batch machinery from
+  ``federated.protocol``: ``_cycle_pad`` fills the pad columns by cycling
+  real samples (never zeros) and ``_ragged_mask`` marks the valid columns;
+  the compiled body multiplies its output by the mask, so pad columns leave
+  the dispatch as exact zeros and per-request slices are taken host-side.
+- **Telemetry.**  Batch sizes (requests and valid columns per dispatch) land
+  in the metrics registry and in host-side counters for the bench record.
+  None of it touches array values — telemetry off is bitwise identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.rf_tca import fused_transform_omega
+from repro.core.rff import rff_features
+from repro.federated.protocol import _cycle_pad, _ragged_mask
+from repro.obs import metrics, sentinel
+
+
+@dataclass
+class Request:
+    """One serving request: transform (aligned features) or predict (logits)
+    for a column batch ``x`` (p, n) against a cached domain pair."""
+
+    x: Any  # (p, n) sample columns
+    key: Any = None  # domain pair (routing; the dispatcher is per-entry)
+    mode: str = "transform"  # transform | predict
+    id: int = -1
+    arrival: float = 0.0  # virtual arrival time (load generator bookkeeping)
+
+    def __post_init__(self):
+        if self.mode not in ("transform", "predict"):
+            raise ValueError(f"mode must be 'transform' or 'predict', got {self.mode!r}")
+
+
+def _transform_body(w_rf, omega, x, mask):
+    out = w_rf.T @ rff_features(x, omega)  # (m, bucket)
+    return out * mask[None, :]
+
+
+def _predict_body(w_rf, omega, clf_w, clf_b, x, mask):
+    aligned = w_rf.T @ rff_features(x, omega)  # (m, bucket)
+    logits = clf_w.T @ aligned + clf_b[:, None]  # (C, bucket)
+    return logits * mask[None, :]
+
+
+class BatchingDispatcher:
+    """Coalesces queued requests into bucketed compiled dispatches."""
+
+    def __init__(self, *, min_bucket: int = 8, max_bucket: int = 256):
+        if min_bucket < 1 or max_bucket < min_bucket:
+            raise ValueError(
+                f"need 1 <= min_bucket <= max_bucket, got {min_bucket}, {max_bucket}"
+            )
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        # (mode, bucket) -> jitted plane; each plane has its own sentinel so
+        # the retrace gate is per bucket rung, not per dispatcher
+        self._planes: dict[tuple[str, int], Any] = {}
+        self.pending: list[Request] = []
+        self.dispatches = 0
+        self.batch_requests: dict[int, int] = {}  # requests/dispatch -> count
+        self.batch_columns: dict[int, int] = {}  # bucket width -> count
+
+    def bucket_for(self, n_cols: int) -> int:
+        """Smallest power-of-two rung >= n_cols (clamped to the ladder)."""
+        b = self.min_bucket
+        while b < n_cols and b < self.max_bucket:
+            b *= 2
+        return b
+
+    def _plane(self, mode: str, bucket: int):
+        key = (mode, bucket)
+        plane = self._planes.get(key)
+        if plane is None:
+            body = _transform_body if mode == "transform" else _predict_body
+            plane = jax.jit(sentinel.wrap(f"serve.{mode}.b{bucket}", body))
+            self._planes[key] = plane
+        return plane
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+        metrics().counter("serve.requests").inc(mode=req.mode)
+
+    def _take_batch(self) -> list[Request]:
+        """Pop a head-of-line run of same-mode requests filling <= max_bucket
+        columns (requests larger than max_bucket dispatch alone, truncated
+        to the ladder is a caller error — their columns must fit one rung)."""
+        batch: list[Request] = []
+        cols = 0
+        mode = self.pending[0].mode
+        while self.pending and self.pending[0].mode == mode:
+            n = int(np.shape(self.pending[0].x)[1])
+            if n > self.max_bucket:
+                raise ValueError(
+                    f"request has {n} columns > max_bucket={self.max_bucket}"
+                )
+            if batch and cols + n > self.max_bucket:
+                break
+            batch.append(self.pending.pop(0))
+            cols += n
+        return batch
+
+    def _dispatch(self, entry, batch: list[Request]) -> list[np.ndarray]:
+        """One compiled call over the batch's concatenated columns."""
+        state = entry.state
+        x = np.concatenate([np.asarray(r.x, np.float32) for r in batch], axis=1)
+        n_cols = x.shape[1]
+        bucket = self.bucket_for(n_cols)
+        x_pad, _ = _cycle_pad(x, None, bucket)
+        mask_rows = _ragged_mask([n_cols], bucket)
+        mask = (
+            np.ones((bucket,), np.float32)
+            if mask_rows is None
+            else np.asarray(mask_rows[0])
+        )
+        omega = state.omega
+        if omega is None:
+            omega = fused_transform_omega(state, x.shape[0])
+        mode = batch[0].mode
+        if mode == "predict":
+            if entry.classifier is None:
+                raise ValueError("predict request against an entry with no classifier")
+            out = self._plane(mode, bucket)(
+                state.w_rf, omega, entry.classifier["w"], entry.classifier["b"],
+                x_pad, mask,
+            )
+        else:
+            out = self._plane(mode, bucket)(state.w_rf, omega, x_pad, mask)
+        out = np.asarray(jax.block_until_ready(out))
+        self.dispatches += 1
+        self.batch_requests[len(batch)] = self.batch_requests.get(len(batch), 0) + 1
+        self.batch_columns[bucket] = self.batch_columns.get(bucket, 0) + 1
+        reg = metrics()
+        reg.counter("serve.dispatches").inc(mode=mode, bucket=bucket)
+        reg.histogram("serve.batch_requests").observe(len(batch))
+        reg.histogram("serve.batch_fill").observe(n_cols / bucket)
+        results, off = [], 0
+        for r in batch:
+            n = int(np.shape(r.x)[1])
+            results.append(out[:, off : off + n])
+            off += n
+        return results
+
+    def flush(self, entry) -> list[tuple[Request, np.ndarray]]:
+        """Drain the pending queue against one store entry; returns
+        ``(request, result)`` pairs in submission order.  Each head-of-line
+        same-mode run becomes one compiled dispatch."""
+        done: list[tuple[Request, np.ndarray]] = []
+        while self.pending:
+            batch = self._take_batch()
+            for req, res in zip(batch, self._dispatch(entry, batch)):
+                done.append((req, res))
+        return done
+
+    def histogram(self) -> dict:
+        """JSON-ready batch statistics for the bench record."""
+        return {
+            "dispatches": self.dispatches,
+            "requests_per_dispatch": {
+                str(k): v for k, v in sorted(self.batch_requests.items())
+            },
+            "bucket_widths": {
+                str(k): v for k, v in sorted(self.batch_columns.items())
+            },
+        }

@@ -439,6 +439,35 @@ def test_pick_codec_no_fit_raises_and_missing_record(tmp_path):
         autocodec.load_record(tmp_path / "nope.json")
 
 
+def test_codec_table_schema_stale_raises_value_error():
+    """A BENCH_comm.json written by an older bench (missing or reshaped
+    fields) must surface as a ValueError naming the rerun command, never a
+    bare KeyError from deep inside a trainer constructor."""
+    from repro.comm import autocodec
+
+    stale_records = [
+        {},  # empty file
+        {"accuracy_vs_codec": FAKE_RECORD["accuracy_vs_codec"]},  # no identity
+        {"identity": {"accuracy": 0.8}, "accuracy_vs_codec": {}},  # renamed key
+        # bytes reshaped from per-kind dict to a flat int
+        {"identity": {"acc": 0.8},
+         "accuracy_vs_codec": {"qint4": {"acc": 0.7, "bytes": 140}}},
+        # row lost its acc
+        {"identity": {"acc": 0.8},
+         "accuracy_vs_codec": {"qint4": {"bytes": {"moments": 1}}}},
+    ]
+    for rec in stale_records:
+        with pytest.raises(ValueError, match="benchmarks.run"):
+            autocodec.codec_table(rec)
+    # a schema-valid record that measured nothing is also a hard error
+    with pytest.raises(ValueError, match="no codecs"):
+        autocodec.codec_table({"identity": {"acc": 0.8}, "accuracy_vs_codec": {}})
+    # the happy path still parses
+    table = autocodec.codec_table(FAKE_RECORD)
+    assert table["seed_replay"]["bytes"] == 153
+    assert table["float32"]["gap"] == 0.0
+
+
 def test_protocol_resolves_auto_codec(tiny_setup, tmp_path, monkeypatch):
     """ProtocolConfig(codec='auto:<budget>') trains with the concrete codec
     the measured curves pick."""

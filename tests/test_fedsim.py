@@ -171,6 +171,49 @@ def test_sync_scheduler_drops_offline_clients(small_setup):
         assert np.isfinite(np.asarray(leaf)).all()
 
 
+def test_sync_scheduler_edge_backhaul_leg(small_setup):
+    """With edge_links the barrier waits out an explicit per-edge backhaul
+    leg on top of the slowest member; without them (default None) behavior
+    is bitwise identical to before the leg existed."""
+    from repro.fleet import Topology
+
+    sources, target, cfg = small_setup
+    kw = dict(
+        n_rounds=3, warmup_rounds=1, batch_size=32, seed=0,
+        scenario=_full_trace(3, 3), topology=Topology.of_groups([[0, 1], [2]]),
+    )
+    links = [LinkModel(latency_s=0.5) for _ in range(3)]
+
+    def run(edge_links=None):
+        tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+        sched = SyncScheduler(
+            tr, links=LinkScenario(links=list(links)), edge_links=edge_links,
+            compute_s=1.0,
+        )
+        hist = sched.run(3)
+        return tr, [h["t"] for h in hist]
+
+    tr_plain, t_plain = run()
+    tr_edge, t_edge = run(LinkScenario(links=[LinkModel(latency_s=2.0),
+                                              LinkModel(latency_s=0.25)]))
+    # parameters are clock-independent: the leg only stretches virtual time
+    assert _leaf_err(tr_plain.tgt_params, tr_edge.tgt_params) == 0.0
+    # deterministic latencies: each round now ends at slowest member (1.5s)
+    # plus the slow edge's 2s backhaul, instead of 1.5s flat
+    assert t_plain == [1.5, 3.0, 4.5]
+    assert t_edge == [3.5, 7.0, 10.5]
+
+    tr = FedRFTCATrainer(sources, target, cfg, ProtocolConfig(**kw))
+    with pytest.raises(ValueError, match="edge links"):
+        SyncScheduler(tr, edge_links=LinkScenario(links=[LinkModel()]))
+    tr_flat = FedRFTCATrainer(
+        sources, target, cfg,
+        ProtocolConfig(**{**kw, "topology": None}),
+    )
+    with pytest.raises(ValueError, match="topology"):
+        SyncScheduler(tr_flat, edge_links=LinkScenario(links=list(links)))
+
+
 # ---- async scheduler: degeneracy ------------------------------------------
 
 
