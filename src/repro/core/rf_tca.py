@@ -685,6 +685,95 @@ def _parse_fused_spec(w_rf) -> int | None:
     )
 
 
+def _fit_fused(
+    x_s, x_t, *, n_features: int, m: int, gamma: float, sigma: float,
+    seed: int, kernel: str, use_pallas: bool, solver: str,
+    fused_seed: int, ensemble: int,
+) -> tuple[RFTCAState, dict]:
+    """Seed-fused statistics pass, returning the fitted state *and* the
+    (G_H, u) statistics it solved from — the moment-space refresh input."""
+    x = jnp.concatenate([x_s, x_t], axis=1)
+    ell = ell_vector(x_s.shape[1], x_t.shape[1])
+    g_h, u = fused_streaming_gram(
+        x, ell, n_features=n_features, seed=fused_seed, ensemble=ensemble,
+        sigma=sigma, rf_kernel=kernel, use_pallas=use_pallas,
+    )
+    w, vals = solve_w_rf_gram(g_h, u, gamma, m, solver=solver, seed=seed)
+    state = RFTCAState(
+        omega=None, w_rf=w, eigvals=vals,
+        fused=(fused_seed, ensemble, sigma, kernel),
+    )
+    stats = {
+        "gram": g_h, "u": u, "gamma": float(gamma), "m": int(m),
+        "solver": str(solver), "seed": int(seed),
+    }
+    return state, stats
+
+
+def rf_tca_fit_with_stats(
+    x_s: jnp.ndarray,
+    x_t: jnp.ndarray,
+    *,
+    n_features: int,
+    m: int,
+    gamma: float = 1.0,
+    sigma: float = 1.0,
+    seed: int = 0,
+    kernel: str = "gauss",
+    use_pallas: bool = False,
+    solver: str = "eigh",
+    w_rf: str | None = None,
+    ensemble: int = 1,
+) -> tuple[RFTCAState, dict]:
+    """Seed-fused :func:`rf_tca_fit` that also returns the fit statistics.
+
+    The returned dict carries the merged Gram ``gram`` (G_H), the mean
+    discrepancy ``u`` and the solve hyperparameters — everything
+    :func:`rf_tca_resolve` needs to re-solve W_RF later from *updated*
+    moments (e.g. after target drift) without touching raw data again.
+    The state is bitwise identical to ``rf_tca_fit`` with the same
+    arguments (the fit delegates to the same fused pass).
+    """
+    fused_seed = _parse_fused_spec(w_rf)
+    if fused_seed is None:
+        raise ValueError(
+            'rf_tca_fit_with_stats requires the seed-fused path: '
+            'pass w_rf="fused:<seed>"'
+        )
+    if solver not in ("eigh", "lobpcg"):
+        raise ValueError(f"unknown solver {solver!r}")
+    return _fit_fused(
+        x_s, x_t, n_features=n_features, m=m, gamma=gamma, sigma=sigma,
+        seed=seed, kernel=kernel, use_pallas=use_pallas, solver=solver,
+        fused_seed=fused_seed, ensemble=ensemble,
+    )
+
+
+def rf_tca_resolve(
+    gram: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    gamma: float,
+    m: int,
+    solver: str = "eigh",
+    seed: int = 0,
+    fused_spec: tuple,
+) -> RFTCAState:
+    """Re-solve W_RF from statistics alone (no data pass).
+
+    ``gram``/``u`` are the (possibly updated) (G_H, u) pair and
+    ``fused_spec`` the ``(seed, ensemble, sigma, kernel)`` tuple of the
+    original fit — transforms of the returned state draw the same feature
+    map.  This is the aligner auto-refresh primitive: a drifted target mean
+    changes ``u = mu_S - mu_T`` but not the merged Gram, so a refresh is one
+    O(N^2 m) eigensolve instead of a refit over raw data.
+    """
+    if solver not in ("eigh", "lobpcg"):
+        raise ValueError(f"unknown solver {solver!r}")
+    w, vals = solve_w_rf_gram(gram, u, gamma, m, solver=solver, seed=seed)
+    return RFTCAState(omega=None, w_rf=w, eigvals=vals, fused=tuple(fused_spec))
+
+
 def rf_tca_fit(
     x_s: jnp.ndarray,
     x_t: jnp.ndarray,
@@ -731,17 +820,12 @@ def rf_tca_fit(
     if fused_seed is not None:
         if mode != "stream":
             raise ValueError('w_rf="fused:<seed>" requires mode="stream"')
-        x = jnp.concatenate([x_s, x_t], axis=1)
-        ell = ell_vector(x_s.shape[1], x_t.shape[1])
-        g_h, u = fused_streaming_gram(
-            x, ell, n_features=n_features, seed=fused_seed, ensemble=ensemble,
-            sigma=sigma, rf_kernel=kernel, use_pallas=use_pallas,
+        state, _ = _fit_fused(
+            x_s, x_t, n_features=n_features, m=m, gamma=gamma, sigma=sigma,
+            seed=seed, kernel=kernel, use_pallas=use_pallas, solver=solver,
+            fused_seed=fused_seed, ensemble=ensemble,
         )
-        w, vals = solve_w_rf_gram(g_h, u, gamma, m, solver=solver, seed=seed)
-        return RFTCAState(
-            omega=None, w_rf=w, eigvals=vals,
-            fused=(fused_seed, ensemble, sigma, kernel),
-        )
+        return state
     if mode == "stream" and not use_pallas:
         key = jax.random.PRNGKey(seed)
         blk = min(block, x_s.shape[1] + x_t.shape[1])

@@ -91,17 +91,22 @@ class EvalTick(Event):
 class RequestArrived(Event):
     """Serving plane (``repro.serve``): one inference/transform request of an
     open-loop arrival process lands at the aligner server.  ``request`` keys
-    the load generator's request table (arrays stay host-side, as always)."""
+    the load generator's request table (arrays stay host-side, as always).
+    ``trace_id`` is the request's distributed-tracing id when head-sampled
+    (``-1`` = not traced), so the event stream alone links to span trees."""
 
     request: int
+    trace_id: int = -1
 
 
 @dataclass(frozen=True)
 class RequestCompleted(Event):
     """Serving plane: the batched dispatch holding ``request`` finished at
-    this virtual time — per-request latency is completion minus arrival."""
+    this virtual time — per-request latency is completion minus arrival.
+    ``trace_id`` mirrors the arrival's sampling decision (``-1`` untraced)."""
 
     request: int
+    trace_id: int = -1
 
 
 @dataclass(frozen=True)

@@ -9,8 +9,12 @@ One spine for the stack's observability (see each submodule's docstring):
 - :mod:`repro.obs.sentinel` — jit retrace counters per compiled plane.
 - :mod:`repro.obs.records` — typed history/ledger records with dict views.
 - :mod:`repro.obs.probes` — host-side emission of in-graph health probes.
+- :mod:`repro.obs.reqtrace` — head-sampled per-request serving span trees.
+- :mod:`repro.obs.slo` — declarative SLOs with multi-window burn-rate alerts.
+- :mod:`repro.obs.drift` — RF-MMD domain-drift detection over live moments.
 """
 from repro.obs import sentinel
+from repro.obs.drift import DriftMonitor, DriftRecord
 from repro.obs.probes import emit_probes, quarantine_totals
 from repro.obs.records import (
     CommRecord,
@@ -32,10 +36,13 @@ from repro.obs.registry import (
     set_registry,
     use_registry,
 )
+from repro.obs.reqtrace import RequestTracer
+from repro.obs.slo import Slo, SloEngine, SloViolation, quarantine_slo
 from repro.obs.tracing import (
     PID_VIRTUAL,
     PID_WALL,
     Tracer,
+    count_request_trees,
     get_tracer,
     set_tracer,
     use_tracer,
@@ -54,6 +61,8 @@ __all__ = [
     "CommRecord",
     "Counter",
     "CrashRecord",
+    "DriftMonitor",
+    "DriftRecord",
     "EvalRecord",
     "FlushRecord",
     "Gauge",
@@ -61,13 +70,19 @@ __all__ = [
     "MetricsRegistry",
     "NullRegistry",
     "Record",
+    "RequestTracer",
     "RoundRecord",
+    "Slo",
+    "SloEngine",
+    "SloViolation",
     "Tracer",
     "as_rows",
+    "count_request_trees",
     "emit_probes",
     "get_registry",
     "get_tracer",
     "metrics",
+    "quarantine_slo",
     "quarantine_totals",
     "sentinel",
     "set_registry",

@@ -82,6 +82,12 @@ class Tracer:
         # scope "t": thread-local marker (renders as a tick on the lane)
         self._emit("i", name, ts, pid=pid, tid=tid, args=args, s="t")
 
+    def wall_now(self) -> float:
+        """Seconds since this tracer's birth — the wall-clock timestamp base
+        explicit emitters (request tracing, admission legs) share with
+        :meth:`span`."""
+        return time.perf_counter() - self._wall0
+
     # -- wall-clock spans (context manager; benches / non-sim paths) ---------
 
     @contextlib.contextmanager
@@ -195,8 +201,52 @@ def validate_trace(events: list[dict]) -> list[str]:
     return errors
 
 
-def validate_trace_file(path) -> list[str]:
-    """Validate an exported trace JSON file (shape + event schema)."""
+_REQUEST_ROOT = "serve.request"
+_REQUEST_LEGS = ("serve.queue_wait", "serve.batch_assembly", "serve.padded_dispatch")
+_TREE_TOL_US = 0.5  # containment slack: ts are microseconds rounded to 3 dp
+
+
+def count_request_trees(events: list[dict]) -> int:
+    """Complete per-request span trees in ``events`` (the smoke gate).
+
+    A tree is one ``(pid, tid, args.trace_id)`` lane holding a
+    ``serve.request`` root ``X`` span plus all three serving legs
+    (queue-wait, batch-assembly, padded-dispatch) as ``X`` spans contained
+    in the root's interval — the shape :class:`repro.obs.reqtrace.
+    RequestTracer` emits on the virtual-time track.
+    """
+    groups: dict[tuple, list[dict]] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        trace_id = (ev.get("args") or {}).get("trace_id")
+        if trace_id is None:
+            continue
+        groups.setdefault((ev.get("pid"), ev.get("tid"), trace_id), []).append(ev)
+    trees = 0
+    for evs in groups.values():
+        roots = [e for e in evs if e.get("name") == _REQUEST_ROOT]
+        if not roots:
+            continue
+        lo = roots[0]["ts"] - _TREE_TOL_US
+        hi = roots[0]["ts"] + roots[0].get("dur", 0) + _TREE_TOL_US
+        legs = {
+            e["name"] for e in evs
+            if e.get("name") in _REQUEST_LEGS
+            and e["ts"] >= lo and e["ts"] + e.get("dur", 0) <= hi
+        }
+        if legs.issuperset(_REQUEST_LEGS):
+            trees += 1
+    return trees
+
+
+def validate_trace_file(path, *, require_request_trees: int = 0) -> list[str]:
+    """Validate an exported trace JSON file (shape + event schema).
+
+    ``require_request_trees > 0`` additionally demands that many complete
+    per-request span trees (:func:`count_request_trees`) — the serving
+    observability gate on ``trace_obs.json``.
+    """
     try:
         with open(path) as f:
             doc = json.load(f)
@@ -205,6 +255,13 @@ def validate_trace_file(path) -> list[str]:
     events = doc.get("traceEvents")
     if not isinstance(events, list) or not events:
         return [f"{path}: no traceEvents array"]
-    return [f"{path}: {msg}" for msg in validate_trace(
-        [ev for ev in events if ev.get("ph") != "M"]
-    )]
+    real = [ev for ev in events if ev.get("ph") != "M"]
+    errors = [f"{path}: {msg}" for msg in validate_trace(real)]
+    if require_request_trees > 0:
+        trees = count_request_trees(real)
+        if trees < require_request_trees:
+            errors.append(
+                f"{path}: {trees} complete request span tree(s), "
+                f"need >= {require_request_trees}"
+            )
+    return errors

@@ -7,6 +7,13 @@ concurrent requests into bucketed compiled dispatches, a live-admission path
 that joins new clients over the real wire with an incremental moment merge
 (no refit), and an open-loop Poisson load generator over the fedsim virtual
 clock for the latency/throughput bench (``benchmarks/bench_serve.py``).
+
+Request-level observability attaches via ``AlignerServer.attach``: per-request
+span trees (``obs.RequestTracer``), latency SLOs with burn-rate alerting
+(``obs.SloEngine``), and RF-MMD drift detection over the moments streamed out
+of the probed dispatch planes (``obs.DriftMonitor``) — a confirmed drift alert
+triggers ``refresh_from_moments``, a statistics-space re-solve with exactly
+one version bump.  Everything is off by default and bitwise inert when off.
 """
 from repro.serve.admission import (
     AdmissionGateway,

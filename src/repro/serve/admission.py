@@ -24,6 +24,7 @@ transform.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -33,7 +34,7 @@ from repro.comm import wire
 from repro.comm.transport import Transport, WireTransport, resolve_codecs
 from repro.core.rf_tca import RFTCAState
 from repro.core.rff import rff_features
-from repro.obs import metrics
+from repro.obs import get_tracer, metrics
 from repro.serve.store import ModelStore
 
 
@@ -99,9 +100,15 @@ class AdmissionGateway:
         self.transport = transport
         self.admissions = 0
         self.failures = 0
+        # optional obs.RequestTracer: emits one wall-clock admission span
+        # tree (wire decode -> moment merge -> W_RF ship) per admit
+        self.reqtrace = None
 
     def _bytes(self) -> int:
         return int(self.transport.log.bytes_total)
+
+    def _rejects(self) -> int:
+        return int(self.transport.log.rejects_total)
 
     def admit(
         self,
@@ -129,24 +136,39 @@ class AdmissionGateway:
                 "omega from the shared seed"
             )
         version = self.store.latest_version(domain_pair, codec) or 0
-        b0 = self._bytes()
+        reg = metrics()
+        rt = self.reqtrace
+        tracer = get_tracer() if rt is not None else None
+        wall0 = tracer.wall_now() if tracer is not None else 0.0
+        legs: list[tuple[str, float]] = []  # (leg name, wall duration s)
+        b0, r0 = self._bytes(), self._rejects()
+        t0 = time.perf_counter()
         arrays = self.transport.transfer(moment_msg)
+        legs.append(("serve.wire_decode", time.perf_counter() - t0))
         bytes_up = self._bytes() - b0
+        reg.counter("serve.admission_bytes").inc(bytes_up, leg="up")
         if arrays is None:
             self.failures += 1
-            metrics().counter("serve.admission_failures").inc(leg="uplink")
+            reg.counter("serve.admission_failures").inc(leg="uplink")
+            self._trace(rt, tracer, legs, wall0, b0, r0)
             return AdmissionResult(False, None, version, bytes_up, 0)
+        t0 = time.perf_counter()
         entry.stats.merge(arrays["msg"], n_samples, role=role)
+        legs.append(("serve.moment_merge", time.perf_counter() - t0))
+        t0 = time.perf_counter()
         response = wire.w_rf_message(
             np.asarray(entry.state.w_rf, np.float32),
             sender=-1, round=version, downlink=True,
         )
         b1 = self._bytes()
         decoded = self.transport.transfer(response)
+        legs.append(("serve.w_rf_ship", time.perf_counter() - t0))
         bytes_down = self._bytes() - b1
+        reg.counter("serve.admission_bytes").inc(bytes_down, leg="down")
         if decoded is None:
             self.failures += 1
-            metrics().counter("serve.admission_failures").inc(leg="downlink")
+            reg.counter("serve.admission_failures").inc(leg="downlink")
+            self._trace(rt, tracer, legs, wall0, b0, r0)
             return AdmissionResult(False, None, version, bytes_up, bytes_down)
         client_state = RFTCAState(
             omega=None,
@@ -155,5 +177,14 @@ class AdmissionGateway:
             fused=entry.state.fused,
         )
         self.admissions += 1
-        metrics().counter("serve.admissions").inc(role=role)
+        reg.counter("serve.admissions").inc(role=role)
+        self._trace(rt, tracer, legs, wall0, b0, r0)
         return AdmissionResult(True, client_state, version, bytes_up, bytes_down)
+
+    def _trace(self, rt, tracer, legs, wall0: float, b0: int, r0: int) -> None:
+        """Close out one admission's telemetry: retry counter + span tree."""
+        retries = self._rejects() - r0
+        if retries:
+            metrics().counter("serve.admission_retries").inc(retries)
+        if rt is not None and tracer is not None:
+            rt.emit_admission(legs, wall0=wall0)

@@ -24,10 +24,12 @@ closed set of shapes.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rf_tca import fused_transform_omega
@@ -57,6 +59,17 @@ def _transform_body(w_rf, omega, x, mask):
     return out * mask[None, :]
 
 
+def _transform_probe_body(w_rf, omega, x, mask):
+    """Transform plane with an in-graph moment probe: alongside the served
+    output, emit the batch's mean RFF row over *valid* columns — the drift
+    monitor's live statistic, computed where the features already live (the
+    PR-7 probe pattern: auxiliary outputs, primary output unchanged)."""
+    feats = rff_features(x, omega)  # (2N, bucket)
+    out = w_rf.T @ feats  # (m, bucket)
+    moment = (feats * mask[None, :]).sum(axis=1) / jnp.maximum(mask.sum(), 1.0)
+    return out * mask[None, :], moment
+
+
 def _predict_body(w_rf, omega, clf_w, clf_b, x, mask):
     aligned = w_rf.T @ rff_features(x, omega)  # (m, bucket)
     logits = clf_w.T @ aligned + clf_b[:, None]  # (C, bucket)
@@ -66,13 +79,17 @@ def _predict_body(w_rf, omega, clf_w, clf_b, x, mask):
 class BatchingDispatcher:
     """Coalesces queued requests into bucketed compiled dispatches."""
 
-    def __init__(self, *, min_bucket: int = 8, max_bucket: int = 256):
+    def __init__(
+        self, *, min_bucket: int = 8, max_bucket: int = 256,
+        sentinel_prefix: str = "serve",
+    ):
         if min_bucket < 1 or max_bucket < min_bucket:
             raise ValueError(
                 f"need 1 <= min_bucket <= max_bucket, got {min_bucket}, {max_bucket}"
             )
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
+        self.sentinel_prefix = str(sentinel_prefix)
         # (mode, bucket) -> jitted plane; each plane has its own sentinel so
         # the retrace gate is per bucket rung, not per dispatcher
         self._planes: dict[tuple[str, int], Any] = {}
@@ -80,6 +97,10 @@ class BatchingDispatcher:
         self.dispatches = 0
         self.batch_requests: dict[int, int] = {}  # requests/dispatch -> count
         self.batch_columns: dict[int, int] = {}  # bucket width -> count
+        # drift wiring: when set, transform dispatches run the probed plane
+        # and hand (domain_pair, batch moment, n_valid_cols) to this callable
+        self.moment_hook = None
+        self._leg_log: list[tuple[float, float]] = []  # (assemble_s, dispatch_s)
 
     def bucket_for(self, n_cols: int) -> int:
         """Smallest power-of-two rung >= n_cols (clamped to the ladder)."""
@@ -88,18 +109,26 @@ class BatchingDispatcher:
             b *= 2
         return b
 
-    def _plane(self, mode: str, bucket: int):
-        key = (mode, bucket)
+    def _plane(self, mode: str, bucket: int, *, probe: bool = False):
+        key = (mode, bucket, probe)
         plane = self._planes.get(key)
         if plane is None:
-            body = _transform_body if mode == "transform" else _predict_body
-            plane = jax.jit(sentinel.wrap(f"serve.{mode}.b{bucket}", body))
+            if probe:
+                body, suffix = _transform_probe_body, ".probe"
+            else:
+                body = _transform_body if mode == "transform" else _predict_body
+                suffix = ""
+            plane = jax.jit(sentinel.wrap(
+                f"{self.sentinel_prefix}.{mode}.b{bucket}{suffix}", body
+            ))
             self._planes[key] = plane
         return plane
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
-        metrics().counter("serve.requests").inc(mode=req.mode)
+        reg = metrics()
+        reg.counter("serve.requests").inc(mode=req.mode)
+        reg.gauge("serve.queue_depth").set(len(self.pending))
 
     def _take_batch(self) -> list[Request]:
         """Pop a head-of-line run of same-mode requests filling <= max_bucket
@@ -122,6 +151,7 @@ class BatchingDispatcher:
 
     def _dispatch(self, entry, batch: list[Request]) -> list[np.ndarray]:
         """One compiled call over the batch's concatenated columns."""
+        t0 = time.perf_counter()
         state = entry.state
         x = np.concatenate([np.asarray(r.x, np.float32) for r in batch], axis=1)
         n_cols = x.shape[1]
@@ -137,6 +167,9 @@ class BatchingDispatcher:
         if omega is None:
             omega = fused_transform_omega(state, x.shape[0])
         mode = batch[0].mode
+        probe = self.moment_hook is not None and mode == "transform"
+        t1 = time.perf_counter()
+        moment = None
         if mode == "predict":
             if entry.classifier is None:
                 raise ValueError("predict request against an entry with no classifier")
@@ -144,9 +177,15 @@ class BatchingDispatcher:
                 state.w_rf, omega, entry.classifier["w"], entry.classifier["b"],
                 x_pad, mask,
             )
+        elif probe:
+            out, moment = self._plane(mode, bucket, probe=True)(
+                state.w_rf, omega, x_pad, mask
+            )
         else:
             out = self._plane(mode, bucket)(state.w_rf, omega, x_pad, mask)
         out = np.asarray(jax.block_until_ready(out))
+        t2 = time.perf_counter()
+        self._leg_log.append((t1 - t0, t2 - t1))
         self.dispatches += 1
         self.batch_requests[len(batch)] = self.batch_requests.get(len(batch), 0) + 1
         self.batch_columns[bucket] = self.batch_columns.get(bucket, 0) + 1
@@ -154,12 +193,21 @@ class BatchingDispatcher:
         reg.counter("serve.dispatches").inc(mode=mode, bucket=bucket)
         reg.histogram("serve.batch_requests").observe(len(batch))
         reg.histogram("serve.batch_fill").observe(n_cols / bucket)
+        reg.histogram("serve.dispatch_s").observe(t2 - t1, bucket=bucket)
+        if moment is not None:
+            self.moment_hook(batch[0].key, np.asarray(moment), n_cols)
         results, off = [], 0
         for r in batch:
             n = int(np.shape(r.x)[1])
             results.append(out[:, off : off + n])
             off += n
         return results
+
+    def take_legs(self) -> list[tuple[float, float]]:
+        """Drain the wall-clock ``(assemble_s, dispatch_s)`` pairs logged
+        since the last call — the request tracer's processing-leg split."""
+        legs, self._leg_log = self._leg_log, []
+        return legs
 
     def flush(self, entry) -> list[tuple[Request, np.ndarray]]:
         """Drain the pending queue against one store entry; returns

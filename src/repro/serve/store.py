@@ -93,6 +93,7 @@ class StoreEntry:
     classifier: Any = None  # optional {"w", "b"} head for predict requests
     stats: MomentStats = field(default_factory=MomentStats)
     fit_kw: dict = field(default_factory=dict)  # enough to refit on refresh
+    gram: Any = None  # fit-time merged G_H — enables moment-space re-solve
 
 
 class ModelStore:

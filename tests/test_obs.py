@@ -15,12 +15,19 @@ from repro.fedsim import AsyncConfig, AsyncScheduler, SyncScheduler, markov_trac
 from repro.obs import (
     NULL,
     CrashRecord,
+    DriftMonitor,
     EvalRecord,
     FlushRecord,
     MetricsRegistry,
+    RequestTracer,
     RoundRecord,
+    Slo,
+    SloEngine,
     Tracer,
+    count_request_trees,
+    emit_probes,
     get_registry,
+    quarantine_slo,
     quarantine_totals,
     sentinel,
     use_registry,
@@ -28,6 +35,7 @@ from repro.obs import (
     validate_trace,
     validate_trace_file,
 )
+from repro.robust import get_rule
 
 
 @pytest.fixture(scope="module")
@@ -350,3 +358,231 @@ def test_commlog_snapshot_record(small_setup):
     rec = tr.transport.log.snapshot()
     assert rec["bytes_total"] == tr.transport.log.bytes_total > 0
     assert rec["bytes_by_kind"]["moments"] > 0
+
+
+# ---- SLO engine: multi-window burn-rate alerting ----------------------------
+
+
+def test_slo_multi_window_requires_both_and_rearms():
+    eng = SloEngine([Slo("lat", target=0.9, bound=1.0,
+                         window_fast_s=1.0, window_slow_s=10.0)])
+    # a calm prefix fills the slow window with good samples
+    for i in range(20):
+        assert eng.observe("lat", i * 0.5, 0.1) is None
+    # one bad sample: fast burn spikes but the slow window absorbs it
+    assert eng.observe("lat", 10.0, 5.0) is None
+    # sustained badness tips the slow window too -> exactly one violation
+    v1 = eng.observe("lat", 10.2, 5.0)
+    v2 = eng.observe("lat", 10.4, 5.0)
+    fired = [v for v in (v1, v2) if v is not None]
+    assert len(fired) == 1
+    v = fired[0]
+    assert v.objective == "lat" and v.burn_fast >= 1.0 and v.burn_slow >= 1.0
+    assert v.window_fast_s == 1.0 and v.window_slow_s == 10.0
+    # edge-triggered: staying inside the episode emits nothing new
+    assert eng.observe("lat", 10.6, 5.0) is None
+    assert len(eng.history) == 1
+    # recovery clears the fast window -> re-armed -> a fresh burst re-fires
+    for i in range(30):
+        assert eng.observe("lat", 11.0 + i * 0.5, 0.1) is None
+    for i in range(6):
+        eng.observe("lat", 26.0 + i * 0.1, 5.0)
+    assert len(eng.history) == 2
+    assert [v.to_dict()["objective"] for v in eng.history] == ["lat", "lat"]
+
+
+def test_slo_validation_and_min_samples():
+    with pytest.raises(ValueError, match="target"):
+        Slo("a", target=1.0, bound=1.0)
+    with pytest.raises(ValueError, match="window"):
+        Slo("a", target=0.9, bound=1.0, window_fast_s=5.0, window_slow_s=5.0)
+    with pytest.raises(ValueError, match="burn_threshold"):
+        Slo("a", target=0.9, bound=1.0, burn_threshold=0.0)
+    eng = SloEngine([Slo("lat", target=0.5, bound=1.0, window_fast_s=1.0,
+                         window_slow_s=4.0, min_samples=3)])
+    with pytest.raises(ValueError, match="already registered"):
+        eng.add(Slo("lat", target=0.5, bound=1.0))
+    with pytest.raises(KeyError, match="unknown objective"):
+        eng.observe("nope", 0.0, 1.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        eng.observe("lat", 0.0, 1.0, ok=True)
+    # min_samples: two all-bad samples cannot fire, the third can
+    assert eng.observe("lat", 0.0, 9.0) is None
+    assert eng.observe("lat", 0.1, 9.0) is None
+    assert eng.observe("lat", 0.2, 9.0) is not None
+
+
+def test_slo_window_counters_match_rescan():
+    """The O(1) running bad-counters agree with a brute-force window scan."""
+    eng = SloEngine([Slo("lat", target=0.9, bound=1.0, window_fast_s=0.7,
+                         window_slow_s=3.0, burn_threshold=1e9)])
+    stream = eng._streams["lat"]
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for _ in range(200):
+        t += float(rng.exponential(0.1))
+        eng.observe("lat", t, float(rng.choice([0.1, 5.0])))
+        assert stream.bad_fast == sum(b for _, b in stream.fast)
+        assert stream.bad_slow == sum(b for _, b in stream.samples)
+        assert len(stream.fast) <= len(stream.samples)
+
+
+def test_slo_quarantine_ledger_end_to_end():
+    """PR-7 trim ledger -> probes -> quarantine_totals -> SLO violation
+    naming the poisoned member."""
+    slo = quarantine_slo(max_rate=0.5, window_fast_s=0.03, window_slow_s=0.12)
+    assert slo.kind == "availability" and slo.bound == 0.5
+    eng = SloEngine([slo, Slo("up", target=0.9, kind="availability",
+                              window_fast_s=1.0, window_slow_s=4.0)])
+    # a boundless availability objective only accepts ok= samples
+    with pytest.raises(ValueError, match="availability-style"):
+        eng.observe("up", 0.0, 1.0)
+    assert eng.observe("up", 0.0, ok=True) is None
+    assert eng.observe("up", 0.1, ok=False) is not None
+    reg = MetricsRegistry()
+    # no ledger mass yet: a clean sample, no violation
+    assert eng.feed_quarantine(0.0, objective=slo.name, rounds=1, registry=reg) is None
+    rule = get_rule("finite_mean")
+    vals = np.ones((5, 4), np.float32)
+    vals[2, 1] = np.nan  # member 2 delivers a poisoned update
+    att = rule.attribution(jnp.asarray(vals), jnp.ones(5, jnp.float32))
+    emit_probes({"attribution_moments": att}, plane="round", registry=reg)
+    assert quarantine_totals(reg) == {2: 1.0}
+    v = eng.feed_quarantine(0.01, objective=slo.name, rounds=1, registry=reg)
+    assert v is not None and v.detail == "member=2" and v.kind == "availability"
+    with pytest.raises(ValueError, match="rounds"):
+        eng.feed_quarantine(0.02, objective=slo.name, rounds=0, registry=reg)
+
+
+# ---- drift monitor: RF-MMD over streamed moments ----------------------------
+
+
+def _moments(rng, n, center, noise=0.01, dim=6):
+    return [center + noise * rng.standard_normal(dim).astype(np.float32)
+            for _ in range(n)]
+
+
+def test_drift_calibration_then_fire_timeline():
+    fired = []
+    mon = DriftMonitor(alpha=0.3, window=2, k_consecutive=2,
+                       calibration_windows=3, threshold_scale=4.0,
+                       burnin_windows=1, on_alert=lambda p, r: fired.append((p, r)))
+    rng = np.random.default_rng(1)
+    ref = np.zeros(6, np.float32)
+    # observations before a reference is pinned are ignored
+    assert mon.observe("p", 0.0, ref, 4) is None
+    mon.set_reference("p", ref)
+    t = 0.0
+    for m in _moments(rng, 16, ref):
+        t += 0.1
+        mon.observe("p", t, m, 4)
+    assert mon.fires == 0 and mon.pair_threshold("p") is not None
+    for m in _moments(rng, 6, ref + 2.0):
+        t += 0.1
+        rec = mon.observe("p", t, m, 4)
+    assert mon.fires == 1 and len(fired) == 1 and fired[0][0] == "p"
+    # the timeline alone reconstructs the story: burn-in + calibration
+    # windows flagged, exactly one fire, consecutive resets after it
+    tl = mon.timeline()
+    assert sum(r["calibrating"] for r in tl) == 1 + 3  # burnin + calibration
+    assert [r["fired"] for r in tl].count(True) == 1
+    assert tl[-[r["fired"] for r in reversed(tl)].index(True) - 1]["consecutive"] == 0
+
+
+def test_drift_threshold_ratio_floor_and_validation():
+    # a zero-variance calm stream: the std term collapses, the ratio floor rules
+    mon = DriftMonitor(window=1, calibration_windows=2, threshold_scale=4.0,
+                       threshold_ratio=2.5, burnin_windows=0)
+    ref = np.zeros(4, np.float32)
+    mon.set_reference("p", ref)
+    calm = ref + 0.1  # constant offset -> identical mmd every window
+    for t in range(3):
+        mon.observe("p", float(t), calm, 2)
+    lvl = float(np.dot(calm - ref, calm - ref))
+    assert mon.pair_threshold("p") == pytest.approx(2.5 * lvl, rel=1e-5)
+    for bad_kw in (dict(alpha=0.0), dict(window=0), dict(k_consecutive=0),
+                   dict(threshold_ratio=0.5), dict(burnin_windows=-1),
+                   dict(threshold=None, calibration_windows=0)):
+        with pytest.raises(ValueError):
+            DriftMonitor(**bad_kw)
+
+
+def test_drift_reference_reset_and_recent_mean():
+    mon = DriftMonitor(alpha=1.0, window=1, k_consecutive=1, threshold=0.5)
+    mon.set_reference("p", np.zeros(3, np.float32))
+    with pytest.raises(ValueError, match="no live moments"):
+        mon.recent_mean("p")
+    mon.observe("p", 0.0, np.array([1.0, 0, 0], np.float32), 10)
+    mon.observe("p", 0.1, np.array([4.0, 0, 0], np.float32), 30)
+    pooled, n = mon.recent_mean("p")
+    assert n == 40 and pooled[0] == pytest.approx(0.25 * 1.0 + 0.75 * 4.0)
+    assert mon.fires == 1  # alpha=1, k=1: the first shifted window fires
+    # re-pinning the reference clears the live state entirely
+    mon.set_reference("p", np.array([4.0, 0, 0], np.float32))
+    with pytest.raises(ValueError, match="no live moments"):
+        mon.recent_mean("p")
+    rec = mon.observe("p", 0.2, np.array([4.0, 0, 0], np.float32), 5)
+    assert rec is not None and not rec.fired and rec.mmd == 0.0
+
+
+# ---- per-request span trees -------------------------------------------------
+
+
+def test_request_tracer_sampling_deterministic():
+    rt = RequestTracer(rate=0.3, seed=7)
+    picks = [rt.sampled(i) for i in range(400)]
+    assert picks == [RequestTracer(rate=0.3, seed=7).sampled(i) for i in range(400)]
+    frac = sum(picks) / len(picks)
+    assert 0.15 < frac < 0.45  # head sampling lands near the configured rate
+    assert picks != [RequestTracer(rate=0.3, seed=8).sampled(i) for i in range(400)]
+    assert all(RequestTracer(rate=1.0).sampled(i) for i in range(10))
+    assert not any(RequestTracer(rate=0.0).sampled(i) for i in range(10))
+    with pytest.raises(ValueError, match="rate"):
+        RequestTracer(rate=1.5)
+
+
+def test_request_tracer_tree_shapes():
+    tracer = Tracer()
+    rt = RequestTracer(rate=1.0, tracer=tracer)
+    # a complete tree: root + all three legs contained in it
+    assert rt.begin(0, 1.0)
+    rt.leg(0, "serve.queue_wait", 1.0, 0.2)
+    rt.leg(0, "serve.batch_assembly", 1.2, 0.1)
+    rt.leg(0, "serve.padded_dispatch", 1.3, 0.4)
+    rt.finish(0, 1.8)
+    assert count_request_trees(tracer.events) == 1
+    # an incomplete tree (missing a leg) does not count
+    assert rt.begin(1, 2.0)
+    rt.leg(1, "serve.queue_wait", 2.0, 0.1)
+    rt.finish(1, 2.2)
+    assert count_request_trees(tracer.events) == 1
+    assert rt.emitted == 2 and rt.sampled_total == 2
+    # finish without begin is a no-op; no ambient tracer -> begin declines
+    rt.finish(99, 3.0)
+    assert not RequestTracer(rate=1.0).begin(0, 0.0)
+    # every emitted event carries its trace id
+    assert all(ev["args"]["trace_id"] in (0, 1) for ev in tracer.events)
+    # admission trees ride the wall track in their own (negative) namespace
+    rt.emit_admission([("serve.wire_decode", 0.01), ("serve.moment_merge", 0.02),
+                       ("serve.w_rf_ship", 0.03)], wall0=0.5)
+    adm = [ev for ev in tracer.events if ev["args"]["trace_id"] < 0]
+    assert {ev["name"] for ev in adm} == {
+        "serve.admission", "serve.wire_decode", "serve.moment_merge",
+        "serve.w_rf_ship"}
+    assert count_request_trees(tracer.events) == 1  # admissions never miscount
+    assert validate_trace(tracer.events) == []
+
+
+def test_trace_file_request_tree_gate(tmp_path):
+    tracer = Tracer()
+    rt = RequestTracer(rate=1.0, tracer=tracer)
+    rt.begin(3, 0.0)
+    rt.leg(3, "serve.queue_wait", 0.0, 0.1)
+    rt.leg(3, "serve.batch_assembly", 0.1, 0.1)
+    rt.leg(3, "serve.padded_dispatch", 0.2, 0.1)
+    rt.finish(3, 0.3)
+    path = tmp_path / "trace.json"
+    tracer.write(path)
+    assert validate_trace_file(path, require_request_trees=1) == []
+    errors = validate_trace_file(path, require_request_trees=2)
+    assert errors and "request span tree" in errors[0]

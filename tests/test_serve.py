@@ -24,7 +24,18 @@ from repro.core.rf_tca import (
     rf_tca_fit,
     rf_tca_transform,
 )
-from repro.obs import MetricsRegistry, Tracer, sentinel, use_registry, use_tracer
+from repro.obs import (
+    DriftMonitor,
+    MetricsRegistry,
+    RequestTracer,
+    Slo,
+    SloEngine,
+    Tracer,
+    count_request_trees,
+    sentinel,
+    use_registry,
+    use_tracer,
+)
 from repro.serve import (
     AdmissionGateway,
     AlignerServer,
@@ -178,7 +189,8 @@ def test_admission_refit_free_and_matches_refit():
     # refit-free: no cached version changed, no refit ran
     assert srv.store.latest_version(("s", "t")) == v_before
     assert srv.refits == 0
-    assert entry.stats.admitted == 1 and entry.stats.n_source == 40
+    # stats are seeded with the fit moments (90 source cols) + the admission
+    assert entry.stats.admitted == 1 and entry.stats.n_source == 90 + 40
     # the wire really carried both legs (CRC-framed bytes, no rejects)
     assert res.bytes_up > 0 and res.bytes_down > res.bytes_up
     # the admitted client's aligner agrees with a from-scratch fit <= 1e-3
@@ -307,3 +319,119 @@ def test_serve_telemetry_off_on_bitwise_identical():
         instrumented = run()
     for a, b in zip(plain, instrumented):
         np.testing.assert_array_equal(a, b)
+
+
+# ---- request-level observability --------------------------------------------
+
+
+def test_serve_observability_off_compiles_no_probe_planes():
+    """Zero-overhead-off: without an attached drift monitor the dispatcher
+    never touches the probed plane variants, and attaching a request tracer
+    + SLO engine with no ambient tracer/registry leaves both the compiled
+    planes and the served arrays bitwise untouched."""
+    def outputs(srv):
+        xs, xt = _domain(40)
+        srv.fit_domain(("s", "t"), xs, xt, **FIT_KW)
+        reqs = synth_requests([("s", "t")], dim=DIM, n_requests=10, seed=9,
+                              cols_lo=2, cols_hi=8)
+        return [out for _, out in srv.serve(reqs)]
+
+    before = sentinel.counts()
+    plain = outputs(_server(sentinel_prefix="off1"))
+    srv2 = _server(sentinel_prefix="off2")
+    srv2.attach(request_tracer=RequestTracer(rate=1.0), slo=SloEngine(
+        [Slo("serve.latency", target=0.9, bound=1.0, window_fast_s=1.0,
+             window_slow_s=4.0)]))
+    wired = outputs(srv2)
+    after = sentinel.counts()
+    for a, b in zip(plain, wired):
+        np.testing.assert_array_equal(a, b)
+    probe_planes = [k for k, v in after.items()
+                    if ".probe" in k and v > before.get(k, 0)]
+    assert probe_planes == []  # telemetry off: plain planes only
+    assert srv2.reqtrace.sampled_total == 0  # no ambient tracer -> declined
+
+
+def test_serve_drift_probe_planes_trace_once_and_stay_bitwise():
+    srv = _server(sentinel_prefix="dr1")
+    xs, xt = _domain(41)
+    srv.fit_domain(("s", "t"), xs, xt, **FIT_KW)
+    srv.attach(drift=DriftMonitor(window=1, threshold=1e9))
+    reqs = synth_requests([("s", "t")], dim=DIM, n_requests=10, seed=10,
+                          cols_lo=2, cols_hi=8)
+    before = sentinel.counts()
+    srv.warmup(("s", "t"))
+    done = srv.serve(reqs)
+    planes = tuple(f"dr1.transform.b{b}.probe" for b in (4, 8, 16, 32))
+    sentinel.assert_stable(before, planes, expect=1)
+    # the probed planes' primary outputs are bitwise the direct transform
+    entry = srv.store.get(("s", "t"))
+    for req, out in done:
+        ref = np.asarray(rf_tca_transform(entry.state, jnp.asarray(req.x)))
+        np.testing.assert_array_equal(out, ref)
+    assert srv.drift.pairs() == [("s", "t")]
+
+
+def test_serve_auto_refresh_on_drift_alert():
+    rng = np.random.default_rng(42)
+    clf = {"w": rng.standard_normal((4, 3)).astype(np.float32)}
+    srv = _server(sentinel_prefix="dr2")
+    xs, xt = _domain(43)
+    srv.fit_domain(("s", "t"), xs, xt, classifier=clf, **FIT_KW)
+    srv.attach(drift=DriftMonitor(alpha=1.0, window=1, k_consecutive=1,
+                                  threshold=0.02))
+    srv.admit(("s", "t"), xs[:, :9], role="source")
+    assert srv.store.get(("s", "t")).stats.admitted == 1
+    v0 = srv.store.latest_version(("s", "t"))
+    # a shifted request: the first probed window crosses the threshold,
+    # fires, and triggers exactly one moment-space refresh + version bump
+    x_shift = (rng.standard_normal((DIM, 20)) + 3.0).astype(np.float32)
+    for _ in range(4):  # the same post-drift distribution, re-served
+        srv.virtual_now += 0.01
+        srv.serve([Request(x=x_shift, key=("s", "t"))])
+    assert srv.drift.fires == 1 and srv.moment_refreshes == 1
+    assert srv.store.latest_version(("s", "t")) == v0 + 1
+    entry = srv.store.get(("s", "t"))
+    assert entry.classifier is clf  # carried across the refresh
+    assert entry.stats.admitted == 0  # staleness counter reset
+    # the reference re-pinned to the live moment: detection re-armed, so the
+    # continued (now in-distribution) stream never re-fires
+    rec = srv.drift.history[-1]
+    assert not rec.fired and rec.mmd < srv.drift.pair_threshold(("s", "t"))
+
+
+def test_loadgen_service_scale_validation_and_field():
+    srv = _server()
+    xs, xt = _domain(44)
+    srv.fit_domain(("s", "t"), xs, xt, **FIT_KW)
+    srv.warmup(("s", "t"))
+    reqs = synth_requests([("s", "t")], dim=DIM, n_requests=10, seed=12,
+                          cols_lo=2, cols_hi=6)
+    res = run_open_loop(srv, reqs, rate=200.0, seed=13, service_scale=2.5)
+    assert res.summary()["service_scale"] == 2.5
+    assert res.summary()["completed"] == 10
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="service_scale"):
+            run_open_loop(srv, reqs, rate=200.0, seed=13, service_scale=bad)
+
+
+def test_loadgen_emits_request_trees_under_live_tracer():
+    srv = _server()
+    xs, xt = _domain(45)
+    srv.fit_domain(("s", "t"), xs, xt, **FIT_KW)
+    srv.attach(request_tracer=RequestTracer(rate=1.0))
+    srv.warmup(("s", "t"))
+    reqs = synth_requests([("s", "t")], dim=DIM, n_requests=7, seed=14,
+                          cols_lo=2, cols_hi=8)
+    tracer = Tracer()
+    with use_tracer(tracer):
+        run_open_loop(srv, reqs, rate=300.0, seed=15)
+    assert count_request_trees(tracer.events) == 7
+    assert srv.reqtrace.emitted == 7
+    # rate 0 disables tracing entirely: no spans, no samples
+    srv.attach(request_tracer=RequestTracer(rate=0.0))
+    t2 = Tracer()
+    with use_tracer(t2):
+        run_open_loop(srv, reqs, rate=300.0, seed=16)
+    assert count_request_trees(t2.events) == 0
+    assert srv.reqtrace.sampled_total == 0
